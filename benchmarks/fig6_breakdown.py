@@ -1,0 +1,34 @@
+"""Paper Fig. 6 analog: I/O vs compute fraction of the analysis run.
+
+The paper measures 36.3% I/O and <11% compute for their 420-thread run;
+our engine records per-phase io_read/io_write/compute seconds, giving the
+same breakdown for the container-scale workload.
+"""
+from __future__ import annotations
+
+import tempfile
+
+from benchmarks.workloads import generate_timing_workload
+from repro.core.aggregate import AggregationConfig, StreamingAggregator
+
+
+def run(out=print):
+    with tempfile.TemporaryDirectory() as td:
+        paths, _, _ = generate_timing_workload(td + "/in", n_profiles=48)
+        res = StreamingAggregator(td + "/out",
+                                  AggregationConfig(n_threads=4)).run(paths)
+        t = res.timings
+        total = t.get("total", 1.0)
+        thread_time = 4 * total  # 4 workers: fractions are of thread-time
+        io = t.get("io_read", 0) + t.get("io_write", 0)
+        comp = t.get("compute", 0)
+        out(f"fig6.breakdown,{total*1e6:.0f},"
+            f"io_frac={io/thread_time:.3f};compute_frac={comp/thread_time:.3f}"
+            f";idle_frac={max(0, 1-(io+comp)/thread_time):.3f}"
+            f";cms_frac={t.get('cms', 0)/total:.3f}"
+            f";paper_io_frac=0.363;paper_compute_frac=0.11")
+    return t
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""Kernel micro-benchmarks: Pallas (interpret) vs jnp oracle us/call.
+
+On this CPU container, interpret-mode timings are NOT TPU performance —
+they validate plumbing and give the oracle baseline; BlockSpecs target
+TPU v5e.  Reported for completeness of the harness contract.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(f, *args, reps=5):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
+        jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(f(*args))
+    return (time.perf_counter() - t0) / reps
+
+
+def run(out=print):
+    rng = np.random.default_rng(0)
+    n, s = 1 << 14, 2048
+    ids = jnp.asarray(np.sort(rng.integers(0, s, n)).astype(np.int32))
+    vals = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    t = _time(lambda a, b: ops.segstats(a, b, s), ids, vals)
+    t_ref = _time(lambda a, b: ref.segstats_ref(a, b, s), ids, vals)
+    out(f"kernels.segstats,{t*1e6:.0f},ref_us={t_ref*1e6:.0f};n={n};s={s}")
+
+    x = jnp.asarray(rng.normal(size=(1 << 14, 4)).astype(np.float32))
+    t = _time(ops.blockscan, x)
+    t_ref = _time(ref.blockscan_ref, x)
+    out(f"kernels.blockscan,{t*1e6:.0f},ref_us={t_ref*1e6:.0f};n={x.shape[0]}")
+
+    uids = jnp.asarray(rng.integers(0, s, n).astype(np.int32))
+    v2 = jnp.asarray(rng.normal(size=(n, 4)).astype(np.float32))
+    t = _time(lambda a, b: ops.scatter_add(a, b, s), uids, v2)
+    t_ref = _time(lambda a, b: ref.scatter_add_ref(a, b, s), uids, v2)
+    out(f"kernels.scatter_add,{t*1e6:.0f},ref_us={t_ref*1e6:.0f};n={n};s={s}")
+
+    g = jnp.asarray(rng.normal(size=1 << 15).astype(np.float32))
+    t = _time(lambda a: ops.int8_quant(a)[0], g)
+    t_ref = _time(lambda a: ref.int8_quant_ref(a, 2048)[0], g)
+    out(f"kernels.int8_quant,{t*1e6:.0f},ref_us={t_ref*1e6:.0f};n={g.shape[0]}")
+
+
+if __name__ == "__main__":
+    run()

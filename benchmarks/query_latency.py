@@ -1,0 +1,71 @@
+"""Interactive-browser access patterns (paper §3 motivation).
+
+The PMS/CMS pair exists so a browser answers both query shapes with ONE
+file open and O(log) searches:
+
+* profile-major: "all metrics of profile p"        -> one PMS plane read
+* context-major: "metric m of context c, all profiles" -> one CMS stripe
+
+We measure both against the strawman (answering the context-major query
+from the profile-major store by scanning every plane — what a PMS-only
+tool would do), reproducing the paper's rationale for storing the same
+tensor twice.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.workloads import generate_timing_workload
+from repro.core.aggregate import AggregationConfig, StreamingAggregator
+from repro.core.cms import CMSReader
+from repro.core.pms import PMSReader
+
+
+def run(out=print):
+    with tempfile.TemporaryDirectory() as td:
+        paths, _, _ = generate_timing_workload(td + "/in", n_profiles=64,
+                                               n_private=100)
+        res = StreamingAggregator(td + "/db",
+                                  AggregationConfig(n_threads=4)).run(paths)
+        rng = np.random.default_rng(0)
+        with PMSReader(res.pms_path) as pr, CMSReader(res.cms_path) as cr:
+            # pick (ctx, metric) pairs that actually exist
+            stats = pr.stats
+            order = rng.permutation(len(stats["ctx"]))[:200]
+            pairs = [(int(stats["ctx"][i]), int(stats["mid"][i]))
+                     for i in order]
+
+            t0 = time.perf_counter()
+            n_hits = 0
+            for c, m in pairs:
+                prof, vals = cr.stripe(c, m)
+                n_hits += len(prof)
+            t_cms = (time.perf_counter() - t0) / len(pairs)
+
+            t0 = time.perf_counter()
+            n_hits2 = 0
+            for c, m in pairs[:20]:  # strawman is slow; sample
+                for pid in range(pr.n_profiles):
+                    v = pr.plane(pid).lookup(c, m)
+                    n_hits2 += v != 0.0
+            t_scan = (time.perf_counter() - t0) / 20
+
+            # profile-major query: full profile read
+            t0 = time.perf_counter()
+            for pid in range(pr.n_profiles):
+                pr.plane(pid)
+            t_pms = (time.perf_counter() - t0) / pr.n_profiles
+
+        assert n_hits > 0
+        out(f"query.cms_stripe,{t_cms*1e6:.1f},hits={n_hits}")
+        out(f"query.pms_scan_strawman,{t_scan*1e6:.1f},"
+            f"speedup={t_scan/t_cms:.0f}x")
+        out(f"query.pms_plane,{t_pms*1e6:.1f},per_profile")
+    return {"cms": t_cms, "scan": t_scan}
+
+
+if __name__ == "__main__":
+    run()

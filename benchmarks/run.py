@@ -1,0 +1,46 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines.  Usage::
+
+    PYTHONPATH=src python -m benchmarks.run [--only table4]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (fig6_breakdown, kernels_bench, query_latency,
+                            table1_measurement, table2_analysis,
+                            table4_agg_time, table5_glb)
+    suites = {
+        "table1": table1_measurement.run,
+        "table2": table2_analysis.run,
+        "table4": table4_agg_time.run,
+        "table5": table5_glb.run,
+        "fig6": fig6_breakdown.run,
+        "query": query_latency.run,
+        "kernels": kernels_bench.run,
+    }
+    print("name,us_per_call,derived")
+    for name, fn in suites.items():
+        if args.only and args.only != name:
+            continue
+        t0 = time.perf_counter()
+        try:
+            fn(out=print)
+        except Exception as e:  # keep the harness running
+            print(f"{name}.ERROR,0,{type(e).__name__}:{e}", file=sys.stdout)
+            raise
+        print(f"{name}.total,{(time.perf_counter()-t0)*1e6:.0f},",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

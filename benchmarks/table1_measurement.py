@@ -1,0 +1,58 @@
+"""Paper Table 1: sparse measurement format — size, densities, dense ratio.
+
+For each paper row we synthesize a workload with the same (context
+density, metric density, CPU/GPU metric mix) and compare the actual
+on-disk bytes of the sparse measurement format against the equivalent
+dense representation (n_ctx x n_metrics f64 per profile — the prior
+HPCToolkit layout).  Paper reference ratios: 0.74x / 2.11x / 15.23x /
+22.44x.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.workloads import TABLE1_WORKLOADS, generate
+from repro.core.dense_baseline import dense_measurement_nbytes
+from repro.core.sparse import MeasurementProfile
+
+PAPER_RATIOS = {"AMG2013(1)": 0.74, "AMG2013(7)": 2.11,
+                "PeleC(1+82)": 15.23, "Nyx(1+62)": 22.44}
+
+
+def run(out=print):
+    rows = []
+    with tempfile.TemporaryDirectory() as td:
+        for w in TABLE1_WORKLOADS:
+            t0 = time.perf_counter()
+            paths, n_ctx, n_metrics = generate(w, td)
+            # whole-file comparison, as in the paper: both layouts carry
+            # the same CCT/trace sections; only the metric block differs
+            sparse_bytes = 0
+            dense_bytes = 0
+            ctx_d, met_d = [], []
+            for p in paths:
+                prof = MeasurementProfile.load(p)
+                fsize = os.path.getsize(p)
+                sparse_bytes += fsize
+                dense_bytes += (fsize - prof.metrics.nbytes()
+                                + dense_measurement_nbytes(len(prof.tree),
+                                                           n_metrics))
+                ctx_d.append(prof.metrics.n_contexts / len(prof.tree))
+                met_d.append(prof.metrics.n_values
+                             / max(prof.metrics.n_contexts * n_metrics, 1))
+            dt = time.perf_counter() - t0
+            ratio = dense_bytes / sparse_bytes
+            rows.append((w.name, sparse_bytes, np.mean(ctx_d), np.mean(met_d),
+                         ratio, PAPER_RATIOS[w.name], dt))
+            out(f"table1.{w.name},{dt*1e6:.0f},size_MiB={sparse_bytes/2**20:.2f}"
+                f";ctx_density={np.mean(ctx_d):.3f};met_density={np.mean(met_d):.3f}"
+                f";dense_ratio={ratio:.2f};paper_ratio={PAPER_RATIOS[w.name]}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""Paper Table 2: PMS analysis-results format — size, densities, dense ratio.
+
+Runs the full streaming aggregation on the Table-1-shaped workloads and
+measures the PMS database against the dense (P x C x M_out) f64 tensor the
+HPCToolkit-style baseline stores.  Analysis adds inclusive metrics
+(metric count ~doubles) and unifies contexts across profiles, which is
+where the extreme sparsity (paper: up to 6002.9x) comes from.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.workloads import TABLE2_WORKLOADS, generate
+from repro.core.aggregate import AggregationConfig, StreamingAggregator
+from repro.core.pms import PMSReader
+
+PAPER_RATIOS = {"AMG2013(1)": 184.2, "AMG2013(7)": 6002.9,
+                "PeleC(1+82)": 1515.0, "Nyx(1+62)": 3701.1}
+
+
+def run(out=print):
+    rows = []
+    with tempfile.TemporaryDirectory() as td:
+        for w in TABLE2_WORKLOADS:
+            paths, n_ctx, n_metrics = generate(w, td + "/in_" + w.name)
+            t0 = time.perf_counter()
+            res = StreamingAggregator(
+                td + "/out_" + w.name,
+                AggregationConfig(n_threads=4, write_cms=False)).run(paths)
+            dt = time.perf_counter() - t0
+            with PMSReader(res.pms_path) as r:
+                C = res.n_contexts
+                M_out = 2 * n_metrics  # exclusive + inclusive
+                P = res.n_profiles
+                dense_bytes = P * C * M_out * 8
+                pms_bytes = r.nbytes()
+                vals = sum(int(r.index[p, 3]) for p in range(P))
+                ctx_nonempty = sum(int(r.index[p, 2]) for p in range(P))
+                ctx_density = ctx_nonempty / (P * C)
+                met_density = vals / max(ctx_nonempty * M_out, 1)
+            ratio = dense_bytes / pms_bytes
+            rows.append((w.name, pms_bytes, ctx_density, met_density, ratio,
+                         PAPER_RATIOS[w.name], dt))
+            out(f"table2.{w.name},{dt*1e6:.0f},pms_MiB={pms_bytes/2**20:.2f}"
+                f";ctx_density={ctx_density:.4f};met_density={met_density:.4f}"
+                f";dense_ratio={ratio:.1f};paper_ratio={PAPER_RATIOS[w.name]}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,65 @@
+"""Post-mortem analysis example: the paper's workflow on a synthetic
+exascale-shaped measurement set — streaming aggregation vs the dense
+baseline, single-rank threads vs the MPI-analog multiprocess driver.
+
+    PYTHONPATH=src python examples/analyze_postmortem.py
+"""
+import os
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.workloads import generate_timing_workload
+from repro.core.aggregate import AggregationConfig, StreamingAggregator
+from repro.core.cms import CMSReader
+from repro.core.dense_baseline import DenseAnalysis
+from repro.core.reduction import aggregate_multiprocess
+
+
+def main():
+    with tempfile.TemporaryDirectory() as td:
+        paths, n_ctx, n_metrics = generate_timing_workload(
+            td + "/in", n_profiles=64)
+        meas = sum(os.path.getsize(p) for p in paths)
+        print(f"{len(paths)} profiles, {meas/2**20:.1f} MiB measurements")
+
+        t0 = time.perf_counter()
+        DenseAnalysis(td + "/dense.npy").run(paths)
+        t_dense = time.perf_counter() - t0
+        dense_bytes = os.path.getsize(td + "/dense.npy")
+
+        t0 = time.perf_counter()
+        res = StreamingAggregator(td + "/db",
+                                  AggregationConfig(n_threads=4)).run(paths)
+        t_stream = time.perf_counter() - t0
+        sparse_bytes = res.sizes["pms"] + res.sizes["cms"]
+
+        t0 = time.perf_counter()
+        aggregate_multiprocess(paths, td + "/db_mp", n_ranks=2,
+                               threads_per_rank=2)
+        t_mp = time.perf_counter() - t0
+
+        print(f"dense (HPCToolkit-style, 1t): {t_dense:.2f}s, "
+              f"{dense_bytes/2**20:.1f} MiB results")
+        print(f"streaming aggregation (4t):   {t_stream:.2f}s, "
+              f"{sparse_bytes/2**20:.1f} MiB results "
+              f"-> {t_dense/t_stream:.1f}x faster, "
+              f"{dense_bytes/sparse_bytes:.0f}x smaller")
+        print(f"2 ranks x 2 threads (MPI analog): {t_mp:.2f}s")
+
+        # interactive-browser access pattern: one stripe read serves
+        # "metric m for context c across ALL profiles" (paper §3.2)
+        with CMSReader(res.cms_path) as c:
+            for ctx in range(0, res.n_contexts, max(res.n_contexts // 3, 1)):
+                prof_ids, vals = c.stripe(ctx, 2)
+                if len(prof_ids):
+                    print(f"ctx {ctx}: metric 2 on {len(prof_ids)} profiles, "
+                          f"mean {vals.mean():.3f}")
+    print("analyze_postmortem OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Quickstart: train a reduced model, profile it, analyze the profiles.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs.base import get_arch, reduced
+from repro.core.aggregate import StreamingAggregator
+from repro.core.pms import PMSReader
+from repro.data import TokenPipeline
+from repro.models.api import build_model
+from repro.profiling import Profiler
+from repro.train.loop import Trainer, TrainerConfig
+from repro.train.optimizer import AdamWConfig
+
+
+def main():
+    cfg = reduced(get_arch("qwen3-0.6b"))
+    model = build_model(cfg)
+    pipe = TokenPipeline(cfg.vocab_size, seq_len=64, global_batch=8)
+    prof = Profiler({"rank": 0, "stream": 0, "kind": "host"})
+    tr = Trainer(model, AdamWConfig(lr=1e-3, warmup_steps=5),
+                 TrainerConfig(steps=20), pipe, profiler=prof)
+    params, opt = tr.init_state()
+    params, opt = tr.run(params, opt, steps=20)
+    print(f"loss: {tr.history[0]['loss']:.3f} -> {tr.history[-1]['loss']:.3f}")
+
+    with tempfile.TemporaryDirectory() as td:
+        ppath = os.path.join(td, "w0.rprf")
+        prof.finish(ppath)
+        res = StreamingAggregator(os.path.join(td, "db")).run([ppath])
+        with PMSReader(res.pms_path) as r:
+            reg = {m["name"]: m["mid"] for m in r.meta["registry"]}
+            plane = r.plane(0)
+            from repro.core.metrics import INCLUSIVE_BIT
+            total = plane.lookup(0, reg["host.step_time"] | INCLUSIVE_BIT)
+            print(f"analysis DB: {res.n_contexts} contexts, "
+                  f"{res.n_values} values, PMS {res.sizes['pms']} B")
+            print(f"total step time from inclusive rollup: {total:.3f}s")
+    assert tr.history[-1]["loss"] < tr.history[0]["loss"]
+    print("quickstart OK")
+
+
+if __name__ == "__main__":
+    main()

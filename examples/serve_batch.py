@@ -1,0 +1,41 @@
+"""Batched serving example: coalesced requests through the ServeEngine.
+
+    PYTHONPATH=src python examples/serve_batch.py
+"""
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax.numpy as jnp
+
+from repro.configs.base import get_arch, reduced
+from repro.models import params as PD
+from repro.models.api import build_model
+from repro.serve.engine import Request, ServeEngine
+
+
+def main():
+    cfg = reduced(get_arch("yi-6b"))
+    model = build_model(cfg)
+    params = PD.init_params(model.param_defs(), 0, jnp.float32)
+    eng = ServeEngine(model, params, max_len=48, max_batch=4)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rng.integers(0, cfg.vocab_size, 16).astype(np.int32), 8)
+            for _ in range(10)]
+    t0 = time.perf_counter()
+    outs = eng.serve(reqs)
+    dt = time.perf_counter() - t0
+    toks = sum(len(o) for o in outs)
+    print(f"{len(reqs)} requests -> {toks} tokens in {dt:.2f}s")
+    # determinism: same prompt -> same continuation
+    a = eng.serve([reqs[0]])[0]
+    np.testing.assert_array_equal(a, outs[0])
+    print("serve_batch OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,379 @@
+"""Trip-count-aware HLO cost model.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body **once**,
+which under-reports any scan-over-layers program by ~L times (verified
+empirically — see tests).  This module re-derives execution costs from the
+compiled HLO text with loop awareness:
+
+* **flops** — dots contribute ``2 * result_elems * K`` (K = product of the
+  lhs contracting dims); elementwise ops contribute ``result_elems``;
+  fused computations are recursed.
+* **bytes** — post-fusion HBM traffic model: every *top-level* instruction
+  (including fusion ops as single units) moves ``operands + result``
+  bytes; intra-fusion values never touch HBM.
+* **collective wire bytes** — operand sizes of all-reduce / all-gather /
+  reduce-scatter / all-to-all / collective-permute.
+* **while** — body + condition costs scale by the trip count parsed from
+  the loop condition (``compare(iter, constant), direction=LT``);
+  ``conditional`` takes the max across branches.
+
+All shapes in post-SPMD compiled HLO are per-partition, so totals are
+per-chip — exactly what the roofline terms need.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s([\w\-]+)\((.*?)\)(.*)$")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HEAD_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\([^)]*\)\s*->\s*.*\{\s*$")
+_ATTR_COMP_RE = {
+    "calls": re.compile(r"calls=%?([\w.\-]+)"),
+    "body": re.compile(r"body=%?([\w.\-]+)"),
+    "condition": re.compile(r"condition=%?([\w.\-]+)"),
+    "to_apply": re.compile(r"to_apply=%?([\w.\-]+)"),
+    "branches": re.compile(r"branch_computations=\{([^}]*)\}"),
+}
+_LHS_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_DIRECTION_RE = re.compile(r"direction=(\w+)")
+
+_SKIP_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "after-all", "iota"}
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _elems_and_bytes(text: str) -> tuple[int, int]:
+    elems = 0
+    nbytes = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dt]
+    return elems, nbytes
+
+
+def _first_shape_dims(text: str) -> list[int]:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class Instr:
+    name: str
+    result: str
+    opcode: str
+    args: str
+    rest: str
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: dict = field(default_factory=dict)
+
+    def __iadd__(self, other: "Cost"):
+        self.flops += other.flops
+        self.bytes += other.bytes
+        self.coll_bytes += other.coll_bytes
+        for k, v in other.coll_by_kind.items():
+            self.coll_by_kind[k] = self.coll_by_kind.get(k, 0.0) + v
+        return self
+
+    def scaled(self, k: float) -> "Cost":
+        return Cost(self.flops * k, self.bytes * k, self.coll_bytes * k,
+                    {n: v * k for n, v in self.coll_by_kind.items()})
+
+
+_NAME_RE = re.compile(r"%([\w.\-]+)")
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.computations: dict[str, list[Instr]] = {}
+        self.entry: str | None = None
+        self.shape_of: dict[str, str] = {}   # instr name -> result shape text
+        self._parse(hlo_text)
+        self._cache: dict[tuple[str, bool], Cost] = {}
+
+    # -- operand resolution (post-scheduling HLO has no inline operand shapes)
+    def _operand_shapes(self, args: str) -> str:
+        parts = [self.shape_of.get(n, "") for n in _NAME_RE.findall(args)]
+        inline = args if _SHAPE_RE.search(args) else ""
+        return inline if inline else " ".join(parts)
+
+    def _operand_dims(self, args: str, idx: int = 0) -> list[int]:
+        names = _NAME_RE.findall(args)
+        if idx < len(names) and names[idx] in self.shape_of:
+            return _first_shape_dims(self.shape_of[names[idx]])
+        return _first_shape_dims(args)
+
+    # -- parsing ---------------------------------------------------------------
+    def _parse(self, text: str):
+        cur: str | None = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            # computation headers start at column 0 and end with '{'
+            # (instruction lines are indented; arg lists may nest parens)
+            if line and not line[0].isspace() and line.endswith("{") \
+                    and "->" in line:
+                m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)", line)
+                if m:
+                    cur = m.group(1)
+                    if line.startswith("ENTRY"):
+                        self.entry = cur
+                    self.computations[cur] = []
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            if cur is None:
+                continue
+            m = _INSTR_RE.match(line)
+            if m:
+                ins = Instr(*m.groups())
+                self.computations[cur].append(ins)
+                self.shape_of[ins.name] = ins.result
+        if self.entry is None:
+            # fall back: ENTRY marker may appear as 'ENTRY %main.1 (...'
+            for name in self.computations:
+                if name.startswith("main"):
+                    self.entry = name
+                    break
+
+    # -- trip counts -------------------------------------------------------------
+    def trip_count(self, cond_comp: str) -> int:
+        """Parse `compare(iter, constant(N)), direction=LT` loop bounds."""
+        instrs = self.computations.get(cond_comp, [])
+        consts: dict[str, int] = {}
+        for ins in instrs:
+            # constants look like: %c = s32[] constant(28)
+            if ins.opcode == "constant":
+                m = re.match(r"\s*(\d+)\s*$", ins.args)
+                if m:
+                    consts[ins.name] = int(m.group(1))
+        for ins in instrs:
+            if ins.opcode == "compare":
+                d = _DIRECTION_RE.search(ins.rest)
+                direction = d.group(1) if d else "LT"
+                # find an integer constant among the operand names
+                for nm, val in consts.items():
+                    if nm in ins.args:
+                        return val + 1 if direction == "LE" else val
+                # inline constant operand: compare(%x, s32[] constant(8))
+                m = _CONST_RE.search(ins.args)
+                if m:
+                    v = int(m.group(1))
+                    return v + 1 if direction == "LE" else v
+        # the compare may be wrapped in a fusion (kLoop wrapped_compare):
+        # the bound constant still lives in this computation — use the max
+        # s32 constant as the trip count (standard 0..N-1 counter loops).
+        if consts:
+            le = False
+            for ins in instrs:
+                if ins.opcode == "fusion":
+                    comp = _ATTR_COMP_RE["calls"].search(ins.rest)
+                    if comp:
+                        for inner in self.computations.get(comp.group(1), []):
+                            if inner.opcode == "compare":
+                                d = _DIRECTION_RE.search(inner.rest)
+                                le = bool(d and d.group(1) == "LE")
+            v = max(consts.values())
+            return v + 1 if le else v
+        return 1
+
+    # -- instruction costs ----------------------------------------------------------
+    def _dot_flops(self, ins: Instr) -> float:
+        res_elems, _ = _elems_and_bytes(ins.result)
+        lhs_dims = self._operand_dims(ins.args, 0)
+        cm = _LHS_CDIMS_RE.search(ins.rest) or _LHS_CDIMS_RE.search(ins.args)
+        k = 1
+        if cm and lhs_dims:
+            for idx in cm.group(1).split(","):
+                if idx and int(idx) < len(lhs_dims):
+                    k *= lhs_dims[int(idx)]
+        elif lhs_dims:
+            k = lhs_dims[-1]  # default: last lhs dim contracts
+        return 2.0 * res_elems * k
+
+    def _instr_cost(self, ins: Instr, *, in_fusion: bool) -> Cost:
+        if ins.opcode in _SKIP_OPS:
+            return Cost()
+        c = Cost()
+        res_elems, res_bytes = _elems_and_bytes(ins.result)
+        # flops
+        if ins.opcode == "dot":
+            c.flops = self._dot_flops(ins)
+        elif ins.opcode == "convolution":
+            c.flops = 2.0 * res_elems * max(
+                1, int(np_prod(_first_shape_dims(ins.args))
+                       / max(res_elems, 1)))
+        elif ins.opcode == "fusion":
+            comp = _ATTR_COMP_RE["calls"].search(ins.rest)
+            if comp:
+                inner = self.comp_cost(comp.group(1), in_fusion=True)
+                c.flops += inner.flops
+                c.coll_bytes += inner.coll_bytes
+                for k, v in inner.coll_by_kind.items():
+                    c.coll_by_kind[k] = c.coll_by_kind.get(k, 0.0) + v
+        elif ins.opcode == "while":
+            body = _ATTR_COMP_RE["body"].search(ins.rest)
+            cond = _ATTR_COMP_RE["condition"].search(ins.rest)
+            trips = self.trip_count(cond.group(1)) if cond else 1
+            if body:
+                c += self.comp_cost(body.group(1), in_fusion=False).scaled(trips)
+            return c  # while's own tuple shuffling ~ free
+        elif ins.opcode == "conditional":
+            m = _ATTR_COMP_RE["branches"].search(ins.rest)
+            if m:
+                branches = [b.strip().lstrip("%") for b in m.group(1).split(",")]
+                costs = [self.comp_cost(b, in_fusion=False) for b in branches]
+                if costs:
+                    c += max(costs, key=lambda x: x.flops)
+        elif ins.opcode in ("call", "custom-call", "map", "reduce",
+                            "reduce-window", "sort", "scatter", "select-and-scatter"):
+            comp = _ATTR_COMP_RE["to_apply"].search(ins.rest)
+            c.flops += float(res_elems)
+            if ins.opcode == "sort":
+                c.flops += float(res_elems) * 10  # ~log n passes
+            if comp and ins.opcode == "call":
+                c += self.comp_cost(comp.group(1), in_fusion=False)
+        else:
+            c.flops += float(res_elems)  # elementwise & friends
+        # collectives
+        base = next((k for k in _COLLECTIVES if ins.opcode.startswith(k)), None)
+        if base is not None:
+            _, op_bytes = _elems_and_bytes(self._operand_shapes(ins.args))
+            if op_bytes == 0:
+                op_bytes = res_bytes
+            c.coll_bytes += op_bytes
+            c.coll_by_kind[base] = c.coll_by_kind.get(base, 0.0) + op_bytes
+            c.bytes += op_bytes  # collectives also touch HBM
+            return c
+        # HBM bytes: only top-level units move memory
+        if not in_fusion:
+            if ins.opcode == "fusion":
+                comp = _ATTR_COMP_RE["calls"].search(ins.rest)
+                c.bytes += self._fusion_bytes(
+                    ins, comp.group(1) if comp else None, res_bytes)
+            else:
+                _, op_bytes = _elems_and_bytes(self._operand_shapes(ins.args))
+                c.bytes += op_bytes + res_bytes
+        return c
+
+    def _fusion_bytes(self, ins: Instr, comp: str | None, res_bytes: int) -> float:
+        """HBM bytes for a fusion: slice-aware operand accounting.
+
+        A fused ``dynamic-slice`` reads only its slice and a fused (root)
+        ``dynamic-update-slice`` writes only the update region (the rest
+        aliases in place) — charging full operand/result arrays inflates
+        scan-over-sequence programs by the trip count (measured 20x+ on
+        recurrent cells).
+        """
+        inner = self.computations.get(comp or "", [])
+        passthrough = {"bitcast", "reshape", "copy", "transpose"}
+        param_of: dict[str, int] = {}
+        for i_ins in inner:
+            if i_ins.opcode == "parameter":
+                m = re.match(r"\s*(\d+)", i_ins.args)
+                if m:
+                    param_of[i_ins.name] = int(m.group(1))
+        # def-use inside the fused computation
+        users: dict[str, list[Instr]] = {}
+        by_name = {i.name: i for i in inner}
+        for i_ins in inner:
+            for nm in _NAME_RE.findall(i_ins.args):
+                users.setdefault(nm, []).append(i_ins)
+
+        def charge(name: str, full: int, depth=0) -> int:
+            """Effective read bytes of a value, following pass-throughs."""
+            if depth > 6:
+                return full
+            out = 0
+            for u in users.get(name, []):
+                if u.opcode in passthrough:
+                    out = max(out, charge(u.name, full, depth + 1))
+                elif u.opcode == "dynamic-slice":
+                    _, sl = _elems_and_bytes(u.result)
+                    out = max(out, sl)
+                elif u.opcode == "dynamic-update-slice":
+                    args = _NAME_RE.findall(u.args)
+                    if args and args[0] == name:
+                        out = max(out, 0)      # aliased buffer: no read
+                    else:
+                        out = max(out, full)   # the update is read fully
+                else:
+                    return full
+            return out
+
+        charged: dict[int, int] = {}
+        for pname, pidx in param_of.items():
+            _, full = _elems_and_bytes(self.shape_of.get(pname, ""))
+            charged[pidx] = charge(pname, full) if users.get(pname) else 0
+
+        # write side: if the fusion root is a dynamic-update-slice the
+        # buffer aliases in place and only the update region is written
+        root_write = None
+        for i_ins in inner:
+            if i_ins.opcode == "dynamic-update-slice":
+                args = _NAME_RE.findall(i_ins.args)
+                upd = 0
+                if len(args) > 1:
+                    src = args[1]
+                    shp = (self.shape_of.get(src, "") if src not in param_of
+                           else self.shape_of.get(src, ""))
+                    _, upd = _elems_and_bytes(shp or by_name.get(
+                        src, Instr("", "", "", "", "")).result)
+                root_write = max(root_write or 0, upd)
+
+        total = 0
+        arg_names = _NAME_RE.findall(ins.args)
+        for pidx, nm in enumerate(arg_names):
+            _, full = _elems_and_bytes(self.shape_of.get(nm, ""))
+            total += charged.get(pidx, full)
+        total += res_bytes if root_write is None else root_write
+        return float(total)
+
+    # -- computation costs -------------------------------------------------------
+    def comp_cost(self, name: str, *, in_fusion: bool) -> Cost:
+        key = (name, in_fusion)
+        if key in self._cache:
+            return self._cache[key]
+        total = Cost()
+        self._cache[key] = total  # break cycles defensively
+        for ins in self.computations.get(name, []):
+            total += self._instr_cost(ins, in_fusion=in_fusion)
+        return total
+
+    def entry_cost(self) -> Cost:
+        assert self.entry is not None, "no ENTRY computation found"
+        return self.comp_cost(self.entry, in_fusion=False)
+
+
+def np_prod(xs) -> int:
+    out = 1
+    for x in xs:
+        out *= int(x)
+    return out
+
+
+def analyze_text(hlo_text: str) -> Cost:
+    return HloCostModel(hlo_text).entry_cost()

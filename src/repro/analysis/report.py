@@ -1,0 +1,103 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from dry-run JSONs.
+
+    PYTHONPATH=src python -m repro.analysis.report runs/dryrun
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def load(dirpath: str) -> list[dict]:
+    out = []
+    for p in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        with open(p) as f:
+            out.append(json.load(f))
+    return out
+
+
+def fmt_bytes(b) -> str:
+    return f"{b/2**30:.2f}"
+
+
+def roofline_table(cells: list[dict], mesh: str) -> str:
+    rows = [
+        "| arch | shape | comp s | mem s | coll s | dominant | MODEL_TF | "
+        "useful | MFU bound | mem GiB | fits |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        if c.get("skipped") or c["mesh"] != mesh:
+            continue
+        r = c["roofline"]
+        rows.append(
+            f"| {c['arch']} | {c['shape']} "
+            f"| {r['compute_s']:.4g} | {r['memory_s']:.4g} "
+            f"| {r['collective_s']:.4g} | **{r['dominant']}** "
+            f"| {r['model_flops']/1e12:.1f} "
+            f"| {r['useful_fraction']:.3f} | {r['mfu_bound']:.4f} "
+            f"| {fmt_bytes(c['memory']['peak_per_device_bytes'])} "
+            f"| {'Y' if c['memory']['fits_16GiB'] else 'N'} |")
+    return "\n".join(rows)
+
+
+def skip_table(cells: list[dict]) -> str:
+    rows = ["| arch | shape | reason |", "|---|---|---|"]
+    seen = set()
+    for c in cells:
+        if c.get("skipped") and (c["arch"], c["shape"]) not in seen:
+            seen.add((c["arch"], c["shape"]))
+            rows.append(f"| {c['arch']} | {c['shape']} | {c['skipped']} |")
+    return "\n".join(rows)
+
+
+def dryrun_table(cells: list[dict]) -> str:
+    rows = [
+        "| arch | shape | mesh | HLO TF/chip | HBM GB/chip | coll GB/chip "
+        "| collective mix | compile s |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        if c.get("skipped"):
+            continue
+        r = c["roofline"]
+        mix = ", ".join(f"{k.replace('collective-','c-')}:{v/1e9:.1f}"
+                        for k, v in sorted(c["collectives"].items(),
+                                           key=lambda kv: -kv[1])[:3])
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} "
+            f"| {r['flops_per_chip']/1e12:.2f} "
+            f"| {r['hbm_bytes_per_chip']/1e9:.1f} "
+            f"| {r['collective_bytes_per_chip']/1e9:.2f} | {mix} "
+            f"| {c['timings']['compile_s']:.0f} |")
+    return "\n".join(rows)
+
+
+def summary(cells: list[dict]) -> dict:
+    live = [c for c in cells if not c.get("skipped")]
+    doms = {}
+    for c in live:
+        doms[c["roofline"]["dominant"]] = doms.get(c["roofline"]["dominant"], 0) + 1
+    fits = sum(c["memory"]["fits_16GiB"] for c in live)
+    return {"cells": len(live), "skipped": len(cells) - len(live),
+            "dominant": doms, "fits": fits}
+
+
+def main():
+    d = sys.argv[1] if len(sys.argv) > 1 else "runs/dryrun"
+    cells = load(d)
+    print("## Summary\n", json.dumps(summary(cells)))
+    print("\n## Roofline (single-pod 16x16, 256 chips)\n")
+    print(roofline_table(cells, "16x16"))
+    print("\n## Roofline (multi-pod 2x16x16, 512 chips)\n")
+    print(roofline_table(cells, "2x16x16"))
+    print("\n## Skips\n")
+    print(skip_table(cells))
+    print("\n## Dry-run detail\n")
+    print(dryrun_table(cells))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,155 @@
+"""Roofline-term extraction from compiled artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh):
+
+    compute term    = HLO_FLOPs / peak_FLOPs_per_chip           [s]
+    memory term     = HLO_bytes / HBM_bw_per_chip               [s]
+    collective term = collective_wire_bytes / link_bw_per_chip  [s]
+
+``compiled.cost_analysis()`` reports PER-PARTITION flops/bytes under SPMD
+(verified empirically), so the terms divide by per-chip peaks directly.
+Collective bytes are not in cost_analysis: we parse the compiled HLO and
+sum *operand* sizes of every collective op (operand shapes are inline in
+post-optimization HLO; where they are not, we derive them from the result
+shape and the op's semantics).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s
+per ICI link.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+PEAK_FLOPS = 197e12       # bf16 per chip
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW = 50e9             # bytes/s per link
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s([\w\-]+)\((.*?)\)(.*)$")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([\d,\s]*)\}")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: dict = field(default_factory=dict)
+
+    @property
+    def total(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Sum operand bytes of every collective instruction."""
+    out: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, result_shape, opcode, args, rest = m.groups()
+        base = next((c for c in _COLLECTIVES if opcode.startswith(c)), None)
+        if base is None:
+            continue
+        op_bytes = _shape_bytes(args)  # operand shapes are inline post-opt
+        if op_bytes == 0:
+            # derive from result + semantics
+            res = _shape_bytes(result_shape)
+            gm = _GROUPS_RE.search(rest)
+            gsize = len(gm.group(1).split(",")) if gm and gm.group(1).strip() else 1
+            if base == "all-gather":
+                op_bytes = res // max(gsize, 1)
+            elif base == "reduce-scatter":
+                op_bytes = res * max(gsize, 1)
+            else:
+                op_bytes = res
+        out[base] = out.get(base, 0) + op_bytes
+    return CollectiveStats(out)
+
+
+@dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    coll_bytes: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float = 0.0
+    n_chips: int = 1
+    coll_by_kind: dict = field(default_factory=dict)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_fraction(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs x chips): compiled-compute usefulness."""
+        total = self.flops * self.n_chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Roofline-implied MFU upper bound: model flops / (chips x peak x bound time)."""
+        denom = self.n_chips * PEAK_FLOPS * self.bound_s
+        return self.model_flops / denom if denom else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_chip": self.flops, "hbm_bytes_per_chip": self.hbm_bytes,
+            "collective_bytes_per_chip": self.coll_bytes,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "model_flops": self.model_flops, "n_chips": self.n_chips,
+            "useful_fraction": self.useful_fraction,
+            "mfu_bound": self.mfu_bound,
+        }
+
+
+def analyze(compiled, *, n_chips: int, model_flops: float = 0.0) -> Roofline:
+    """Roofline terms from the trip-count-aware HLO cost model.
+
+    NOTE: ``compiled.cost_analysis()`` counts while-loop bodies once
+    (under-reports scan-over-layers by ~L x), so terms come from
+    :mod:`repro.analysis.hlo_cost` instead; ``cost_analysis`` is kept in
+    the report for reference.
+    """
+    from repro.analysis import hlo_cost
+    cost = hlo_cost.analyze_text(compiled.as_text())
+    flops = cost.flops                            # per partition
+    hbm = cost.bytes
+    coll = cost.coll_bytes
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm / HBM_BW
+    collective_s = coll / ICI_BW
+    dominant = max(
+        (("compute", compute_s), ("memory", memory_s),
+         ("collective", collective_s)), key=lambda kv: kv[1])[0]
+    rf = Roofline(flops, hbm, coll, compute_s, memory_s, collective_s,
+                  dominant, model_flops, n_chips)
+    rf.coll_by_kind = dict(cost.coll_by_kind)
+    return rf

@@ -1,0 +1,5 @@
+from repro.configs.base import (ARCH_REGISTRY, ModelConfig, ShapeConfig,
+                                SHAPES, get_arch, reduced, register_arch)
+
+__all__ = ["ARCH_REGISTRY", "ModelConfig", "ShapeConfig", "SHAPES",
+           "get_arch", "reduced", "register_arch"]

@@ -1,0 +1,8 @@
+"""codeqwen1.5-7b: qwen1.5-arch dense (MHA kv=32) [hf:Qwen/CodeQwen1.5-7B]."""
+from repro.configs.base import ModelConfig, register_arch
+
+CONFIG = register_arch(ModelConfig(
+    name="codeqwen1.5-7b", family="dense",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=32,
+    d_ff=13440, vocab_size=92416, rope_theta=1e6,
+))

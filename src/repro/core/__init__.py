@@ -1,0 +1,22 @@
+"""The paper's primary contribution: sparse formats + streaming aggregation.
+
+Public surface:
+
+* :mod:`repro.core.sparse`   — sparse measurement format (paper Fig. 1)
+* :mod:`repro.core.cct`      — calling-context trees + preorder linearization
+* :mod:`repro.core.pms`      — Profile-Major Sparse analysis DB
+* :mod:`repro.core.cms`      — Context-Major Sparse analysis DB
+* :mod:`repro.core.propagate`— exclusive->inclusive metric propagation
+* :mod:`repro.core.stats`    — cross-profile summary statistics
+* :mod:`repro.core.aggregate`— the streaming aggregation engine (paper §4)
+* :mod:`repro.core.reduction`— process-level reduction trees (paper §4.4)
+* :mod:`repro.core.dense_baseline` — the HPCToolkit-style dense baseline
+"""
+from repro.core.cct import ContextTree
+from repro.core.metrics import INCLUSIVE_BIT, MetricRegistry, default_registry
+from repro.core.sparse import MeasurementProfile, SparseMetrics, Trace
+
+__all__ = [
+    "ContextTree", "MetricRegistry", "default_registry", "INCLUSIVE_BIT",
+    "MeasurementProfile", "SparseMetrics", "Trace",
+]

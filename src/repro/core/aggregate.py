@@ -1,0 +1,347 @@
+"""The streaming aggregation engine (paper §4).
+
+Dataflow (Fig. 3 of the paper): profile *sources* are streamed in parallel
+by a pool of worker threads; contexts are unified and lexically expanded
+("edit" + U), metric values are redistributed across reconstructed routes,
+propagated to inclusive costs, accumulated into cross-profile statistics
+(+), and written *as soon as they are computed* to the PMS database through
+a two-buffer out-of-order writer; traces are remapped and written in
+parallel at offsets precomputed by a prefix sum.  A final "completion"
+writes metadata + summary statistics and generates the CMS file.
+
+Two phases, exactly as §4.4:
+
+* **phase 1** — parse context/identity sections, unify CCTs (the reduction
+  payload in multi-rank mode);
+* **phase 2** — parse metrics/traces, remap onto final context ids,
+  propagate, accumulate, write.
+
+Thread coordination notes vs the paper (§4.2): CPython serializes the
+uniquing dict through one lock rather than per-subtree reader-writer locks
+(GIL realities, see DESIGN.md §4); everything downstream of phase 1 —
+propagation, statistics, encoding, I/O — runs without shared mutable state
+(thread-local accumulators merged by a reduction tree at completion, the
+"relaxed atomics" analog).
+"""
+from __future__ import annotations
+
+import os
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core import cms as cms_mod
+from repro.core.cct import ContextTree
+from repro.core.lexical import StructureInfo, expand_profile_tree
+from repro.core.pms import PMSWriter
+from repro.core.propagate import propagate_inclusive, redistribute_placeholders
+from repro.core.sparse import MeasurementProfile
+from repro.core.stats import StatsAccumulator
+from repro.core.traces import TraceDBWriter
+
+
+@dataclass
+class AggregationConfig:
+    n_threads: int = 4
+    buffer_bytes: int = 1 << 20          # PMS double-buffer flush threshold
+    cms_workers: int = 4
+    cms_strategy: str = "vectorized"     # or "heap" (paper-faithful merge)
+    cms_balance: str = "dynamic"         # GLB (paper §4.4) or "static"
+    group_target_bytes: int = 1 << 20
+    write_cms: bool = True
+    write_traces: bool = True
+    keep_exclusive: bool = True
+
+
+@dataclass
+class AnalysisResult:
+    pms_path: str
+    cms_path: str | None
+    trace_path: str | None
+    n_profiles: int
+    n_contexts: int
+    n_values: int
+    timings: dict[str, float] = field(default_factory=dict)
+    sizes: dict[str, int] = field(default_factory=dict)
+
+
+class _PhaseTimer:
+    """Accumulates io/compute seconds across threads (Fig. 6 breakdown)."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.acc: dict[str, float] = {}
+
+    def add(self, key: str, dt: float) -> None:
+        with self._lock:
+            self.acc[key] = self.acc.get(key, 0.0) + dt
+
+
+class TwoBufferWriter:
+    """The two-buffer PMS output scheme of paper §4.3.1.
+
+    Threads append encoded planes to the active buffer; whoever crosses the
+    threshold swaps buffers (fetch-and-add allocates the file region) and
+    performs the write while other threads keep appending to the twin.
+    """
+
+    def __init__(self, pms: PMSWriter, threshold: int, timer: _PhaseTimer):
+        self._pms = pms
+        self._threshold = threshold
+        self._timer = timer
+        self._pool: queue.Queue = queue.Queue()
+        self._pool.put(bytearray())
+        self._pool.put(bytearray())
+        self._buf: bytearray = self._pool.get()
+        self._recs: list[tuple[int, int, int, int, int, dict | None]] = []
+        self._lock = threading.Lock()
+
+    def append(self, pid: int, payload: bytes, n_ctx: int, n_vals: int,
+               identity: dict | None = None) -> None:
+        to_write = None
+        with self._lock:
+            off = len(self._buf)
+            self._buf += payload
+            self._recs.append((pid, off, len(payload), n_ctx, n_vals, identity))
+            if len(self._buf) >= self._threshold:
+                to_write = (self._buf, self._recs)
+                # blocks only if both buffers are mid-write (backpressure)
+                self._buf = self._pool.get()
+                self._recs = []
+        if to_write is not None:
+            self._flush(*to_write)
+
+    def _flush(self, buf: bytearray, recs) -> None:
+        if not buf:
+            self._recycle(buf)
+            return
+        region = self._pms.alloc(len(buf))
+        t0 = time.perf_counter()
+        self._pms.write_at(region, bytes(buf))
+        self._timer.add("io_write", time.perf_counter() - t0)
+        for pid, off, nb, n_ctx, n_vals, ident in recs:
+            self._pms.record_plane(pid, region + off, nb, n_ctx, n_vals, ident)
+        self._recycle(buf)
+
+    def _recycle(self, buf: bytearray) -> None:
+        buf.clear()
+        self._pool.put(buf)
+
+    def close(self) -> None:
+        with self._lock:
+            to_write = (self._buf, self._recs)
+            self._buf = self._pool.get()
+            self._recs = []
+        self._flush(*to_write)
+
+
+def _parallel_for(n_items: int, n_threads: int, body) -> None:
+    """Non-blocking parallel loop over items (the custom task runtime analog,
+    paper §4.2.4): workers pull indices from a shared counter."""
+    counter = iter(range(n_items))
+    lock = threading.Lock()
+    errors: list[BaseException] = []
+
+    def work():
+        while True:
+            with lock:
+                i = next(counter, None)
+            if i is None:
+                return
+            try:
+                body(i)
+            except BaseException as e:
+                errors.append(e)
+                return
+
+    threads = [threading.Thread(target=work) for _ in range(min(n_threads, max(n_items, 1)))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    if errors:
+        raise errors[0]
+
+
+class StreamingAggregator:
+    """Single-rank engine; :mod:`repro.core.reduction` composes ranks."""
+
+    def __init__(self, out_dir, config: AggregationConfig | None = None):
+        self.out_dir = str(out_dir)
+        os.makedirs(self.out_dir, exist_ok=True)
+        self.cfg = config or AggregationConfig()
+
+    # -- phase 1: contexts ---------------------------------------------------
+    def parse_contexts(self, profile_paths: list[str], timer: _PhaseTimer,
+                       unified: ContextTree | None = None):
+        """Parallel parse + unify; returns (unified, remaps, routes, meta)."""
+        cfg = self.cfg
+        unified = unified or ContextTree()
+        structures: dict[str, StructureInfo] = {}
+        struct_lock = threading.Lock()
+        uniq_lock = threading.Lock()
+        n = len(profile_paths)
+        remaps: list[np.ndarray | None] = [None] * n
+        routes: list[dict] = [{}] * n
+        identities: list[dict] = [{}] * n
+        trace_lens = np.zeros(n, dtype=np.int64)
+        registry_jsons: list[list] = [[]] * n
+
+        def body(i: int):
+            t0 = time.perf_counter()
+            prof = MeasurementProfile.load(profile_paths[i])
+            timer.add("io_read", time.perf_counter() - t0)
+            t1 = time.perf_counter()
+            # eagerly acquire lexical info for new binaries (paper §4.2.3)
+            for sp in prof.file_paths:
+                if sp.endswith(".struct.json") and os.path.exists(sp):
+                    with struct_lock:
+                        if sp not in structures:
+                            structures[sp] = StructureInfo.load(sp)
+            with uniq_lock:  # uniquing (U) — see module docstring on locking
+                remap, rts = expand_profile_tree(unified, prof.tree, structures)
+            remaps[i] = remap
+            routes[i] = rts
+            identities[i] = prof.identity
+            trace_lens[i] = prof.trace.time.size
+            registry_jsons[i] = prof.environment.get("registry", [])
+            timer.add("compute", time.perf_counter() - t1)
+
+        _parallel_for(n, cfg.n_threads, body)
+        return unified, remaps, routes, identities, trace_lens, registry_jsons
+
+    # -- full run --------------------------------------------------------------
+    def run(self, profile_paths: list[str]) -> AnalysisResult:
+        cfg = self.cfg
+        timer = _PhaseTimer()
+        t_start = time.perf_counter()
+        n = len(profile_paths)
+
+        # ---- phase 1
+        t0 = time.perf_counter()
+        unified, remaps, routes, identities, trace_lens, registries = (
+            self.parse_contexts(profile_paths, timer))
+        # renumber contexts to preorder ids: subtree intervals become
+        # contiguous and CMS context order matches tree order
+        pos, order, end = unified.preorder()
+        final_tree = _renumber(unified, pos, order)
+        n_ctx = len(final_tree)
+        timer.add("phase1", time.perf_counter() - t0)
+
+        # ---- phase 2
+        t0 = time.perf_counter()
+        pms_path = os.path.join(self.out_dir, "db.pms")
+        pms = PMSWriter(pms_path, n)
+        writer = TwoBufferWriter(pms, cfg.buffer_bytes, timer)
+        trace_path = None
+        trace_writer = None
+        if cfg.write_traces and trace_lens.sum() > 0:
+            trace_path = os.path.join(self.out_dir, "db.trc")
+            trace_writer = TraceDBWriter(trace_path, [int(x) for x in trace_lens])
+        accs = [StatsAccumulator() for _ in range(cfg.n_threads)]
+        idx_of_thread: dict[int, int] = {}
+        tl_lock = threading.Lock()
+        identity_pos = np.arange(n)
+        end_arr = end  # by preorder id
+        ident_pos = np.arange(n_ctx)
+        n_values_total = [0]
+
+        def body(i: int):
+            t0 = time.perf_counter()
+            prof = MeasurementProfile.load(profile_paths[i])
+            timer.add("io_read", time.perf_counter() - t0)
+            t1 = time.perf_counter()
+            remap_final = pos[np.asarray(remaps[i], dtype=np.int64)]
+            sm = prof.metrics.remap_contexts(remap_final)
+            if routes[i]:
+                rts = {int(pos[ph]): (pos[t_], w) for ph, (t_, w) in routes[i].items()}
+                sm = redistribute_placeholders(sm, rts)
+            sm = propagate_inclusive(sm, ident_pos, end_arr,
+                                     keep_exclusive=cfg.keep_exclusive)
+            tid = threading.get_ident()
+            with tl_lock:
+                k = idx_of_thread.setdefault(tid, len(idx_of_thread) % cfg.n_threads)
+                n_values_total[0] += sm.n_values
+            accs[k].update(sm)
+            payload = sm.encode()
+            timer.add("compute", time.perf_counter() - t1)
+            writer.append(i, payload, sm.n_contexts, sm.n_values, identities[i])
+            if trace_writer is not None and prof.trace.time.size:
+                tr = prof.trace.remap_contexts(remap_final)
+                t2 = time.perf_counter()
+                trace_writer.write_trace(i, tr)
+                timer.add("io_write", time.perf_counter() - t2)
+
+        _parallel_for(n, cfg.n_threads, body)
+        writer.close()
+        if trace_writer is not None:
+            trace_writer.close()
+        timer.add("phase2", time.perf_counter() - t0)
+
+        # ---- completion (paper: overlapped with CMS generation)
+        t0 = time.perf_counter()
+        root_acc = _merge_accumulators(accs)
+        stats = root_acc.finalize()
+        registry_json = next((r for r in registries if r), [])
+        pms_bytes = pms.finalize(tree=final_tree, registry_json=registry_json,
+                                 stats={k: np.asarray(v, np.float64)
+                                        for k, v in stats.items()})
+        cms_path = None
+        cms_bytes = 0
+        if cfg.write_cms:
+            cms_path = os.path.join(self.out_dir, "db.cms")
+            t2 = time.perf_counter()
+            cms_bytes = cms_mod.build_cms(
+                pms_path, cms_path, n_workers=cfg.cms_workers,
+                strategy=cfg.cms_strategy, balance=cfg.cms_balance,
+                group_target_bytes=cfg.group_target_bytes)
+            timer.add("cms", time.perf_counter() - t2)
+        timer.add("completion", time.perf_counter() - t0)
+        timer.add("total", time.perf_counter() - t_start)
+
+        sizes = {"pms": pms_bytes, "cms": cms_bytes}
+        if trace_path:
+            sizes["traces"] = os.path.getsize(trace_path)
+        return AnalysisResult(
+            pms_path=pms_path, cms_path=cms_path, trace_path=trace_path,
+            n_profiles=n, n_contexts=n_ctx, n_values=n_values_total[0],
+            timings=dict(timer.acc), sizes=sizes,
+        )
+
+
+def _renumber(tree: ContextTree, pos: np.ndarray, order: np.ndarray) -> ContextTree:
+    """Rebuild the tree with ids equal to preorder positions."""
+    out = ContextTree.__new__(ContextTree)
+    n = len(tree)
+    out.names = list(tree.names)
+    out._name_ids = dict(tree._name_ids)
+    out.parent = [-1] * n
+    out.kind = [0] * n
+    out.name_id = [tree.name_id[0]] * n
+    for new in range(n):
+        old = int(order[new])
+        out.kind[new] = tree.kind[old]
+        out.name_id[new] = tree.name_id[old]
+        out.parent[new] = -1 if old == 0 else int(pos[tree.parent[old]])
+    out._children = {
+        (out.parent[c], out.kind[c], out.name_id[c]): c for c in range(1, n)
+    }
+    return out
+
+
+def _merge_accumulators(accs: list[StatsAccumulator],
+                        branching: int = 2) -> StatsAccumulator:
+    """Reduction tree over thread-local accumulators (paper §4.4)."""
+    layer = [a for a in accs if len(a) or True]
+    while len(layer) > 1:
+        nxt = []
+        for i in range(0, len(layer), branching):
+            head = layer[i]
+            for other in layer[i + 1 : i + branching]:
+                head.merge(other)
+            nxt.append(head)
+        layer = nxt
+    return layer[0] if layer else StatsAccumulator()

@@ -1,0 +1,166 @@
+"""Calling-context trees (CCTs) and their preorder linearization.
+
+HPCToolkit's unit of attribution is a calling-context-tree node.  In this
+framework the analog is a node of the *program-structure tree* of a JAX
+training/serving job:
+
+    root -> phase (fwd/bwd/optimizer/data/...) -> module path (name scopes)
+         -> op (HLO instruction group) -> line/route leaves
+
+Identity of a node is ``(parent, kind, name)`` which makes cross-profile
+unification (paper §4.1, the U operations) a pure tree merge.
+
+The preorder linearization is the core TPU adaptation (DESIGN.md §4): after
+ordering nodes in DFS preorder, every subtree occupies a contiguous interval
+``[i, end[i])``, so the paper's recursive "propagate" walk (§4.1.2) becomes
+``inclusive = prefix_sum[end[i]] - prefix_sum[i]`` — one streaming pass.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+# Context kinds (the paper's: procedure / inlined function / loop / line /
+# instruction; ours are the JAX-program analogs).
+KIND_ROOT = 0
+KIND_PHASE = 1    # fwd / bwd / optimizer / data / collective ...
+KIND_MODULE = 2   # name-scope path component ("layers.3.attn")
+KIND_LOOP = 3     # scan body / microbatch loop
+KIND_OP = 4       # HLO op group ("dot_general", "all-reduce")
+KIND_LINE = 5     # finest attribution unit (paper: source line)
+KIND_ROUTE = 6    # reconstructed context route (paper §4.1.3)
+
+KIND_NAMES = {
+    KIND_ROOT: "root", KIND_PHASE: "phase", KIND_MODULE: "module",
+    KIND_LOOP: "loop", KIND_OP: "op", KIND_LINE: "line", KIND_ROUTE: "route",
+}
+
+
+class ContextTree:
+    """Growable CCT with (parent, kind, name)-keyed children.
+
+    Node ids are assigned in creation order, so parents always precede
+    children — ``merge`` and serialization rely on this invariant.
+    """
+
+    __slots__ = ("names", "_name_ids", "parent", "kind", "name_id", "_children")
+
+    def __init__(self):
+        self.names: list[str] = []
+        self._name_ids: dict[str, int] = {}
+        self.parent: list[int] = [-1]
+        self.kind: list[int] = [KIND_ROOT]
+        self.name_id: list[int] = [self._intern("<root>")]
+        self._children: dict[tuple[int, int, int], int] = {}
+
+    # -- construction -----------------------------------------------------
+    def _intern(self, name: str) -> int:
+        nid = self._name_ids.get(name)
+        if nid is None:
+            nid = len(self.names)
+            self._name_ids[name] = nid
+            self.names.append(name)
+        return nid
+
+    def child(self, parent: int, kind: int, name: str) -> int:
+        """Get-or-create child — the uniquing (U) op of paper Fig. 3."""
+        key = (parent, kind, self._intern(name))
+        cid = self._children.get(key)
+        if cid is None:
+            cid = len(self.parent)
+            self._children[key] = cid
+            self.parent.append(parent)
+            self.kind.append(kind)
+            self.name_id.append(key[2])
+        return cid
+
+    def path(self, parts: list[tuple[int, str]], parent: int = 0) -> int:
+        for kind, name in parts:
+            parent = self.child(parent, kind, name)
+        return parent
+
+    def __len__(self) -> int:
+        return len(self.parent)
+
+    # -- queries ----------------------------------------------------------
+    def name_of(self, cid: int) -> str:
+        return self.names[self.name_id[cid]]
+
+    def full_path(self, cid: int) -> str:
+        parts = []
+        while cid > 0:
+            parts.append(self.name_of(cid))
+            cid = self.parent[cid]
+        return "/" + "/".join(reversed(parts))
+
+    def parent_array(self) -> np.ndarray:
+        return np.asarray(self.parent, dtype=np.int64)
+
+    # -- unification ------------------------------------------------------
+    def merge(self, other: "ContextTree") -> np.ndarray:
+        """Merge ``other`` into self; returns remap st. new_id = remap[old_id].
+
+        Walking in id order is sufficient because parents precede children.
+        This is the reduction-tree merge payload of paper §4.4 phase 1.
+        """
+        remap = np.empty(len(other.parent), dtype=np.uint32)
+        remap[0] = 0
+        for cid in range(1, len(other.parent)):
+            p = remap[other.parent[cid]]
+            remap[cid] = self.child(int(p), other.kind[cid], other.names[other.name_id[cid]])
+        return remap
+
+    # -- linearization ----------------------------------------------------
+    def preorder(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """DFS-preorder linearization.
+
+        Returns ``(pos, order, end)`` where ``pos[old_id] -> preorder index``,
+        ``order[preorder index] -> old_id``, and ``end[preorder index]`` is
+        one past the last preorder index of that node's subtree
+        (``inclusive interval = [i, end[i])``).
+        """
+        n = len(self.parent)
+        kids: list[list[int]] = [[] for _ in range(n)]
+        for cid in range(1, n):
+            kids[self.parent[cid]].append(cid)
+        pos = np.empty(n, dtype=np.int64)
+        order = np.empty(n, dtype=np.int64)
+        end = np.empty(n, dtype=np.int64)
+        idx = 0
+        # Iterative DFS with explicit post-visit records for `end`.
+        stack: list[tuple[int, bool]] = [(0, False)]
+        while stack:
+            node, done = stack.pop()
+            if done:
+                end[pos[node]] = idx
+                continue
+            pos[node] = idx
+            order[idx] = node
+            idx += 1
+            stack.append((node, True))
+            for c in reversed(kids[node]):
+                stack.append((c, False))
+        return pos, order, end
+
+    # -- serialization ----------------------------------------------------
+    def to_arrays(self) -> dict[str, np.ndarray]:
+        name_blob = "\x00".join(self.names).encode("utf-8")
+        return {
+            "parent": np.asarray(self.parent, dtype=np.int64),
+            "kind": np.asarray(self.kind, dtype=np.uint8),
+            "name_id": np.asarray(self.name_id, dtype=np.uint32),
+            "names": np.frombuffer(name_blob, dtype=np.uint8),
+        }
+
+    @classmethod
+    def from_arrays(cls, arrs: dict[str, np.ndarray]) -> "ContextTree":
+        t = cls.__new__(cls)
+        t.names = bytes(arrs["names"]).decode("utf-8").split("\x00")
+        t._name_ids = {n: i for i, n in enumerate(t.names)}
+        t.parent = [int(x) for x in arrs["parent"]]
+        t.kind = [int(x) for x in arrs["kind"]]
+        t.name_id = [int(x) for x in arrs["name_id"]]
+        t._children = {
+            (t.parent[c], t.kind[c], t.name_id[c]): c
+            for c in range(1, len(t.parent))
+        }
+        return t

@@ -1,0 +1,282 @@
+"""Context-Major Sparse (CMS) analysis-results format (paper §3.2, §4.3.2).
+
+Same sparse 3-tensor as PMS, ordered context-major: an array of context
+offsets (exclusive scan over per-context plane sizes) followed by one CSR
+plane per non-empty context::
+
+    plane(ctx) = mids u16[m], mstart u64[m+1], prof u32[x], vals f64[x]
+
+A (ctx, metric) "stripe" — the values of one metric for *all* profiles — is
+a single contiguous read, which is the access pattern CMS exists to serve.
+
+The builder follows paper §4.3.2: CMS is generated *from the completed PMS
+file*; sizes are known, so offsets come from an exclusive scan, and workers
+each assemble contiguous context groups and write at precomputed offsets
+without coordination.  Both the faithful **heap-merge** per-group gather and
+the TPU-shaped **vectorized transpose** (sort by (ctx, mid, profile)) are
+implemented; they produce byte-identical planes.
+"""
+from __future__ import annotations
+
+import heapq
+import os
+import struct
+import threading
+
+import numpy as np
+
+from repro.utils import binio
+from repro.core import loadbalance
+from repro.core.pms import PMSReader
+from repro.core.sparse import SparseMetrics
+
+CMS_MAGIC = b"RCMS"
+_HEADER = 24
+
+# exact plane size for m non-empty metrics and x values (binio 1-D block = 13 + data)
+def plane_nbytes(m: int, x: int) -> int:
+    return 60 + 10 * m + 12 * x if x else 0
+
+
+def _encode_plane(mids, mstart, prof, vals) -> bytes:
+    return (binio.pack_array(mids) + binio.pack_array(mstart)
+            + binio.pack_array(prof) + binio.pack_array(vals))
+
+
+# ---------------------------------------------------------------------------
+# pass 1: size census over the PMS planes
+# ---------------------------------------------------------------------------
+
+def census(pms: PMSReader, n_ctx: int) -> tuple[np.ndarray, np.ndarray]:
+    """Per-context (x_c, m_c): total values and distinct non-empty metrics."""
+    x_c = np.zeros(n_ctx, dtype=np.int64)
+    key_chunks: list[np.ndarray] = []
+    uniq = np.empty(0, dtype=np.uint64)
+    for pid in range(pms.n_profiles):
+        sm = pms.plane(pid)
+        rows, mids, _ = sm.triplets()
+        if rows.size == 0:
+            continue
+        np.add.at(x_c, rows, 1)
+        key_chunks.append((rows.astype(np.uint64) << np.uint64(16)) | mids.astype(np.uint64))
+        if sum(k.size for k in key_chunks) > 1 << 22:
+            uniq = np.unique(np.concatenate([uniq] + key_chunks))
+            key_chunks = []
+    if key_chunks:
+        uniq = np.unique(np.concatenate([uniq] + key_chunks))
+    m_c = np.bincount((uniq >> np.uint64(16)).astype(np.int64), minlength=n_ctx)
+    return x_c, m_c.astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
+# pass 2: per-group gather (two strategies)
+# ---------------------------------------------------------------------------
+
+def _gather_group_vectorized(pms: PMSReader, lo: int, hi: int) -> dict[int, bytes]:
+    """Transpose by sort: the TPU-shaped formulation (DESIGN.md §4)."""
+    rs, ms, ps, vs = [], [], [], []
+    for pid in range(pms.n_profiles):
+        sm = pms.plane(pid)
+        k0, k1 = np.searchsorted(sm.ctx, [lo, hi])
+        if k0 == k1:
+            continue
+        i0, i1 = int(sm.start[k0]), int(sm.start[k1])
+        rows = np.repeat(sm.ctx[k0:k1].astype(np.int64),
+                         np.diff(sm.start[k0:k1 + 1].astype(np.int64)))
+        rs.append(rows)
+        ms.append(sm.mid[i0:i1].astype(np.int64))
+        ps.append(np.full(i1 - i0, pid, dtype=np.int64))
+        vs.append(sm.val[i0:i1])
+    out: dict[int, bytes] = {}
+    if not rs:
+        return out
+    rows = np.concatenate(rs); mids = np.concatenate(ms)
+    pids = np.concatenate(ps); vals = np.concatenate(vs)
+    order = np.lexsort((pids, mids, rows))
+    rows, mids, pids, vals = rows[order], mids[order], pids[order], vals[order]
+    ctx_bounds = np.flatnonzero(np.diff(rows, prepend=-1))
+    ctx_ends = np.append(ctx_bounds[1:], rows.size)
+    for b, e in zip(ctx_bounds, ctx_ends):
+        out[int(rows[b])] = _encode_ctx_plane(mids[b:e], pids[b:e], vals[b:e])
+    return out
+
+
+def _encode_ctx_plane(mids, pids, vals) -> bytes:
+    mb = np.flatnonzero(np.diff(mids, prepend=-1))
+    umids = mids[mb].astype(np.uint16)
+    mstart = np.append(mb, mids.size).astype(np.uint64)
+    return _encode_plane(umids, mstart, pids.astype(np.uint32), vals.astype(np.float64))
+
+
+def _gather_group_heap(pms: PMSReader, lo: int, hi: int) -> dict[int, bytes]:
+    """Faithful heap-merge over profiles (paper §4.3.2)."""
+    planes = []
+    heap: list[tuple[int, int]] = []
+    cursors = {}
+    for pid in range(pms.n_profiles):
+        sm = pms.plane(pid)
+        k0, k1 = np.searchsorted(sm.ctx, [lo, hi])
+        if k0 == k1:
+            continue
+        planes.append((pid, sm))
+        cursors[pid] = (int(k0), int(k1), sm)
+        heapq.heappush(heap, (int(sm.ctx[k0]), pid))
+    out: dict[int, bytes] = {}
+    acc_m: list[np.ndarray] = []
+    acc_p: list[np.ndarray] = []
+    acc_v: list[np.ndarray] = []
+    cur_ctx = -1
+
+    def flush():
+        if cur_ctx < 0 or not acc_m:
+            return
+        mids = np.concatenate(acc_m); pids = np.concatenate(acc_p)
+        vals = np.concatenate(acc_v)
+        order = np.lexsort((pids, mids))
+        out[cur_ctx] = _encode_ctx_plane(mids[order], pids[order], vals[order])
+
+    while heap:
+        ctx, pid = heapq.heappop(heap)
+        if ctx != cur_ctx:
+            flush()
+            acc_m, acc_p, acc_v = [], [], []
+            cur_ctx = ctx
+        k0, k1, sm = cursors[pid]
+        i0, i1 = int(sm.start[k0]), int(sm.start[k0 + 1])
+        acc_m.append(sm.mid[i0:i1].astype(np.int64))
+        acc_p.append(np.full(i1 - i0, pid, dtype=np.int64))
+        acc_v.append(sm.val[i0:i1])
+        k0 += 1
+        cursors[pid] = (k0, k1, sm)
+        if k0 < k1:
+            heapq.heappush(heap, (int(sm.ctx[k0]), pid))
+    flush()
+    return out
+
+
+# ---------------------------------------------------------------------------
+# builder
+# ---------------------------------------------------------------------------
+
+def build_cms(pms_path, out_path, *, n_workers: int = 4, strategy: str = "vectorized",
+              balance: str = "dynamic", group_target_bytes: int = 1 << 20,
+              timings: dict | None = None) -> int:
+    """Generate the CMS file from a completed PMS file (paper §4.3.2)."""
+    pms = PMSReader(pms_path)
+    n_ctx = len(pms.tree.parent) if pms.tree is not None else (
+        int(max((int(pms.plane(p).ctx.max()) for p in range(pms.n_profiles)
+                 if pms.plane(p).n_contexts), default=-1)) + 1)
+    x_c, m_c = census(pms, n_ctx)
+    sizes = np.where(x_c > 0, 60 + 10 * m_c + 12 * x_c, 0).astype(np.int64)
+    offsets = np.zeros(n_ctx + 1, dtype=np.uint64)
+    np.cumsum(sizes, out=offsets[1:])  # exclusive scan (paper §4.3.2)
+    data_start = _HEADER + 8 * (n_ctx + 1)
+    offsets += np.uint64(data_start)
+
+    groups = loadbalance.make_groups(sizes, group_target_bytes)
+    assigner = loadbalance.make_assigner(balance, groups, sizes, n_workers)
+    gather = _gather_group_vectorized if strategy == "vectorized" else _gather_group_heap
+
+    f = open(str(out_path), "w+b")
+    fd = f.fileno()
+    f.write(CMS_MAGIC + struct.pack("<I", 1))
+    f.write(struct.pack("<QQ", n_ctx, 0))
+    f.write(offsets.tobytes())
+    f.flush()  # workers use positional pwrites from here on
+
+    errors: list[BaseException] = []
+
+    def worker(w: int):
+        try:
+            # every worker opens its own reader: no shared file positions
+            wpms = PMSReader(pms_path)
+            while True:
+                g = assigner.next_group(w)
+                if g is None:
+                    return
+                lo, hi = g
+                planes = gather(wpms, lo, hi)
+                if not planes:
+                    continue
+                # group planes are contiguous: assemble one buffer, one pwrite
+                buf = b"".join(planes[c] for c in sorted(planes))
+                os.pwrite(fd, buf, int(offsets[min(planes)]))
+            wpms.close()
+        except BaseException as e:  # surfaced after join
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(w,)) for w in range(n_workers)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    if errors:
+        raise errors[0]
+
+    meta_off = int(offsets[-1])
+    blob = binio.pack_json({"n_profiles": pms.n_profiles,
+                            "registry": pms.meta.get("registry", [])})
+    os.pwrite(fd, blob, meta_off)
+    os.pwrite(fd, struct.pack("<Q", meta_off), 16)
+    f.truncate(meta_off + len(blob))
+    f.close()
+    pms.close()
+    return meta_off + len(blob)
+
+
+class CMSReader:
+    def __init__(self, path):
+        self.path = str(path)
+        self._f = open(self.path, "rb")
+        self._fd = self._f.fileno()
+        head = os.pread(self._fd, _HEADER, 0)
+        assert head[:4] == CMS_MAGIC, "not a CMS file"
+        self.n_ctx, self.meta_off = struct.unpack_from("<QQ", head, 8)
+        self.n_ctx = int(self.n_ctx)
+        raw = os.pread(self._fd, 8 * (self.n_ctx + 1), _HEADER)
+        self.offsets = np.frombuffer(raw, dtype=np.uint64)
+        blob = os.pread(self._fd, os.fstat(self._fd).st_size - int(self.meta_off),
+                        int(self.meta_off))
+        self.meta, _ = binio.unpack_json(blob, 0)
+
+    def plane(self, ctx: int):
+        """(mids, mstart, prof, vals) for one context; empty if no data."""
+        lo, hi = int(self.offsets[ctx]), int(self.offsets[ctx + 1])
+        if lo == hi:
+            return (np.empty(0, np.uint16), np.zeros(1, np.uint64),
+                    np.empty(0, np.uint32), np.empty(0, np.float64))
+        buf = os.pread(self._fd, hi - lo, lo)
+        mids, off = binio.unpack_array(buf, 0)
+        mstart, off = binio.unpack_array(buf, off)
+        prof, off = binio.unpack_array(buf, off)
+        vals, off = binio.unpack_array(buf, off)
+        return mids, mstart, prof, vals
+
+    def stripe(self, ctx: int, mid: int) -> tuple[np.ndarray, np.ndarray]:
+        """All (profile, value) pairs of one metric for one context —
+        the contiguous read CMS is designed for (paper §3.2)."""
+        mids, mstart, prof, vals = self.plane(ctx)
+        j = int(np.searchsorted(mids, mid))
+        if j >= mids.size or mids[j] != mid:
+            return np.empty(0, np.uint32), np.empty(0, np.float64)
+        a, b = int(mstart[j]), int(mstart[j + 1])
+        return prof[a:b], vals[a:b]
+
+    def query(self, ctx: int, mid: int, pid: int) -> float:
+        prof, vals = self.stripe(ctx, mid)
+        k = int(np.searchsorted(prof, pid))
+        if k < prof.size and prof[k] == pid:
+            return float(vals[k])
+        return 0.0
+
+    def nbytes(self) -> int:
+        return os.fstat(self._fd).st_size
+
+    def close(self):
+        self._f.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        self.close()

@@ -1,0 +1,95 @@
+"""Lexical context expansion & context reconstruction (paper §4.1.1, §4.1.3).
+
+HPCToolkit expands raw instruction offsets with lexical scopes (inlined
+functions, loops, lines) parsed from DWARF/hpcstruct.  Our measured
+artifact is a compiled XLA module, so the analog "structure file" maps HLO
+op names to their enclosing lexical scopes — the name-scope/module path
+recorded by :mod:`repro.profiling.hlo_attrib` when the program was lowered.
+
+Reconstruction: an XLA *fusion* op loses provenance exactly the way flat
+GPU PC samples do — one measured op corresponds to several source modules.
+A structure entry may therefore carry several weighted "routes"; costs
+measured on such an op are attributed to a placeholder context "in
+superposition" and redistributed across the route leaves before inclusive
+propagation (paper §4.1.3), via
+:func:`repro.core.propagate.redistribute_placeholders`.
+
+Structure file (JSON)::
+
+    {"binary": "<module fingerprint>",
+     "ops": {"<op name>": [ {"path": [[kind, name], ...], "weight": w}, ...]}}
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.cct import KIND_OP, KIND_ROUTE, ContextTree
+
+
+@dataclass
+class StructureInfo:
+    binary: str
+    ops: dict[str, list[dict]] = field(default_factory=dict)
+
+    def save(self, path) -> None:
+        with open(path, "w") as f:
+            json.dump({"binary": self.binary, "ops": self.ops}, f)
+
+    @classmethod
+    def load(cls, path) -> "StructureInfo":
+        with open(path) as f:
+            d = json.load(f)
+        return cls(d["binary"], d["ops"])
+
+    def add_op(self, op: str, path: list[tuple[int, str]], weight: float = 1.0) -> None:
+        self.ops.setdefault(op, []).append(
+            {"path": [[int(k), str(n)] for k, n in path], "weight": float(weight)}
+        )
+
+
+def expand_profile_tree(
+    unified: ContextTree,
+    local: ContextTree,
+    structures: dict[str, StructureInfo],
+) -> tuple[np.ndarray, dict[int, tuple[np.ndarray, np.ndarray]]]:
+    """The "edit" + "U" composition of paper Fig. 3 for one profile.
+
+    Maps every local context onto the unified tree, inserting lexical
+    scopes as parents of op contexts.  Returns ``(remap, routes)``:
+    ``remap[local_id] -> unified_id`` and, for multi-route (reconstructed)
+    ops, ``routes[placeholder_unified_id] = (leaf_ids, weights)``.
+    """
+    # merge per-binary op tables ("eagerly acquire lexical information")
+    op_table: dict[str, list[dict]] = {}
+    for s in structures.values():
+        for op, routes in s.ops.items():
+            op_table.setdefault(op, []).extend(routes)
+
+    remap = np.zeros(len(local), dtype=np.uint32)
+    routes_out: dict[int, tuple[np.ndarray, np.ndarray]] = {}
+    for cid in range(1, len(local)):
+        parent_u = int(remap[local.parent[cid]])
+        kind = local.kind[cid]
+        name = local.name_of(cid)
+        if kind == KIND_OP and name in op_table:
+            entries = op_table[name]
+            leaf_ids = []
+            weights = []
+            for e in entries:
+                node = unified.path([(int(k), n) for k, n in e["path"]], parent_u)
+                leaf_ids.append(unified.child(node, KIND_OP, name))
+                weights.append(e["weight"])
+            if len(leaf_ids) == 1:
+                remap[cid] = leaf_ids[0]
+            else:
+                # superposition placeholder (paper §4.1.3)
+                ph = unified.child(parent_u, KIND_ROUTE, name + "@superposition")
+                remap[cid] = ph
+                routes_out[ph] = (np.asarray(leaf_ids, dtype=np.int64),
+                                  np.asarray(weights, dtype=np.float64))
+        else:
+            remap[cid] = unified.child(parent_u, kind, name)
+    return remap, routes_out

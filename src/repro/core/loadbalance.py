@@ -1,0 +1,79 @@
+"""Context-group partitioning for CMS output (paper §4.3.2, §4.4, Table 5).
+
+Contexts are split into groups of *similar data size* (not similar count).
+Two assignment schemes, compared in benchmark table5:
+
+* **static** — groups pre-assigned contiguously to workers (the scheme the
+  paper tried first and found imbalanced);
+* **dynamic (GLB)** — workers pull the next group from a shared queue; the
+  queue lock is the single-host analog of the paper's rank-0 "server"
+  thread.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+
+import numpy as np
+
+
+def make_groups(sizes: np.ndarray, target_bytes: int) -> list[tuple[int, int]]:
+    """Split contexts [0, n) into contiguous [lo, hi) groups of ~target_bytes.
+
+    Contexts must stay contiguous and id-ordered so CMS offsets follow from
+    an exclusive scan (paper §4.3.2).
+    """
+    sizes = np.asarray(sizes, dtype=np.int64)
+    groups: list[tuple[int, int]] = []
+    lo, acc = 0, 0
+    for i, s in enumerate(sizes):
+        acc += int(s)
+        if acc >= target_bytes:
+            groups.append((lo, i + 1))
+            lo, acc = i + 1, 0
+    if lo < sizes.size:
+        groups.append((lo, sizes.size))
+    if not groups:
+        groups.append((0, 0))
+    return groups
+
+
+class StaticAssigner:
+    """Pre-assign groups to workers contiguously by cumulative size."""
+
+    def __init__(self, groups: list[tuple[int, int]], sizes: np.ndarray, n_workers: int):
+        gsz = np.array([int(np.sum(sizes[lo:hi])) for lo, hi in groups], dtype=np.int64)
+        csum = np.cumsum(gsz)
+        total = int(csum[-1]) if gsz.size else 0
+        self._assignment: list[list[tuple[int, int]]] = [[] for _ in range(n_workers)]
+        for g, (lo, hi) in enumerate(groups):
+            w = min(int((csum[g] - 1) * n_workers // max(total, 1)), n_workers - 1) if total else 0
+            self._assignment[w].append((lo, hi))
+        self._iters = [iter(a) for a in self._assignment]
+
+    def next_group(self, worker: int):
+        return next(self._iters[worker], None)
+
+
+class DynamicAssigner:
+    """GLB: shared queue of groups; the lock is the 'server thread' analog."""
+
+    def __init__(self, groups: list[tuple[int, int]], sizes=None, n_workers: int = 1):
+        self._q: queue.SimpleQueue = queue.SimpleQueue()
+        for g in groups:
+            self._q.put(g)
+        self._lock = threading.Lock()
+
+    def next_group(self, worker: int):
+        try:
+            return self._q.get_nowait()
+        except queue.Empty:
+            return None
+
+
+def make_assigner(kind: str, groups, sizes, n_workers):
+    if kind == "static":
+        return StaticAssigner(groups, sizes, n_workers)
+    if kind == "dynamic":
+        return DynamicAssigner(groups, sizes, n_workers)
+    raise ValueError(kind)

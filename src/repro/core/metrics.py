@@ -1,0 +1,134 @@
+"""Metric registry and semantics.
+
+The paper (§3, §4.1.2) distinguishes *exclusive* metrics (recorded by the
+measurement subsystem, attributed to a single context) from *inclusive*
+metrics (computed during analysis by propagating exclusive values up the
+context tree).  Analysis results therefore carry roughly twice as many
+metrics as measurements (paper Table 2: "the number of metrics increases as
+inclusive metrics are computed").
+
+Metric ids are uint16.  The inclusive variant of exclusive metric ``m`` is
+``m | INCLUSIVE_BIT``.  Statistic ids (sum/count/mean/min/max/std over
+profiles, §4.1.2) are tracked separately by :mod:`repro.core.stats`.
+
+Heterogeneity: host-side metrics (step wall time, input-pipeline time, ...)
+apply only to host contexts; device-side metrics (flops, HBM/ICI bytes,
+stall classes, per-expert load, ...) apply only to device-stream contexts.
+This is the TPU analog of the paper's CPU-vs-GPU metric sparsity.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+INCLUSIVE_BIT = 1 << 15  # uint16 MSB
+
+
+@dataclass(frozen=True)
+class Metric:
+    mid: int
+    name: str
+    unit: str
+    side: str  # "host" | "device"
+
+    @property
+    def inclusive_mid(self) -> int:
+        return self.mid | INCLUSIVE_BIT
+
+
+class MetricRegistry:
+    """Uniquing registry for metric descriptors (paper §4.1: environment merge)."""
+
+    def __init__(self):
+        self._by_name: dict[str, Metric] = {}
+        self._by_id: dict[int, Metric] = {}
+
+    def register(self, name: str, unit: str = "", side: str = "device") -> Metric:
+        if name in self._by_name:
+            return self._by_name[name]
+        mid = len(self._by_name)
+        if mid >= INCLUSIVE_BIT:
+            raise ValueError("metric id space exhausted")
+        m = Metric(mid, name, unit, side)
+        self._by_name[name] = m
+        self._by_id[mid] = m
+        return m
+
+    def merge(self, other: "MetricRegistry") -> dict[int, int]:
+        """Merge ``other`` into self; return old-id -> new-id remapping."""
+        remap = {}
+        for name, m in other._by_name.items():
+            remap[m.mid] = self.register(name, m.unit, m.side).mid
+        return remap
+
+    def __len__(self):
+        return len(self._by_name)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._by_name
+
+    def __getitem__(self, key):
+        if isinstance(key, str):
+            return self._by_name[key]
+        return self._by_id[int(key) & ~INCLUSIVE_BIT]
+
+    def name_of(self, mid: int) -> str:
+        base = self._by_id[int(mid) & ~INCLUSIVE_BIT].name
+        return base + ":I" if int(mid) & INCLUSIVE_BIT else base
+
+    def to_json(self):
+        return [
+            {"mid": m.mid, "name": m.name, "unit": m.unit, "side": m.side}
+            for m in self._by_name.values()
+        ]
+
+    @classmethod
+    def from_json(cls, items) -> "MetricRegistry":
+        reg = cls()
+        for it in sorted(items, key=lambda d: d["mid"]):
+            m = reg.register(it["name"], it.get("unit", ""), it.get("side", "device"))
+            assert m.mid == it["mid"], "non-contiguous metric ids"
+        return reg
+
+
+# ---------------------------------------------------------------------------
+# Standard metric sets for the in-job measurement subsystem.
+# Host metrics mirror the paper's CPU metrics (REALTIME et al.); device
+# metrics mirror its GPU metric sets (62-142 stall/throughput counters).
+# ---------------------------------------------------------------------------
+
+HOST_METRIC_NAMES = [
+    "host.step_time",
+    "host.data_wait",
+    "host.dispatch",
+    "host.checkpoint_io",
+    "host.compile_time",
+]
+
+DEVICE_METRIC_NAMES = [
+    "dev.flops",
+    "dev.bytes_hbm",
+    "dev.bytes_ici",
+    "dev.time_compute",
+    "dev.time_collective",
+    "dev.occupancy",
+    "dev.mem_peak",
+]
+
+FAMILY_METRIC_NAMES = {
+    "attention": ["attn.qk_flops", "attn.av_flops", "attn.kv_bytes", "attn.softmax_time"],
+    "moe": ["moe.tokens_routed", "moe.expert_load", "moe.drop_rate", "moe.a2a_bytes"],
+    "ssm": ["ssm.state_bytes", "ssm.scan_time", "ssm.conv_time"],
+    "dense": ["mlp.gemm_flops", "mlp.act_bytes"],
+}
+
+
+def default_registry(families=("attention", "dense")) -> MetricRegistry:
+    reg = MetricRegistry()
+    for n in HOST_METRIC_NAMES:
+        reg.register(n, "s" if "time" in n or "wait" in n else "", side="host")
+    for n in DEVICE_METRIC_NAMES:
+        reg.register(n, side="device")
+    for fam in families:
+        for n in FAMILY_METRIC_NAMES[fam]:
+            reg.register(n, side="device")
+    return reg

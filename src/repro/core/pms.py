@@ -1,0 +1,157 @@
+"""Profile-Major Sparse (PMS) analysis-results format (paper §3.2, §4.3.1).
+
+One file holds the full (profile x context x metric) sparse tensor ordered
+profile-major: a fixed-size *profile index* (offset/size per profile) plus a
+sequence of per-profile CSR planes, each in the Fig.-1 measurement layout.
+
+Because each plane's location is recorded in the index, planes may be
+written **out of order** — the property the paper's double-buffered writer
+relies on (§4.3.1).  Region allocation is a fetch-and-add on an atomic file
+cursor (the paper's atomic / rank-0-server-thread protocol); writes use
+``os.pwrite`` so concurrent writers never share a file position.
+
+Layout::
+
+    [0:4)   magic "RPMS"      [4:8)   version u32
+    [8:16)  n_profiles u64    [16:24) meta_off u64 (patched at finalize)
+    [24: 24+32*P)             index: per profile (offset, nbytes, n_ctx, n_vals) u64
+    [... planes ...]          CSR planes, any order
+    [meta_off: ...)           JSON meta + unified CCT arrays + summary stats
+"""
+from __future__ import annotations
+
+import os
+import struct
+import threading
+
+import numpy as np
+
+from repro.utils import binio
+from repro.core.cct import ContextTree
+from repro.core.sparse import SparseMetrics
+
+PMS_MAGIC = b"RPMS"
+_HEADER = 24
+_IDX_ENTRY = 32
+
+
+class PMSWriter:
+    def __init__(self, path, n_profiles: int):
+        self.path = str(path)
+        self.n_profiles = int(n_profiles)
+        self._f = open(self.path, "w+b")
+        self._fd = self._f.fileno()
+        self._f.write(PMS_MAGIC + struct.pack("<I", 1))
+        self._f.write(struct.pack("<QQ", self.n_profiles, 0))
+        self._f.flush()  # all subsequent writes are positional pwrites
+        self._index = np.zeros((self.n_profiles, 4), dtype=np.uint64)
+        self._planes_start = _HEADER + _IDX_ENTRY * self.n_profiles
+        self._pos = self._planes_start
+        self._lock = threading.Lock()
+        self._identities: list[dict | None] = [None] * self.n_profiles
+
+    # -- the atomic region allocator (paper §4.3.1 / §4.4) ------------------
+    def alloc(self, nbytes: int) -> int:
+        with self._lock:
+            off = self._pos
+            self._pos += int(nbytes)
+            return off
+
+    def write_at(self, offset: int, data: bytes) -> None:
+        os.pwrite(self._fd, data, offset)
+
+    def record_plane(self, profile_id: int, offset: int, nbytes: int,
+                     n_ctx: int, n_vals: int, identity: dict | None = None) -> None:
+        self._index[profile_id] = (offset, nbytes, n_ctx, n_vals)
+        if identity is not None:
+            self._identities[profile_id] = identity
+
+    def add_plane(self, profile_id: int, sm: SparseMetrics,
+                  identity: dict | None = None) -> int:
+        """Unbuffered path: encode, allocate, pwrite, record."""
+        data = sm.encode()
+        off = self.alloc(len(data))
+        self.write_at(off, data)
+        self.record_plane(profile_id, off, len(data), sm.n_contexts, sm.n_values, identity)
+        return len(data)
+
+    def finalize(self, tree: ContextTree | None = None, registry_json=None,
+                 stats: dict[str, np.ndarray] | None = None, extra_meta=None) -> int:
+        """Database 'completion' (paper §4.1): metadata + summary statistics."""
+        meta_off = self._pos
+        chunks = [binio.pack_json({
+            "identities": self._identities,
+            "registry": registry_json or [],
+            "extra": extra_meta or {},
+            "has_tree": tree is not None,
+            "stats_fields": sorted(stats) if stats else [],
+        })]
+        if tree is not None:
+            for a in tree.to_arrays().values():
+                chunks.append(binio.pack_array(a))
+        if stats:
+            for k in sorted(stats):
+                chunks.append(binio.pack_array(np.ascontiguousarray(stats[k])))
+        blob = b"".join(chunks)
+        self.write_at(meta_off, blob)
+        self.write_at(_HEADER, self._index.tobytes())
+        self.write_at(16, struct.pack("<Q", meta_off))
+        end = meta_off + len(blob)
+        self._f.truncate(end)
+        self._f.close()
+        return end
+
+    def abort(self):
+        self._f.close()
+
+
+class PMSReader:
+    def __init__(self, path):
+        self.path = str(path)
+        self._f = open(self.path, "rb")
+        self._fd = self._f.fileno()
+        head = os.pread(self._fd, _HEADER, 0)
+        assert head[:4] == PMS_MAGIC, "not a PMS file"
+        self.n_profiles, self.meta_off = struct.unpack_from("<QQ", head, 8)
+        self.n_profiles = int(self.n_profiles)
+        idx = os.pread(self._fd, _IDX_ENTRY * self.n_profiles, _HEADER)
+        self.index = np.frombuffer(idx, dtype=np.uint64).reshape(self.n_profiles, 4)
+        blob = os.pread(self._fd, os.fstat(self._fd).st_size - int(self.meta_off), int(self.meta_off))
+        self.meta, off = binio.unpack_json(blob, 0)
+        self.tree = None
+        if self.meta.get("has_tree"):
+            arrs = {}
+            for key in ("parent", "kind", "name_id", "names"):
+                arrs[key], off = binio.unpack_array(blob, off)
+            self.tree = ContextTree.from_arrays(arrs)
+        self.stats: dict[str, np.ndarray] = {}
+        for k in self.meta.get("stats_fields", []):
+            self.stats[k], off = binio.unpack_array(blob, off)
+
+    def identity(self, pid: int) -> dict | None:
+        return self.meta["identities"][pid]
+
+    def plane_raw(self, pid: int) -> bytes:
+        off, nbytes = int(self.index[pid, 0]), int(self.index[pid, 1])
+        return os.pread(self._fd, nbytes, off)
+
+    def plane(self, pid: int) -> SparseMetrics:
+        if int(self.index[pid, 1]) == 0:
+            return SparseMetrics.empty()
+        sm, _ = SparseMetrics.decode(self.plane_raw(pid))
+        return sm
+
+    def query(self, pid: int, ctx: int, mid: int) -> float:
+        return self.plane(pid).lookup(ctx, mid)
+
+    def nbytes(self) -> int:
+        return os.fstat(self._fd).st_size
+
+    def close(self):
+        self._f.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        self.close()

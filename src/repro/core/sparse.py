@@ -1,0 +1,226 @@
+"""The sparse measurement format (paper §3.1, Fig. 1).
+
+A profile's metric payload is two vectors:
+
+* ``(metric, value)`` pairs ordered by context — ``mid: u16``, ``val: f64``;
+* ``(context, index)`` pairs — ``ctx: u32``, ``start: u64`` — where ``start``
+  is the index of the context's first metric/value pair.  A final sentinel
+  pair marks the end of the last context's span (the paper's "last
+  context/index pair").
+
+Space: ``O(2(x + c + 1))`` words for ``x`` non-zeros over ``c`` non-empty
+contexts.  Access: binary search over contexts then metrics —
+``O(log c + log x_c)``.
+
+:class:`MeasurementProfile` is the full per-worker profile file (paper §4.1's
+six sections: environment, identity, file paths, contexts, trace, metrics).
+"""
+from __future__ import annotations
+
+import io
+import struct
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.utils import binio
+from repro.core.cct import ContextTree
+
+CTX_DTYPE = np.uint32
+MID_DTYPE = np.uint16
+VAL_DTYPE = np.float64
+IDX_DTYPE = np.uint64
+
+PROFILE_MAGIC = b"RPRF"
+
+
+@dataclass
+class SparseMetrics:
+    """CSR-like (context -> [(metric, value)...]) block, Fig. 1 of the paper."""
+
+    ctx: np.ndarray    # (c,) u32, strictly increasing non-empty context ids
+    start: np.ndarray  # (c+1,) u64, start[k] = first pair index of ctx[k]
+    mid: np.ndarray    # (x,) u16, metric ids (sorted within a context)
+    val: np.ndarray    # (x,) f64, non-zero values
+
+    # -- constructors -------------------------------------------------------
+    @classmethod
+    def empty(cls) -> "SparseMetrics":
+        return cls(
+            np.empty(0, CTX_DTYPE), np.zeros(1, IDX_DTYPE),
+            np.empty(0, MID_DTYPE), np.empty(0, VAL_DTYPE),
+        )
+
+    @classmethod
+    def from_triplets(cls, ctx_ids, mids, vals, *, combine: str = "sum") -> "SparseMetrics":
+        """Build from unordered (ctx, metric, value) triplets.
+
+        Duplicate (ctx, metric) keys are combined (summed); zero values are
+        dropped — the format stores only non-zeros.
+        """
+        ctx_ids = np.asarray(ctx_ids, dtype=np.int64)
+        mids = np.asarray(mids, dtype=np.int64)
+        vals = np.asarray(vals, dtype=VAL_DTYPE)
+        if ctx_ids.size == 0:
+            return cls.empty()
+        key = ctx_ids * (1 << 16) + mids
+        order = np.argsort(key, kind="stable")
+        key, vals = key[order], vals[order]
+        uniq, inv = np.unique(key, return_inverse=True)
+        if combine == "sum":
+            cvals = np.zeros(uniq.size, VAL_DTYPE)
+            np.add.at(cvals, inv, vals)
+        elif combine == "last":
+            cvals = np.empty(uniq.size, VAL_DTYPE)
+            cvals[inv] = vals
+        else:
+            raise ValueError(combine)
+        keep = cvals != 0.0
+        uniq, cvals = uniq[keep], cvals[keep]
+        uctx = (uniq >> 16).astype(np.int64)
+        umid = (uniq & 0xFFFF).astype(MID_DTYPE)
+        # context boundaries
+        bounds = np.flatnonzero(np.diff(uctx, prepend=-1))
+        starts = np.concatenate([bounds, [uctx.size]]).astype(IDX_DTYPE)
+        return cls(uctx[bounds].astype(CTX_DTYPE), starts, umid, cvals)
+
+    @classmethod
+    def from_dense(cls, mat: np.ndarray, ctx_ids: np.ndarray | None = None) -> "SparseMetrics":
+        """From a dense (n_ctx x n_metrics) matrix (the HPCToolkit layout)."""
+        r, c = np.nonzero(mat)
+        rows = r if ctx_ids is None else np.asarray(ctx_ids)[r]
+        return cls.from_triplets(rows, c, mat[r, c])
+
+    # -- views ----------------------------------------------------------------
+    @property
+    def n_contexts(self) -> int:
+        return int(self.ctx.size)
+
+    @property
+    def n_values(self) -> int:
+        return int(self.val.size)
+
+    def to_dense(self, n_ctx: int, n_metrics: int) -> np.ndarray:
+        out = np.zeros((n_ctx, n_metrics), VAL_DTYPE)
+        rows = np.repeat(self.ctx.astype(np.int64), np.diff(self.start.astype(np.int64)))
+        out[rows, self.mid.astype(np.int64)] = self.val
+        return out
+
+    def triplets(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        rows = np.repeat(self.ctx.astype(np.int64), np.diff(self.start.astype(np.int64)))
+        return rows, self.mid.astype(np.int64), self.val
+
+    def context_slice(self, ctx_id: int) -> tuple[np.ndarray, np.ndarray]:
+        """All (metric, value) pairs for one context; O(log c)."""
+        k = int(np.searchsorted(self.ctx, ctx_id))
+        if k >= self.ctx.size or self.ctx[k] != ctx_id:
+            return np.empty(0, MID_DTYPE), np.empty(0, VAL_DTYPE)
+        lo, hi = int(self.start[k]), int(self.start[k + 1])
+        return self.mid[lo:hi], self.val[lo:hi]
+
+    def lookup(self, ctx_id: int, mid: int) -> float:
+        """Single value access: two binary searches (paper §3.1)."""
+        mids, vals = self.context_slice(ctx_id)
+        j = int(np.searchsorted(mids, mid))
+        if j < mids.size and mids[j] == mid:
+            return float(vals[j])
+        return 0.0
+
+    def remap_contexts(self, remap: np.ndarray) -> "SparseMetrics":
+        rows, mids, vals = self.triplets()
+        return SparseMetrics.from_triplets(np.asarray(remap)[rows], mids, vals)
+
+    # -- sizes (evaluation currency of the paper) ----------------------------
+    def nbytes(self) -> int:
+        return self.ctx.nbytes + self.start.nbytes + self.mid.nbytes + self.val.nbytes
+
+    @staticmethod
+    def dense_nbytes(n_ctx: int, n_metrics: int) -> int:
+        return n_ctx * n_metrics * np.dtype(VAL_DTYPE).itemsize
+
+    # -- serialization ---------------------------------------------------------
+    def encode(self) -> bytes:
+        out = io.BytesIO()
+        for a in (self.ctx, self.start, self.mid, self.val):
+            binio.write_array(out, a)
+        return out.getvalue()
+
+    @classmethod
+    def decode(cls, buf: bytes, off: int = 0) -> tuple["SparseMetrics", int]:
+        ctx, off = binio.unpack_array(buf, off)
+        start, off = binio.unpack_array(buf, off)
+        mid, off = binio.unpack_array(buf, off)
+        val, off = binio.unpack_array(buf, off)
+        return cls(ctx, start, mid, val), off
+
+
+@dataclass
+class Trace:
+    """Sample-based call-path trace: (timestamp, context) pairs (paper §4.1)."""
+
+    time: np.ndarray  # (t,) f64 seconds
+    ctx: np.ndarray   # (t,) u32 context ids
+
+    @classmethod
+    def empty(cls) -> "Trace":
+        return cls(np.empty(0, VAL_DTYPE), np.empty(0, CTX_DTYPE))
+
+    def nbytes(self) -> int:
+        return self.time.nbytes + self.ctx.nbytes
+
+    def remap_contexts(self, remap: np.ndarray) -> "Trace":
+        return Trace(self.time, np.asarray(remap)[self.ctx.astype(np.int64)].astype(CTX_DTYPE))
+
+
+@dataclass
+class MeasurementProfile:
+    """One per-worker profile file: the six sections of paper §4.1."""
+
+    environment: dict = field(default_factory=dict)       # section 1
+    identity: dict = field(default_factory=dict)          # section 2 (rank, stream, kind)
+    file_paths: list = field(default_factory=list)        # section 3 ("binaries")
+    tree: ContextTree = field(default_factory=ContextTree)  # section 4
+    trace: Trace = field(default_factory=Trace.empty)     # section 5
+    metrics: SparseMetrics = field(default_factory=SparseMetrics.empty)  # section 6
+
+    def save(self, path) -> int:
+        buf = io.BytesIO()
+        buf.write(PROFILE_MAGIC + struct.pack("<I", 1))
+        binio.write_json(buf, {
+            "environment": self.environment,
+            "identity": self.identity,
+            "file_paths": self.file_paths,
+        })
+        for a in self.tree.to_arrays().values():
+            binio.write_array(buf, a)
+        binio.write_array(buf, self.trace.time)
+        binio.write_array(buf, self.trace.ctx)
+        buf.write(self.metrics.encode())
+        data = buf.getvalue()
+        with open(path, "wb") as f:
+            f.write(data)
+        return len(data)
+
+    @classmethod
+    def load(cls, path) -> "MeasurementProfile":
+        with open(path, "rb") as f:
+            buf = f.read()
+        return cls.decode(buf)
+
+    @classmethod
+    def decode(cls, buf: bytes) -> "MeasurementProfile":
+        assert buf[:4] == PROFILE_MAGIC, "not a profile file"
+        off = 8
+        meta, off = binio.unpack_json(buf, off)
+        arrs = {}
+        for key in ("parent", "kind", "name_id", "names"):
+            arrs[key], off = binio.unpack_array(buf, off)
+        tree = ContextTree.from_arrays(arrs)
+        ttime, off = binio.unpack_array(buf, off)
+        tctx, off = binio.unpack_array(buf, off)
+        metrics, off = SparseMetrics.decode(buf, off)
+        return cls(meta["environment"], meta["identity"], meta["file_paths"],
+                   tree, Trace(ttime, tctx), metrics)
+
+    def nbytes(self) -> int:
+        return self.metrics.nbytes() + self.trace.nbytes()

@@ -1,0 +1,146 @@
+"""Cross-profile summary statistics (paper §4.1.2, §4.2.2).
+
+For every (context, metric) the analysis accumulates statistics of the
+non-zero costs observed across profiles: sum, count-of-nonzeros, min, max
+and sum-of-squares, finalized into mean/std once the database "completes".
+
+The paper uses per-context concurrent hash tables with relaxed-atomic FP
+accumulators.  The TPU/data-parallel adaptation is *sorted segmented
+reduction*: keys are packed ``ctx * 2^16 | mid`` (u64), partial updates are
+buffered and lazily compacted with sort + ``reduceat`` — contention-free and
+mergeable, so the same object implements the leaves and the internal nodes
+of the process-level reduction tree (paper §4.4 phase 2).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.sparse import SparseMetrics
+
+KEY_SHIFT = 16  # key = ctx << 16 | mid
+
+_FIELDS = ("sum", "cnt", "vmin", "vmax", "sumsq")
+
+
+def pack_keys(ctx: np.ndarray, mid: np.ndarray) -> np.ndarray:
+    return (np.asarray(ctx, np.uint64) << np.uint64(KEY_SHIFT)) | np.asarray(mid, np.uint64)
+
+
+def unpack_keys(keys: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    return (keys >> np.uint64(KEY_SHIFT)).astype(np.int64), (keys & np.uint64(0xFFFF)).astype(np.int64)
+
+
+def _segment_reduce(keys, svals, cvals, mins, maxs, sqs):
+    """Sort by key and reduce each segment; returns compacted arrays."""
+    order = np.argsort(keys, kind="stable")
+    keys = keys[order]
+    svals, cvals = svals[order], cvals[order]
+    mins, maxs, sqs = mins[order], maxs[order], sqs[order]
+    bounds = np.flatnonzero(np.diff(keys.view(np.int64), prepend=-1))
+    return (
+        keys[bounds],
+        np.add.reduceat(svals, bounds),
+        np.add.reduceat(cvals, bounds),
+        np.minimum.reduceat(mins, bounds),
+        np.maximum.reduceat(maxs, bounds),
+        np.add.reduceat(sqs, bounds),
+    )
+
+
+@dataclass
+class StatsAccumulator:
+    """Mergeable (ctx, metric) -> {sum, count, min, max, sumsq} accumulator."""
+
+    keys: np.ndarray
+    sum: np.ndarray
+    cnt: np.ndarray
+    vmin: np.ndarray
+    vmax: np.ndarray
+    sumsq: np.ndarray
+
+    def __init__(self):
+        self.keys = np.empty(0, np.uint64)
+        self.sum = np.empty(0, np.float64)
+        self.cnt = np.empty(0, np.float64)
+        self.vmin = np.empty(0, np.float64)
+        self.vmax = np.empty(0, np.float64)
+        self.sumsq = np.empty(0, np.float64)
+        self._buf: list[tuple[np.ndarray, np.ndarray]] = []
+        self._buf_n = 0
+
+    # -- streaming updates (the + op of paper Fig. 3) -----------------------
+    def update(self, metrics: SparseMetrics) -> None:
+        rows, mids, vals = metrics.triplets()
+        if rows.size == 0:
+            return
+        self._buf.append((pack_keys(rows, mids), vals))
+        self._buf_n += rows.size
+        if self._buf_n >= 1 << 20:
+            self._compact()
+
+    def _compact(self) -> None:
+        if not self._buf:
+            return
+        k = np.concatenate([self.keys] + [b[0] for b in self._buf])
+        v = np.concatenate([np.zeros(self.keys.size)] + [b[1] for b in self._buf])
+        # rows from the existing accumulator carry their already-reduced
+        # fields; fresh rows contribute (v, 1, v, v, v^2).
+        n0 = self.keys.size
+        s = np.concatenate([self.sum, v[n0:]])
+        c = np.concatenate([self.cnt, np.ones(v.size - n0)])
+        mn = np.concatenate([self.vmin, v[n0:]])
+        mx = np.concatenate([self.vmax, v[n0:]])
+        sq = np.concatenate([self.sumsq, v[n0:] ** 2])
+        self.keys, self.sum, self.cnt, self.vmin, self.vmax, self.sumsq = _segment_reduce(
+            k, s, c, mn, mx, sq
+        )
+        self._buf, self._buf_n = [], 0
+
+    # -- reduction-tree merge (paper §4.4) -----------------------------------
+    def merge(self, other: "StatsAccumulator") -> None:
+        other._compact()
+        self._compact()
+        k = np.concatenate([self.keys, other.keys])
+        self.keys, self.sum, self.cnt, self.vmin, self.vmax, self.sumsq = _segment_reduce(
+            k,
+            np.concatenate([self.sum, other.sum]),
+            np.concatenate([self.cnt, other.cnt]),
+            np.concatenate([self.vmin, other.vmin]),
+            np.concatenate([self.vmax, other.vmax]),
+            np.concatenate([self.sumsq, other.sumsq]),
+        )
+
+    # -- completion ----------------------------------------------------------
+    def finalize(self) -> dict[str, np.ndarray]:
+        self._compact()
+        ctx, mid = unpack_keys(self.keys)
+        mean = np.divide(self.sum, self.cnt, out=np.zeros_like(self.sum), where=self.cnt > 0)
+        var = np.maximum(self.sumsq / np.maximum(self.cnt, 1) - mean**2, 0.0)
+        return {
+            "ctx": ctx, "mid": mid,
+            "sum": self.sum, "count": self.cnt, "mean": mean,
+            "min": self.vmin, "max": self.vmax, "std": np.sqrt(var),
+        }
+
+    def __len__(self) -> int:
+        self._compact()
+        return int(self.keys.size)
+
+    # -- (de)serialization for cross-process reduction trees ------------------
+    def to_arrays(self) -> dict[str, np.ndarray]:
+        self._compact()
+        return {"keys": self.keys, "sum": self.sum, "cnt": self.cnt,
+                "vmin": self.vmin, "vmax": self.vmax, "sumsq": self.sumsq}
+
+    @classmethod
+    def from_arrays(cls, arrs) -> "StatsAccumulator":
+        acc = cls()
+        acc.keys = np.asarray(arrs["keys"], np.uint64)
+        acc.sum = np.asarray(arrs["sum"], np.float64)
+        acc.cnt = np.asarray(arrs["cnt"], np.float64)
+        acc.vmin = np.asarray(arrs["vmin"], np.float64)
+        acc.vmax = np.asarray(arrs["vmax"], np.float64)
+        acc.sumsq = np.asarray(arrs["sumsq"], np.float64)
+        return acc

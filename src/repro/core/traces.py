@@ -1,0 +1,78 @@
+"""Integrated trace file (paper §4, footnote 2).
+
+"The integrated trace file format is simple: a segment for each trace and a
+table of contents that points to the start and end of each trace.  The
+starting location of each trace is computed with a prefix sum over trace
+lengths.  Traces can be written in parallel."
+"""
+from __future__ import annotations
+
+import os
+import struct
+import threading
+
+import numpy as np
+
+from repro.core.sparse import Trace
+
+TRC_MAGIC = b"RTRC"
+_HEADER = 16
+
+
+def segment_nbytes(n_samples: int) -> int:
+    return 12 * n_samples  # f64 time + u32 ctx per sample
+
+
+class TraceDBWriter:
+    """Offsets from a prefix sum over (known) trace lengths; parallel pwrites."""
+
+    def __init__(self, path, lengths: list[int]):
+        self.path = str(path)
+        n = len(lengths)
+        sizes = np.array([segment_nbytes(l) for l in lengths], dtype=np.uint64)
+        self.offsets = np.zeros(n + 1, dtype=np.uint64)
+        np.cumsum(sizes, out=self.offsets[1:])
+        self.lengths = np.asarray(lengths, dtype=np.uint64)
+        data_start = _HEADER + 16 * n + 8
+        self.offsets += np.uint64(data_start)
+        self._f = open(self.path, "w+b")
+        self._fd = self._f.fileno()
+        self._f.write(TRC_MAGIC + struct.pack("<I", 1) + struct.pack("<Q", n))
+        toc = np.empty((n, 2), dtype=np.uint64)
+        toc[:, 0] = self.offsets[:-1]
+        toc[:, 1] = self.lengths
+        self._f.write(toc.tobytes())
+        self._f.write(struct.pack("<Q", int(self.offsets[-1])))
+        self._f.flush()  # subsequent trace writes are positional pwrites
+        self._lock = threading.Lock()
+
+    def write_trace(self, idx: int, trace: Trace) -> None:
+        assert trace.time.size == int(self.lengths[idx])
+        buf = trace.time.astype("<f8").tobytes() + trace.ctx.astype("<u4").tobytes()
+        os.pwrite(self._fd, buf, int(self.offsets[idx]))
+
+    def close(self):
+        self._f.truncate(int(self.offsets[-1]))
+        self._f.close()
+
+
+class TraceDBReader:
+    def __init__(self, path):
+        self._f = open(str(path), "rb")
+        self._fd = self._f.fileno()
+        head = os.pread(self._fd, _HEADER, 0)
+        assert head[:4] == TRC_MAGIC
+        (self.n,) = struct.unpack_from("<Q", head, 8)
+        self.n = int(self.n)
+        toc = os.pread(self._fd, 16 * self.n, _HEADER)
+        self.toc = np.frombuffer(toc, dtype=np.uint64).reshape(self.n, 2)
+
+    def trace(self, idx: int) -> Trace:
+        off, ln = int(self.toc[idx, 0]), int(self.toc[idx, 1])
+        buf = os.pread(self._fd, segment_nbytes(ln), off)
+        t = np.frombuffer(buf[: 8 * ln], dtype="<f8")
+        c = np.frombuffer(buf[8 * ln :], dtype="<u4")
+        return Trace(t, c)
+
+    def close(self):
+        self._f.close()

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the paper's aggregation hot spots.
+
+Each kernel: ``<name>.py`` (pl.pallas_call + BlockSpec VMEM tiling),
+wrapped in :mod:`repro.kernels.ops` (jit + padding + backend selection) and
+oracled by :mod:`repro.kernels.ref` (pure jnp).  Validated on CPU via
+``interpret=True``; BlockSpecs target TPU v5e (8x128 lanes, 16 MiB VMEM).
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

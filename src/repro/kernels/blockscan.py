@@ -1,0 +1,52 @@
+"""Pallas TPU kernel: blocked multi-column prefix sum.
+
+The propagation hot spot (paper §4.1.2) after the preorder rewrite
+(DESIGN.md §4): inclusive metric costs are ``cumsum[end[i]] - cumsum[i]``
+over the preorder-scattered exclusive values, and CMS offsets (§4.3.2) are
+an exclusive scan over per-context sizes.  Both reduce to one long prefix
+sum.
+
+TPU shape: grid iterates value blocks sequentially (TPU grids are
+sequential per core), carrying the running block total in a VMEM scratch
+accumulator — the parallel-scan "carry" without atomics.  Rows are tiled
+(block_n x M); M is the number of metrics a profile observed (small), kept
+whole in-line so the scan is one pass over HBM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_N = 1024
+
+
+def _scan_kernel(x_ref, o_ref, carry_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    x = x_ref[...]                       # (B, M)
+    c = carry_ref[...]                   # (1, M)
+    s = jnp.cumsum(x, axis=0) + c        # inclusive within block + carry
+    o_ref[...] = s
+    carry_ref[...] = s[-1:, :]
+
+
+def blockscan_pallas(x: jax.Array, *, block_n: int = DEFAULT_BLOCK_N,
+                     interpret: bool = False) -> jax.Array:
+    """Inclusive prefix sum along axis 0 of (N, M); N % block_n == 0."""
+    n, m = x.shape
+    assert n % block_n == 0
+    return pl.pallas_call(
+        _scan_kernel,
+        grid=(n // block_n,),
+        in_specs=[pl.BlockSpec((block_n, m), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_n, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, m), x.dtype),
+        scratch_shapes=[pltpu.VMEM((1, m), x.dtype)],
+        interpret=interpret,
+    )(x)

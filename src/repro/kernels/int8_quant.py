@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: block-wise symmetric int8 quantization.
+
+Distributed-optimization substrate (DESIGN.md §8): gradients crossing the
+pod boundary (the slow DCN-analog hop) are compressed with block-scaled
+int8 + error feedback.  Each 1-D block of ``block_n`` values gets one f32
+scale ``max(|x|)/127``; the residual (feedback) is returned so the
+optimizer can fold it into the next step.
+
+VMEM: a (block_n,) f32 tile + int8 output tile; block_n = 2048 keeps both
+lanes-aligned and trivially resident.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 2048
+
+
+def _quant_kernel(x_ref, q_ref, scale_ref, err_ref):
+    x = x_ref[...]
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    q_ref[...] = q
+    scale_ref[...] = jnp.reshape(scale, scale_ref.shape).astype(jnp.float32)
+    err_ref[...] = x - q.astype(x.dtype) * scale
+
+
+def int8_quant_pallas(x: jax.Array, *, block_n: int = DEFAULT_BLOCK_N,
+                      interpret: bool = False):
+    """x (N,) f32, N % block_n == 0 -> (q int8 (N,), scales f32 (N/B,), err f32 (N,))."""
+    n = x.shape[0]
+    assert n % block_n == 0
+    nb = n // block_n
+    return pl.pallas_call(
+        _quant_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((block_n,), lambda i: (i,))],
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int8),
+            jax.ShapeDtypeStruct((nb,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), x.dtype),
+        ],
+        interpret=interpret,
+    )(x)
+
+
+def int8_dequant(q: jax.Array, scales: jax.Array, block_n: int = DEFAULT_BLOCK_N) -> jax.Array:
+    return (q.astype(jnp.float32).reshape(-1, block_n)
+            * scales[:, None]).reshape(-1)

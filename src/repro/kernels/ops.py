@@ -1,0 +1,120 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+Wrappers own padding/alignment (block-multiple lengths, out-of-range
+sentinel ids) and backend selection: on TPU the compiled kernels run
+natively; on the CPU container they execute under ``interpret=True`` so
+every test validates the actual kernel bodies against the jnp oracles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import blockscan as _bs
+from repro.kernels import int8_quant as _q8
+from repro.kernels import scatter_add as _sc
+from repro.kernels import segstats as _ss
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, mult: int, fill) -> jax.Array:
+    n = x.shape[0]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    return jnp.concatenate([x, jnp.full((pad,) + x.shape[1:], fill, x.dtype)])
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "block_n", "block_s"))
+def segstats(ids: jax.Array, vals: jax.Array, num_segments: int,
+             block_n: int = _ss.DEFAULT_BLOCK_N,
+             block_s: int = _ss.DEFAULT_BLOCK_S) -> jax.Array:
+    """Segmented stats (S, 8): [sum, cnt, min, max, sumsq, ...].
+
+    ``ids`` sorted ascending int32; values f32.  Empty segments finalize to
+    min=max=0 (matching :class:`repro.core.stats.StatsAccumulator`).
+    """
+    block_s = min(block_s, max(128, num_segments))
+    ids = _pad_to(ids.astype(jnp.int32), block_n, num_segments)
+    vals = _pad_to(vals.astype(jnp.float32), block_n, 0)
+    out = _ss.segstats_pallas(ids, vals, num_segments, block_n=block_n,
+                              block_s=block_s, interpret=_interpret())
+    out = out[:num_segments]
+    empty = out[:, 1] == 0
+    out = out.at[:, 2].set(jnp.where(empty, 0.0, out[:, 2]))
+    out = out.at[:, 3].set(jnp.where(empty, 0.0, out[:, 3]))
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def blockscan(x: jax.Array, block_n: int = _bs.DEFAULT_BLOCK_N) -> jax.Array:
+    """Inclusive prefix sum along axis 0; accepts (N,) or (N, M)."""
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[:, None]
+    n = x.shape[0]
+    block_n = min(block_n, max(8, n))
+    xp = _pad_to(x, block_n, 0)
+    out = _bs.blockscan_pallas(xp, block_n=block_n, interpret=_interpret())[:n]
+    return out[:, 0] if squeeze else out
+
+
+def exclusive_scan(x: jax.Array) -> jax.Array:
+    """Exclusive scan with total appended: (N,) -> (N+1,); CMS offsets."""
+    inc = blockscan(x)
+    return jnp.concatenate([jnp.zeros((1,) + x.shape[1:], inc.dtype), inc])
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "block_n", "block_s"))
+def scatter_add(ids: jax.Array, vals: jax.Array, num_segments: int,
+                block_n: int = _sc.DEFAULT_BLOCK_N,
+                block_s: int = _sc.DEFAULT_BLOCK_S) -> jax.Array:
+    """out[s] += vals[ids == s]; vals (N,) or (N, M); unsorted ids allowed."""
+    block_s = min(block_s, max(128, num_segments))
+    squeeze = vals.ndim == 1
+    if squeeze:
+        vals = vals[:, None]
+    ids = _pad_to(ids.astype(jnp.int32), block_n, num_segments)
+    vals = _pad_to(vals.astype(jnp.float32), block_n, 0)
+    out = _sc.scatter_add_pallas(ids, vals, num_segments, block_n=block_n,
+                                 block_s=block_s, interpret=_interpret())
+    out = out[:num_segments]
+    return out[:, 0] if squeeze else out
+
+
+def histogram(ids: jax.Array, num_segments: int) -> jax.Array:
+    return scatter_add(ids, jnp.ones(ids.shape[0], jnp.float32), num_segments)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def int8_quant(x: jax.Array, block_n: int = _q8.DEFAULT_BLOCK_N):
+    """Block-scaled int8 quantization: (q, scales, err); pads internally."""
+    n = x.shape[0]
+    block_n = min(block_n, max(128, n))
+    xp = _pad_to(x.astype(jnp.float32), block_n, 0)
+    q, s, e = _q8.int8_quant_pallas(xp, block_n=block_n, interpret=_interpret())
+    return q[:n], s, e[:n]
+
+
+def int8_dequant(q: jax.Array, scales: jax.Array, n: int,
+                 block_n: int = _q8.DEFAULT_BLOCK_N) -> jax.Array:
+    block_n = min(block_n, max(128, n))
+    npad = scales.shape[0] * block_n
+    qp = _pad_to(q, npad - q.shape[0] + q.shape[0], 0) if q.shape[0] < npad else q
+    full = (qp.astype(jnp.float32).reshape(-1, block_n) * scales[:, None]).reshape(-1)
+    return full[:n]
+
+
+# -- composite: the propagation primitive (paper §4.1.2, DESIGN.md §4) -------
+
+def inclusive_from_exclusive(dense_preorder: jax.Array, end: jax.Array) -> jax.Array:
+    """inclusive[i] = cumsum[end[i]] - cumsum[i] over preorder values (N, M)."""
+    inc = blockscan(dense_preorder)
+    ps = jnp.concatenate([jnp.zeros((1, dense_preorder.shape[1]), inc.dtype), inc])
+    n = dense_preorder.shape[0]
+    return ps[end] - ps[jnp.arange(n)]

@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segstats_ref(ids: jax.Array, vals: jax.Array, num_segments: int) -> jax.Array:
+    """(S, 8) [sum, cnt, min, max, sumsq, 0, 0, 0]; empty segs -> min=+inf/max=-inf."""
+    ids = ids.astype(jnp.int32)
+    vals = vals.astype(jnp.float32)
+    in_range = ids < num_segments
+    safe = jnp.where(in_range, ids, 0)
+    w = in_range.astype(jnp.float32)
+    s = jax.ops.segment_sum(vals * w, safe, num_segments)
+    c = jax.ops.segment_sum(w, safe, num_segments)
+    q = jax.ops.segment_sum(vals * vals * w, safe, num_segments)
+    mn = jax.ops.segment_min(jnp.where(in_range, vals, jnp.inf), safe, num_segments)
+    mx = jax.ops.segment_max(jnp.where(in_range, vals, -jnp.inf), safe, num_segments)
+    zero = jnp.zeros_like(s)
+    return jnp.stack([s, c, mn, mx, q, zero, zero, zero], axis=1)
+
+
+def blockscan_ref(x: jax.Array) -> jax.Array:
+    return jnp.cumsum(x, axis=0)
+
+
+def scatter_add_ref(ids: jax.Array, vals: jax.Array, num_segments: int) -> jax.Array:
+    ids = ids.astype(jnp.int32)
+    in_range = ids < num_segments
+    safe = jnp.where(in_range, ids, 0)
+    w = in_range.astype(vals.dtype)[:, None]
+    return jax.ops.segment_sum(vals * w, safe, num_segments).astype(jnp.float32)
+
+
+def int8_quant_ref(x: jax.Array, block_n: int):
+    xb = x.reshape(-1, block_n)
+    amax = jnp.max(jnp.abs(xb), axis=1)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xb / scale[:, None]), -127, 127).astype(jnp.int8)
+    err = xb - q.astype(x.dtype) * scale[:, None]
+    return q.reshape(-1), scale.astype(jnp.float32), err.reshape(-1)

@@ -1,0 +1,54 @@
+"""Post-mortem analysis CLI — the hpcprof analog.
+
+    PYTHONPATH=src python -m repro.launch.analyze runs/profiles/*.rprf \
+        --out runs/db --threads 4 [--ranks 2] [--heap] [--static-lb]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.core.aggregate import AggregationConfig, StreamingAggregator
+from repro.core.reduction import aggregate_multiprocess
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("profiles", nargs="+")
+    ap.add_argument("--out", default="runs/db")
+    ap.add_argument("--threads", type=int, default=4)
+    ap.add_argument("--ranks", type=int, default=1,
+                    help=">1 uses the MPI-analog multiprocess driver")
+    ap.add_argument("--heap", action="store_true",
+                    help="paper-faithful heap-merge CMS gather")
+    ap.add_argument("--static-lb", action="store_true",
+                    help="static context groups instead of GLB")
+    ap.add_argument("--no-cms", action="store_true")
+    ap.add_argument("--no-traces", action="store_true")
+    args = ap.parse_args()
+
+    cfg = AggregationConfig(
+        n_threads=args.threads,
+        cms_strategy="heap" if args.heap else "vectorized",
+        cms_balance="static" if args.static_lb else "dynamic",
+        write_cms=not args.no_cms,
+        write_traces=not args.no_traces,
+    )
+    if args.ranks > 1:
+        res = aggregate_multiprocess(args.profiles, args.out,
+                                     n_ranks=args.ranks,
+                                     threads_per_rank=args.threads,
+                                     config=cfg)
+    else:
+        res = StreamingAggregator(args.out, cfg).run(args.profiles)
+    print(json.dumps({
+        "pms": res.pms_path, "cms": res.cms_path, "traces": res.trace_path,
+        "profiles": res.n_profiles, "contexts": res.n_contexts,
+        "values": res.n_values, "sizes": res.sizes,
+        "timings": {k: round(v, 4) if isinstance(v, float) else v
+                    for k, v in res.timings.items()},
+    }, indent=2))
+
+
+if __name__ == "__main__":
+    main()

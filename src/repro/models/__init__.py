@@ -1,0 +1,3 @@
+from repro.models.api import build_model
+
+__all__ = ["build_model"]

@@ -1,0 +1,230 @@
+"""Model API: build any assigned architecture, derive params/specs/inputs.
+
+``build_model(cfg)`` returns a model object exposing:
+
+* ``param_defs() / cache_defs(B, S)`` — ParamDef trees (see models.params)
+* ``loss_fn(params, batch)`` — training loss
+* ``prefill(params, batch) -> (logits, cache)``
+* ``decode_step(params, cache, batch) -> (logits, cache)``
+
+and this module adds the shape plumbing shared by the dry-run, the smoke
+tests, and the launchers: input ShapeDtypeStructs per (arch x shape) cell,
+sharding-rule selection per config, and 6ND model-FLOP accounting.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import params as P
+from repro.models.lm import TransformerLM
+from repro.models.ssm import MambaLM, XLSTMLM
+from repro.models.whisper import WhisperModel
+from repro.sharding.specs import ShardingRules, decode_rules, logical_to_spec, train_rules
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return TransformerLM(cfg)
+    if cfg.family == "audio":
+        return WhisperModel(cfg)
+    if cfg.family == "hybrid" or (cfg.family == "ssm" and cfg.ssm_state):
+        return MambaLM(cfg)
+    if cfg.family == "ssm":
+        return XLSTMLM(cfg)
+    raise ValueError(cfg.family)
+
+
+# ---------------------------------------------------------------------------
+# sharding-rule selection (per config x mesh x step kind)
+# ---------------------------------------------------------------------------
+
+def rules_kind_is_decode(kind: str) -> bool:
+    return kind.startswith("decode")
+
+
+def rules_for(cfg: ModelConfig, mesh, kind: str, *, fsdp: bool | None = None,
+              seq_shard: bool = False) -> ShardingRules:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model_size = sizes.get("model", 1)
+    if fsdp is None:
+        # FSDP whenever TP alone cannot comfortably fit the training state:
+        # bf16 params + f32 grads + f32 Adam moments = 14 B/param
+        n = P.count(build_model(cfg).param_defs())
+        fsdp = (14 * n / model_size) > 8e9
+    if kind == "train":
+        rules = train_rules(sizes, fsdp=fsdp, seq_shard=seq_shard)
+    else:
+        # long-context decode: batch too small for the data axis -> shard
+        # the KV/cross sequence over `data` instead (SP decode)
+        rules = decode_rules(sizes, fsdp=fsdp, kv_seq_shard=kind == "decode_sp")
+    over = {}
+    # MoE placement: EP when experts divide the model axis, else TP-in-expert.
+    # With EP the (E, C, D) dispatch buffers shard on E; without it they
+    # shard on the capacity dim over the data axes (measured: C-sharding an
+    # E-sharded buffer forces full-buffer reshard all-reduces — 9x worse).
+    if cfg.n_experts:
+        if cfg.n_experts % model_size == 0:
+            over.update(experts="model", expert_ff=None, moe_cap=None)
+        else:
+            over.update(experts=None, expert_ff="model",
+                        moe_cap=rules.axis("tokens"))
+    # vocab that doesn't divide the model axis: replicate embeddings
+    if cfg.vocab_size % model_size != 0:
+        over.update(vocab=None)
+    # attention-head divisibility:
+    heads_div = cfg.n_heads % model_size == 0
+    kvh_div = cfg.n_kv_heads % model_size == 0 if cfg.n_kv_heads else True
+    hd_div = cfg.hd % model_size == 0
+    if not heads_div:
+        over.update(heads=None)
+    if cfg.n_kv_heads and not kvh_div:
+        if rules_kind_is_decode(kind) or not heads_div:
+            # decode: the KV cache must shard -> split head_dim; the tiny
+            # single-token scores psum across hd shards (cheap at S_q=1)
+            over.update(kv_heads=None,
+                        head_dim="model" if hd_div else None)
+        else:
+            # train/prefill: replicate KV, shard q heads; the model
+            # expands GQA->MHA locally (see models.lm._kv_expand)
+            over.update(kv_heads=None, head_dim=None)
+    # SSM inner dim must divide the model axis; fall back to replicated
+    if cfg.ssm_state and cfg.d_inner % model_size != 0:
+        over.update(ssm_inner=None)
+    if over:
+        rules = rules.with_overrides(**over)
+    return rules
+
+
+# ---------------------------------------------------------------------------
+# per-cell inputs (ShapeDtypeStructs — no allocation)
+# ---------------------------------------------------------------------------
+
+def batch_struct(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Input ShapeDtypeStructs for one (arch x shape) cell."""
+    B = shape.global_batch
+    S = shape.seq_len
+    tok = lambda b, s: jax.ShapeDtypeStruct((b, s), jnp.int32)
+    emb = jnp.dtype(cfg.dtype)
+    if cfg.family == "audio":
+        # seq_len = encoder frames (stub frontend -> embeddings); decoder text
+        S_dec = min(cfg.max_decoder_len, S)
+        if shape.kind == "train":
+            return {"frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), emb),
+                    "tokens": tok(B, S_dec)}
+        if shape.kind == "prefill":
+            return {"frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), emb),
+                    "tokens": tok(B, S_dec)}
+        return {"tokens": tok(B, 1)}
+    base = {}
+    if shape.kind in ("train", "prefill"):
+        base["tokens"] = tok(B, S)
+    else:
+        base["tokens"] = tok(B, 1)
+    if cfg.family == "vlm" and shape.kind in ("train", "prefill"):
+        base["vision_embed"] = jax.ShapeDtypeStruct(
+            (B, cfg.vision_tokens, cfg.d_model), emb)
+    return base
+
+
+def batch_logical(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    log = {"tokens": ("batch", "seq") if shape.kind != "decode" else ("batch", None)}
+    if cfg.family == "audio" and shape.kind != "decode":
+        log["frames"] = ("batch", "seq", "embed")
+    if cfg.family == "vlm" and shape.kind in ("train", "prefill"):
+        log["vision_embed"] = ("batch", None, "embed")
+    return log
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, rules: ShardingRules):
+    return {k: logical_to_spec(v, rules)
+            for k, v in batch_logical(cfg, shape).items()}
+
+
+def cache_struct_and_specs(model, cfg: ModelConfig, shape: ShapeConfig,
+                           rules: ShardingRules):
+    """Decode-cell cache: ShapeDtypeStructs + PartitionSpecs."""
+    defs = model.cache_defs(shape.global_batch, shape.seq_len)
+    f32 = {"len"}
+
+    def sds(d: P.ParamDef, name_hint=None):
+        dt = jnp.int32 if d.shape == () else (
+            jnp.float32 if len(d.shape) == 5 and d.shape[-1] == d.shape[-2] + 0
+            else jnp.dtype(cfg.dtype))
+        return jax.ShapeDtypeStruct(d.shape, dt)
+
+    # simpler: kv caches in model dtype, ssm states f32, len int32
+    def sds2(path, d):
+        if d.shape == ():
+            return jax.ShapeDtypeStruct((), jnp.int32)
+        if "ssm" in path:
+            dt = jnp.float32 if path[-1] in ("h", "c", "n", "hp") else jnp.dtype(cfg.dtype)
+            return jax.ShapeDtypeStruct(d.shape, dt)
+        return jax.ShapeDtypeStruct(d.shape, jnp.dtype(cfg.dtype))
+
+    structs = _map_with_path(sds2, defs)
+    specs = P.specs(defs, rules)
+    return structs, specs
+
+
+def cache_init(model, cfg: ModelConfig, batch_size: int, max_len: int):
+    """Allocated zero cache (smoke tests / serving)."""
+    defs = model.cache_defs(batch_size, max_len)
+
+    def mk(path, d):
+        if d.shape == ():
+            return jnp.zeros((), jnp.int32)
+        if "ssm" in path:
+            dt = jnp.float32 if path[-1] in ("h", "c", "n", "hp") else jnp.dtype(cfg.dtype)
+        else:
+            dt = jnp.dtype(cfg.dtype)
+        fill = jnp.ones if d.init == "ones" else jnp.zeros
+        return fill(d.shape, dt)
+
+    return _map_with_path(mk, defs)
+
+
+def _map_with_path(fn, tree, path=()):
+    if isinstance(tree, dict):
+        return {k: _map_with_path(fn, v, path + (k,)) for k, v in tree.items()}
+    if isinstance(tree, tuple):
+        return tuple(_map_with_path(fn, v, path + (str(i),))
+                     for i, v in enumerate(tree))
+    return fn(path, tree)
+
+
+# ---------------------------------------------------------------------------
+# 6ND model-FLOP accounting (roofline numerator)
+# ---------------------------------------------------------------------------
+
+def n_params(cfg: ModelConfig) -> int:
+    return P.count(build_model(cfg).param_defs())
+
+
+def n_active_params(cfg: ModelConfig) -> int:
+    """MoE: only top_k of n_experts expert params are active per token."""
+    if not cfg.n_experts:
+        return n_params(cfg)
+    model = build_model(cfg)
+    defs = model.param_defs()
+    total = P.count(defs)
+    expert = sum(P.count({k: v}) for k, v in defs["layers"].items()
+                 if k.startswith("we_"))
+    return total - expert + expert * cfg.top_k // cfg.n_experts
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS = 6*N*D tokens (train) / 2*N*D (inference step)."""
+    n = n_active_params(cfg)
+    if shape.kind == "train":
+        toks = shape.global_batch * shape.seq_len
+        if cfg.family == "audio":
+            toks = shape.global_batch * (shape.seq_len
+                                         + min(cfg.max_decoder_len, shape.seq_len))
+        return 6.0 * n * toks
+    if shape.kind == "prefill":
+        toks = shape.global_batch * shape.seq_len
+        return 2.0 * n * toks
+    return 2.0 * n * shape.global_batch  # one decoded token per sequence

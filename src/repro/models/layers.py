@@ -1,0 +1,215 @@
+"""Shared model layers: norms, RoPE, chunked (flash-style) attention, GLU
+MLPs, embeddings, chunked cross-entropy.
+
+Everything is pure JAX (`jax.lax` control flow) so every architecture
+lowers/compiles for the dry-run on any backend.  Memory-critical paths are
+chunked so no (S x S) score tensor or (B, S, V) logit tensor is ever
+materialized:
+
+* attention runs block-wise with an online-softmax accumulator
+  (``lax.scan`` over KV blocks; optional "triangle" mode skips fully-masked
+  future blocks — a §Perf lever that halves causal attention FLOPs);
+* the LM loss scans over sequence chunks so vocab logits appear only in
+  (B, chunk, V) tiles.
+
+Sharding is annotated with logical names via ``repro.sharding.constrain``.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import constrain
+
+
+def rms_norm(x, w, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def rope(x, positions, theta: float):
+    """x (..., S, H, hd), positions (..., S) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None, None] * freqs  # (..., S, 1, half)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _online_softmax_step(m, l, acc, s, vb):
+    """One flash-attention accumulation step; all f32."""
+    m_new = jnp.maximum(m, s.max(axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m - m_new)
+    l_new = l * corr + p.sum(axis=-1)
+    acc_new = acc * corr[..., None] + jnp.einsum(
+        "bqkgt,btkd->bqkgd", p, vb, preferred_element_type=jnp.float32)
+    return m_new, l_new, acc_new
+
+
+def flash_attention(q, k, v, *, causal: bool, q_offset=0,
+                    q_chunk: int = 512, kv_chunk: int = 1024,
+                    mode: str = "masked"):
+    """Block-wise attention with online softmax.
+
+    q (B, Sq, H, hd); k/v (B, T, KVH, hd); GQA via H = KVH * G.
+    ``q_offset`` is the absolute position of q[0] (prefill continuation).
+    ``mode="triangle"``: python-unrolled q blocks, each scanning only the
+    KV blocks at or before it (exact causal FLOPs); ``"masked"``: two
+    nested scans over all blocks with masking (half the FLOPs wasted but
+    the smallest HLO).
+    """
+    B, Sq0, H, hd = q.shape
+    T0, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    scale = 1.0 / math.sqrt(hd)
+    qc = min(Sq0, max(q_chunk, Sq0 // 16))
+    kvc = min(T0, max(kv_chunk, T0 // 32))
+    # pad ragged sequence lengths up to chunk multiples (masked below)
+    Sq = -(-Sq0 // qc) * qc
+    T = -(-T0 // kvc) * kvc
+    if Sq != Sq0:
+        q = jnp.pad(q, ((0, 0), (0, Sq - Sq0), (0, 0), (0, 0)))
+    if T != T0:
+        k = jnp.pad(k, ((0, 0), (0, T - T0), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, T - T0), (0, 0), (0, 0)))
+    nq, nk = Sq // qc, T // kvc
+
+    qb = (q.reshape(B, nq, qc, KVH, G, hd) * scale).astype(q.dtype)
+    kb = k.reshape(B, nk, kvc, KVH, hd)
+    vb = v.reshape(B, nk, kvc, KVH, hd)
+    q_pos = q_offset + jnp.arange(Sq).reshape(nq, qc)
+
+    def kv_scan(qi_block, q_block, kv_blocks):
+        """Scan one q block over a stack of kv blocks (nb, B, kvc, KVH, hd)."""
+        nb = kv_blocks[0].shape[0]
+        m0 = jnp.full((B, qc, KVH, G), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, qc, KVH, G), jnp.float32)
+        a0 = jnp.zeros((B, qc, KVH, G, hd), jnp.float32)
+
+        def body(carry, inp):
+            m, l, acc = carry
+            kblk, vblk, kidx = inp
+            s = jnp.einsum("bqkgd,btkd->bqkgt", q_block, kblk,
+                           preferred_element_type=jnp.float32)
+            kv_pos = kidx * kvc + jnp.arange(kvc)
+            valid = kv_pos < T0  # ragged-length padding
+            if causal:
+                valid = valid[None, :] & (
+                    q_pos[qi_block][:, None] >= kv_pos[None, :])
+                s = jnp.where(valid[None, :, None, None, :], s, -jnp.inf)
+            else:
+                s = jnp.where(valid[None, None, None, None, :], s, -jnp.inf)
+            return _online_softmax_step(m, l, acc, s, vblk), None
+
+        # checkpoint per KV step: without this, AD stacks every f32 score
+        # block (s, p, masks) as scan residuals — measured at ~1/3 of total
+        # HBM traffic and several GiB of peak memory.  With it, only the
+        # small (m, l, acc) carries are saved; scores recompute in bwd.
+        (m, l, acc), _ = jax.lax.scan(jax.checkpoint(body), (m0, l0, a0),
+                                      (kv_blocks[0], kv_blocks[1],
+                                       jnp.arange(nb) + kv_blocks[2]))
+        l = jnp.maximum(l, 1e-30)
+        return (acc / l[..., None]).astype(q.dtype)
+
+    kb_s = jnp.moveaxis(kb, 1, 0)  # (nk, B, kvc, KVH, hd)
+    vb_s = jnp.moveaxis(vb, 1, 0)
+
+    if mode == "triangle" and causal:
+        outs = []
+        for qi in range(nq):
+            # highest kv block this q block can see
+            hi = min(((q_offset + (qi + 1) * qc - 1) // kvc) + 1, nk)
+            outs.append(kv_scan(qi, qb[:, qi], (kb_s[:hi], vb_s[:hi], 0)))
+        out = jnp.stack(outs, axis=1)  # (B, nq, qc, KVH, G, hd)
+    else:
+        def q_body(_, qi):
+            return None, kv_scan(qi, qb[:, qi], (kb_s, vb_s, 0))
+        _, out = jax.lax.scan(q_body, None, jnp.arange(nq))
+        out = jnp.moveaxis(out, 0, 1)
+
+    return out.reshape(B, Sq, H, hd)[:, :Sq0]
+
+
+def decode_attention(q, k_cache, v_cache, cache_len):
+    """Single-step attention: q (B, 1, H, hd) vs cache (B, T, KVH, hd).
+
+    Positions >= cache_len are masked.  If the cache's sequence dim is
+    sharded (long-context SP decode), XLA turns the softmax reductions into
+    per-shard partials + cross-shard all-reduce — the log-sum-exp combine.
+    """
+    B, _, H, hd = q.shape
+    T, KVH = k_cache.shape[1], k_cache.shape[2]
+    G = H // KVH
+    qg = q.reshape(B, KVH, G, hd) / math.sqrt(hd)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, k_cache,
+                   preferred_element_type=jnp.float32)
+    mask = jnp.arange(T)[None, None, None, :] < cache_len
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def glu_mlp(x, wg, wu, wd, act: str):
+    """SwiGLU / GeGLU block; x (B, S, D); w* 2-D."""
+    f = jax.nn.silu if act == "silu" else partial(jax.nn.gelu, approximate=True)
+    h = f(x @ wg) * (x @ wu)
+    h = constrain(h, "batch", "seq", "ff")
+    return h @ wd
+
+
+def embed(tokens, table):
+    return jnp.take(table, tokens, axis=0)
+
+
+def sinusoid_positions(n: int, d: int):
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def chunked_softmax_xent(x, w_out, labels, mask=None, chunk: int = 512):
+    """Mean cross-entropy without materializing (B, S, V) logits.
+
+    x (B, S, D) final hidden states; w_out (D, V); labels (B, S) int32.
+    Scans sequence chunks: per-chunk logits (B, c, V) live only inside the
+    scan body.
+    """
+    B, S, D = x.shape
+    c = min(chunk, S)
+    n = S // c
+    assert n * c == S
+    xs = jnp.moveaxis(x.reshape(B, n, c, D), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(B, n, c), 1, 0)
+    ms = None if mask is None else jnp.moveaxis(mask.reshape(B, n, c), 1, 0)
+
+    def body(carry, inp):
+        tot, cnt = carry
+        if ms is None:
+            xc, lc = inp
+            mc = jnp.ones(lc.shape, jnp.float32)
+        else:
+            xc, lc, mc = inp
+            mc = mc.astype(jnp.float32)
+        logits = jnp.einsum("bcd,dv->bcv", xc, w_out,
+                            preferred_element_type=jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        tot = tot + jnp.sum((logz - gold) * mc)
+        cnt = cnt + jnp.sum(mc)
+        return (tot, cnt), None
+
+    xs_in = (xs, ls) if ms is None else (xs, ls, ms)
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)), xs_in)
+    return tot / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,364 @@
+"""Decoder-only transformer LM: dense GQA (yi / codeqwen / gemma / qwen3),
+MoE (grok / qwen3-moe), and VLM with interleaved gated cross-attention
+(llama-3.2-vision).
+
+Layers run under ``jax.lax.scan`` over a stacked parameter tree (small HLO,
+fast compile at 512 devices); activation checkpointing via
+``jax.checkpoint`` per block when ``cfg.remat``.  For the VLM family the
+stack is split into ``cross_attn_every``-sized groups so cross-attention
+blocks execute between scans (exact FLOP accounting — no dead branches in
+the HLO).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import moe as moe_mod
+from repro.models.layers import (chunked_softmax_xent, decode_attention,
+                                 flash_attention, glu_mlp, rms_norm, rope)
+from repro.models.params import ParamDef
+from repro.sharding import constrain
+from repro.sharding.specs import current_rules
+
+
+def _kv_expand(cfg: ModelConfig) -> bool:
+    """GQA -> MHA expansion when kv heads can't shard the model axis.
+
+    With kv_heads % model != 0, sharding head_dim instead collapses the
+    score-block arithmetic intensity (2 flops/byte at hd/16 contraction —
+    memory-bound by ~40x, measured in the dry-run).  Expanding K/V to the
+    full head count keeps every chip's attention fully local: the repeat
+    is sharded on `heads`, so each chip materializes only its own slice.
+    """
+    r = current_rules()
+    return (r is not None and cfg.n_kv_heads < cfg.n_heads
+            and r.size("kv_heads") == 1 and r.size("heads") > 1
+            and r.size("head_dim") == 1)
+
+
+# ---------------------------------------------------------------------------
+# sublayers
+# ---------------------------------------------------------------------------
+
+def self_attention(p, x, positions, cfg: ModelConfig, kv_cache=None,
+                   cache_len=None):
+    """Pre-norm GQA self-attention sublayer.
+
+    Returns (x + attn_out, new_kv):
+    * train:      kv_cache None -> new_kv None
+    * prefill:    kv_cache "collect" -> new_kv = (k, v) full sequence
+    * decode:     kv_cache (k_buf, v_buf) -> new_kv = updated buffers
+    """
+    B, S, D = x.shape
+    H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    h = rms_norm(x, p["ln_attn"], cfg.norm_eps)
+    q = (h @ p["wq"]).reshape(B, S, H, hd)
+    k = (h @ p["wk"]).reshape(B, S, KVH, hd)
+    v = (h @ p["wv"]).reshape(B, S, KVH, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = constrain(q, "batch", "seq", "heads", "head_dim")
+    k = constrain(k, "batch", "seq", "kv_heads", "head_dim")
+    v = constrain(v, "batch", "seq", "kv_heads", "head_dim")
+
+    expand = _kv_expand(cfg)
+    if kv_cache is None or kv_cache == "collect":
+        ka, va = k, v
+        if expand:
+            g = H // KVH
+            ka = constrain(jnp.repeat(k, g, axis=2),
+                           "batch", "seq", "heads", "head_dim")
+            va = constrain(jnp.repeat(v, g, axis=2),
+                           "batch", "seq", "heads", "head_dim")
+        attn = flash_attention(q, ka, va, causal=True,
+                               q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+                               mode=cfg.causal_mode)
+        new_kv = (k, v) if kv_cache == "collect" else None
+    else:
+        k_buf, v_buf = kv_cache
+        k_buf = jax.lax.dynamic_update_slice(k_buf, k.astype(k_buf.dtype),
+                                             (0, cache_len, 0, 0))
+        v_buf = jax.lax.dynamic_update_slice(v_buf, v.astype(v_buf.dtype),
+                                             (0, cache_len, 0, 0))
+        ka, va = k_buf, v_buf
+        if expand:
+            g = H // KVH
+            ka = constrain(jnp.repeat(k_buf, g, axis=2),
+                           "batch", "kv_seq", "heads", "head_dim")
+            va = constrain(jnp.repeat(v_buf, g, axis=2),
+                           "batch", "kv_seq", "heads", "head_dim")
+        attn = decode_attention(q, ka, va, cache_len + S)
+        new_kv = (k_buf, v_buf)
+    out = attn.reshape(B, S, H * hd) @ p["wo"]
+    out = constrain(out, "batch", "seq", "embed")
+    return x + out, new_kv
+
+
+def cross_attention(p, x, memory, cfg: ModelConfig):
+    """Gated cross-attention (llama-3.2-vision style); memory (B, T, D)."""
+    B, S, D = x.shape
+    H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    q = (h @ p["wq"]).reshape(B, S, H, hd)
+    k = (memory @ p["wk"]).reshape(B, -1, KVH, hd)
+    v = (memory @ p["wv"]).reshape(B, -1, KVH, hd)
+    q = constrain(q, "batch", "seq", "heads", "head_dim")
+    attn = flash_attention(q, k, v, causal=False,
+                           q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    out = attn.reshape(B, S, H * hd) @ p["wo"]
+    gate = jnp.tanh(p["gate"].astype(jnp.float32)).astype(x.dtype)
+    return x + gate * out
+
+
+def mlp_sublayer(p, x, cfg: ModelConfig):
+    h = rms_norm(x, p["ln_mlp"], cfg.norm_eps)
+    if cfg.n_experts:
+        block_fn = (moe_mod.moe_block_rowwise if cfg.moe_dispatch == "rowwise"
+                    else moe_mod.moe_block)
+        out, probs = block_fn(
+            h, p["router"], p["we_gate"], p["we_up"], p["we_down"],
+            top_k=cfg.top_k, capacity_factor=cfg.capacity_factor, act=cfg.act)
+        aux = moe_mod.moe_aux_loss(probs.reshape(-1, probs.shape[-1]))
+        return x + out, aux
+    out = glu_mlp(h, p["w_gate"], p["w_up"], p["w_down"], cfg.act)
+    return x + out, jnp.float32(0)
+
+
+def block(p, x, positions, cfg: ModelConfig, kv_cache=None, cache_len=None):
+    x, new_kv = self_attention(p, x, positions, cfg, kv_cache, cache_len)
+    x, aux = mlp_sublayer(p, x, cfg)
+    return x, new_kv, aux
+
+
+# ---------------------------------------------------------------------------
+# the model
+# ---------------------------------------------------------------------------
+
+class TransformerLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        assert cfg.family in ("dense", "moe", "vlm")
+        if cfg.family == "vlm":
+            assert cfg.n_layers % cfg.cross_attn_every == 0
+
+    # -- parameters ---------------------------------------------------------
+    def param_defs(self):
+        cfg = self.cfg
+        L, D, H, KVH, hd = (cfg.n_layers, cfg.d_model, cfg.n_heads,
+                            cfg.n_kv_heads, cfg.hd)
+        V, F = cfg.vocab_size, cfg.d_ff
+        layer = {
+            "ln_attn": ParamDef((L, D), ("layers", None), "zeros"),
+            "wq": ParamDef((L, D, H * hd), ("layers", "fsdp", "heads")),
+            "wk": ParamDef((L, D, KVH * hd), ("layers", "fsdp", "kv_heads")),
+            "wv": ParamDef((L, D, KVH * hd), ("layers", "fsdp", "kv_heads")),
+            "wo": ParamDef((L, H * hd, D), ("layers", "heads", "fsdp")),
+            "ln_mlp": ParamDef((L, D), ("layers", None), "zeros"),
+        }
+        if cfg.qk_norm:
+            layer["q_norm"] = ParamDef((L, hd), ("layers", None), "zeros")
+            layer["k_norm"] = ParamDef((L, hd), ("layers", None), "zeros")
+        if cfg.n_experts:
+            E, Fe = cfg.n_experts, (cfg.moe_d_ff or cfg.d_ff)
+            layer.update({
+                "router": ParamDef((L, D, E), ("layers", None, None)),
+                "we_gate": ParamDef((L, E, D, Fe), ("layers", "experts", "fsdp", "expert_ff")),
+                "we_up": ParamDef((L, E, D, Fe), ("layers", "experts", "fsdp", "expert_ff")),
+                "we_down": ParamDef((L, E, Fe, D), ("layers", "experts", "expert_ff", "fsdp")),
+            })
+        else:
+            layer.update({
+                "w_gate": ParamDef((L, D, F), ("layers", "fsdp", "ff")),
+                "w_up": ParamDef((L, D, F), ("layers", "fsdp", "ff")),
+                "w_down": ParamDef((L, F, D), ("layers", "ff", "fsdp")),
+            })
+        defs = {
+            "embed": ParamDef((V, D), ("vocab", "fsdp"), "embed"),
+            "layers": layer,
+            "final_norm": ParamDef((D,), (None,), "zeros"),
+        }
+        if not cfg.tie_embeddings:
+            defs["lm_head"] = ParamDef((D, V), ("fsdp", "vocab"))
+        if cfg.family == "vlm":
+            nC = cfg.n_layers // cfg.cross_attn_every
+            defs["cross"] = {
+                "ln": ParamDef((nC, D), (None, None), "zeros"),
+                "wq": ParamDef((nC, D, H * hd), (None, "fsdp", "heads")),
+                "wk": ParamDef((nC, D, KVH * hd), (None, "fsdp", "kv_heads")),
+                "wv": ParamDef((nC, D, KVH * hd), (None, "fsdp", "kv_heads")),
+                "wo": ParamDef((nC, H * hd, D), (None, "heads", "fsdp")),
+                "gate": ParamDef((nC,), (None,), "zeros"),
+            }
+        return defs
+
+    # -- forward ------------------------------------------------------------
+    def _backbone(self, params, x, positions, batch, mode: str,
+                  cache=None, cache_len=None):
+        """mode: train | prefill | decode.  Returns (x, new_cache, aux)."""
+        cfg = self.cfg
+
+        def blk(p, x, kv, clen):
+            kv_arg = {"train": None, "prefill": "collect", "decode": kv}[mode]
+            return block(p, x, positions, cfg, kv_arg, clen)
+
+        if cfg.remat and mode == "train":
+            blk = jax.checkpoint(blk, static_argnums=())
+
+        def scan_stack(stack_params, x, cache_slice, layer0: int = 0):
+            if mode == "decode":
+                # carry the FULL cache through the scan and update in
+                # place: scan-xs/ys cache threading double-buffers the
+                # whole KV cache in HBM (measured +8..14 GiB/chip);
+                # while-loop carries alias, and only the one new token
+                # position is written per layer.
+                kf, vf = cache_slice  # (L, B, T, KVH, hd)
+
+                def body(carry, p):
+                    xc, aux, kfc, vfc, li = carry
+                    ck = jax.lax.dynamic_index_in_dim(kfc, li, 0, keepdims=False)
+                    cv = jax.lax.dynamic_index_in_dim(vfc, li, 0, keepdims=False)
+                    xc, (nk, nv), a = blk(p, xc, (ck, cv), cache_len)
+                    # nk/nv differ from ck/cv only at [*, cache_len, ...]:
+                    # write back just that token slot
+                    tok_k = jax.lax.dynamic_slice_in_dim(nk, cache_len, 1, 1)
+                    tok_v = jax.lax.dynamic_slice_in_dim(nv, cache_len, 1, 1)
+                    kfc = jax.lax.dynamic_update_slice(
+                        kfc, tok_k[None].astype(kfc.dtype),
+                        (li, 0, cache_len, 0, 0))
+                    vfc = jax.lax.dynamic_update_slice(
+                        vfc, tok_v[None].astype(vfc.dtype),
+                        (li, 0, cache_len, 0, 0))
+                    return (xc, aux + a, kfc, vfc, li + 1), None
+
+                (x, aux, kf, vf, _), _ = jax.lax.scan(
+                    body, (x, jnp.float32(0), kf, vf, jnp.int32(layer0)),
+                    stack_params)
+                return x, (kf, vf), aux
+
+            def body(carry, p):
+                xc, aux = carry
+                xc, new_kv, a = blk(p, xc, None, cache_len)
+                return (xc, aux + a), (new_kv if new_kv is not None else 0)
+
+            (x, aux), kv_stack = jax.lax.scan(body, (x, jnp.float32(0)),
+                                              stack_params)
+            return x, kv_stack, aux
+
+        if cfg.family == "vlm":
+            every = cfg.cross_attn_every
+            nG = cfg.n_layers // every
+            vis = batch["vision_embed"].astype(x.dtype)
+            regroup = jax.tree_util.tree_map(
+                lambda a: a.reshape((nG, every) + a.shape[1:]), params["layers"])
+            aux = jnp.float32(0)
+            kvs = []
+            cur_kv = None if cache is None else cache["kv"]  # threaded, full
+            for g in range(nG):
+                cp = jax.tree_util.tree_map(lambda a: a[g], params["cross"])
+                x = cross_attention(cp, x, vis, cfg)
+                gp = jax.tree_util.tree_map(lambda a: a[g], regroup)
+                if mode == "decode":
+                    x, cur_kv, a = scan_stack(gp, x, cur_kv, layer0=g * every)
+                else:
+                    x, kv_stack, a = scan_stack(gp, x, None)
+                    kvs.append(kv_stack)
+                aux = aux + a
+            new_cache = None
+            if mode == "decode":
+                new_cache = {"kv": cur_kv}
+            elif mode == "prefill":
+                kv = jax.tree_util.tree_map(
+                    lambda *gs: jnp.concatenate(gs, axis=0), *kvs)
+                new_cache = {"kv": kv}
+            return x, new_cache, aux
+
+        cache_slice = None if cache is None else cache["kv"]
+        x, kv_stack, aux = scan_stack(params["layers"], x, cache_slice)
+        new_cache = {"kv": kv_stack} if mode in ("prefill", "decode") else None
+        return x, new_cache, aux
+
+    def _embed_in(self, params, tokens):
+        x = jnp.take(params["embed"], tokens, axis=0)
+        if self.cfg.family == "vlm" or True:
+            x = constrain(x, "batch", "seq", "embed")
+        return x.astype(jnp.dtype(self.cfg.dtype))
+
+    def _head(self, params):
+        return (params["embed"].T if self.cfg.tie_embeddings
+                else params["lm_head"])
+
+    # -- public API -----------------------------------------------------------
+    def loss_fn(self, params, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = self._embed_in(params, tokens)
+        positions = jnp.arange(S)[None, :]
+        x, _, aux = self._backbone(params, x, positions, batch, "train")
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        labels = jnp.roll(tokens, -1, axis=1)
+        mask = jnp.ones((B, S), jnp.float32).at[:, -1].set(0.0)
+        loss = chunked_softmax_xent(x, self._head(params), labels, mask)
+        return loss + 0.01 * aux / max(cfg.n_layers, 1)
+
+    def prefill(self, params, batch, max_len: int | None = None):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = self._embed_in(params, tokens)
+        positions = jnp.arange(S)[None, :]
+        x, cache, _ = self._backbone(params, x, positions, batch, "prefill")
+        if max_len is not None and max_len > S:
+            cache["kv"] = jax.tree_util.tree_map(
+                lambda a: jnp.pad(a, ((0, 0), (0, 0), (0, max_len - S),
+                                      (0, 0), (0, 0))), cache["kv"])
+        x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", x, self._head(params),
+                            preferred_element_type=jnp.float32)
+        cache["len"] = jnp.full((), S, jnp.int32)
+        if cfg.family == "vlm":
+            cache["vision_embed"] = batch["vision_embed"]
+        return logits[:, 0], cache
+
+    def decode_step(self, params, cache, batch):
+        """One token for every sequence in the batch; cache updated in place."""
+        cfg = self.cfg
+        tokens = batch["tokens"]            # (B, 1)
+        B = tokens.shape[0]
+        clen = cache["len"]
+        x = self._embed_in(params, tokens)
+        positions = jnp.full((B, 1), clen, jnp.int32)
+        dec_batch = dict(batch)
+        if cfg.family == "vlm":
+            dec_batch["vision_embed"] = cache["vision_embed"]
+        x, new_cache, _ = self._backbone(params, x, positions, dec_batch,
+                                         "decode", cache=cache, cache_len=clen)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", x, self._head(params),
+                            preferred_element_type=jnp.float32)[:, 0]
+        new_cache["len"] = clen + 1
+        if cfg.family == "vlm":
+            new_cache["vision_embed"] = cache["vision_embed"]
+        return logits, new_cache
+
+    # -- cache layout -----------------------------------------------------------
+    def cache_defs(self, batch_size: int, max_len: int):
+        cfg = self.cfg
+        L, KVH, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+        kv = ParamDef((L, batch_size, max_len, KVH, hd),
+                      ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+                      "zeros")
+        defs = {"kv": (kv, kv), "len": ParamDef((), (), "zeros")}
+        if cfg.family == "vlm":
+            defs["vision_embed"] = ParamDef(
+                (batch_size, cfg.vision_tokens, cfg.d_model),
+                ("batch", None, "embed"), "zeros")
+        return defs

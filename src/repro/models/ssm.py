@@ -1,0 +1,571 @@
+"""SSM-family models: Mamba2 (SSD), xLSTM (mLSTM + sLSTM), Zamba2 hybrid.
+
+All recurrences share one chunked linear-RNN core (the SSD duality): state
+``H_t = a_t * H_{t-1} + v_t (x) k_t``, readout ``y_t = H_t . q_t``, computed
+chunk-parallel — intra-chunk quadratic attention-like einsums + inter-chunk
+state carry under ``lax.scan`` — so training cost is linear in sequence
+length and the 500k-token decode shapes carry history in O(1) state.
+
+Decode steps reuse the same math with a length-1 chunk, so
+prefill-then-decode exactly matches a full forward pass (tested).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import chunked_softmax_xent, rms_norm
+from repro.models.lm import block as attn_block
+from repro.models.params import ParamDef
+from repro.sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# the chunked linear-RNN core (Mamba2 SSD form / gated linear attention)
+# ---------------------------------------------------------------------------
+
+def linear_rnn_chunked(log_a, v, k, q, h0, *, chunk: int):
+    """Chunk-parallel linear RNN.
+
+    log_a (B, S, H) f32 per-head log decay (<= 0);
+    v (B, S, H, P) values; k/q (B, S, Hk, N) with Hk in {1, H};
+    h0 (B, H, P, N) entering state.  Returns (y (B, S, H, P), h_out).
+    """
+    B, S, H, P = v.shape
+    N = k.shape[-1]
+    Hk = k.shape[2]
+    c = min(chunk, S)
+    nc = -(-S // c)
+    pad = nc * c - S
+    if pad:
+        log_a = jnp.pad(log_a, ((0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    la = jnp.moveaxis(log_a.reshape(B, nc, c, H), 1, 0)          # (nc,B,c,H)
+    vs = jnp.moveaxis(v.reshape(B, nc, c, H, P), 1, 0).astype(jnp.float32)
+    ks = jnp.moveaxis(k.reshape(B, nc, c, Hk, N), 1, 0).astype(jnp.float32)
+    qs = jnp.moveaxis(q.reshape(B, nc, c, Hk, N), 1, 0).astype(jnp.float32)
+
+    shared_kq = Hk == 1  # Mamba2: B/C shared across heads; mLSTM: per-head
+
+    def body(h, inp):
+        lac, vc, kc, qc = inp
+        cum = jnp.cumsum(lac, axis=1)                            # (B,c,H)
+        # (B, H, j, i) decay matrix with causal mask i <= j
+        dj = cum.transpose(0, 2, 1)                               # (B,H,c)
+        dmat = dj[:, :, :, None] - dj[:, :, None, :]              # (B,H,j,i)
+        mask = jnp.tril(jnp.ones((c, c), bool))
+        w = jnp.where(mask[None, None], jnp.exp(dmat), 0.0)
+        eg = jnp.exp(cum)                                          # (B,c,H)
+        tot = cum[:, -1, :]                                        # (B,H)
+        rem = jnp.exp(tot[:, None, :] - cum)                       # (B,c,H)
+        if shared_kq:
+            kcs, qcs = kc[:, :, 0], qc[:, :, 0]                    # (B,c,N)
+            qk = jnp.einsum("bjn,bin->bji", qcs, kcs,
+                            preferred_element_type=jnp.float32)
+            A = qk[:, None] * w                                    # (B,H,j,i)
+            y_inter = jnp.einsum("bhpn,bjn,bjh->bjhp", h, qcs, eg,
+                                 preferred_element_type=jnp.float32)
+            h_upd = jnp.einsum("bihp,bin,bih->bhpn", vc, kcs, rem,
+                               preferred_element_type=jnp.float32)
+        else:
+            qk = jnp.einsum("bjhn,bihn->bhji", qc, kc,
+                            preferred_element_type=jnp.float32)
+            A = qk * w
+            y_inter = jnp.einsum("bhpn,bjhn,bjh->bjhp", h, qc, eg,
+                                 preferred_element_type=jnp.float32)
+            h_upd = jnp.einsum("bihp,bihn,bih->bhpn", vc, kc, rem,
+                               preferred_element_type=jnp.float32)
+        y_intra = jnp.einsum("bhji,bihp->bjhp", A, vc,
+                             preferred_element_type=jnp.float32)
+        h_new = h * jnp.exp(tot)[:, :, None, None] + h_upd
+        return h_new, y_intra + y_inter
+
+    # checkpoint per chunk: AD would otherwise stack the (B, H, c, c)
+    # intra-chunk decay/attention matrices for every chunk; with the
+    # checkpoint only the (B, H, P, N) chunk-entry states are saved.
+    h_out, ys = jax.lax.scan(jax.checkpoint(body), h0.astype(jnp.float32),
+                             (la, vs, ks, qs))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, nc * c, H, P)[:, :S]
+    return y, h_out
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+def mamba2_defs(cfg: ModelConfig, L: int) -> dict:
+    D, DI, N, H, K = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                      cfg.n_ssm_heads, cfg.ssm_conv)
+    proj_out = 2 * DI + 2 * N + H
+    return {
+        "ln": ParamDef((L, D), ("layers", None), "zeros"),
+        "in_proj": ParamDef((L, D, proj_out), ("layers", "fsdp", "ssm_inner")),
+        "conv_w": ParamDef((L, K, DI), ("layers", "conv_k", "ssm_inner")),
+        "conv_b": ParamDef((L, DI), ("layers", "ssm_inner"), "zeros"),
+        "A_log": ParamDef((L, H), ("layers", None), "zeros"),
+        "D_skip": ParamDef((L, H), ("layers", None), "ones"),
+        "dt_bias": ParamDef((L, H), ("layers", None), "zeros"),
+        "norm": ParamDef((L, DI), ("layers", "ssm_inner"), "zeros"),
+        "out_proj": ParamDef((L, DI, D), ("layers", "ssm_inner", "fsdp")),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv; x (B, S, DI), w (K, DI).  ``state`` is the
+    last K-1 inputs for decode; returns (y, new_state)."""
+    K = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else None
+    return y + b, new_state
+
+
+def mamba2_block(p, x, cfg: ModelConfig, state=None):
+    """Returns (x + out, new_state).  state = (h (B,H,P,N), conv (B,K-1,DI))."""
+    B, S, D = x.shape
+    DI, N, H = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    P = DI // H
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    zxbcdt = h @ p["in_proj"]
+    z, xs, Bv, Cv, dt = jnp.split(
+        zxbcdt, [DI, 2 * DI, 2 * DI + N, 2 * DI + 2 * N], axis=-1)
+    conv_state = None if state is None else state["conv"]
+    xs, new_conv = _causal_conv(xs, p["conv_w"], p["conv_b"], conv_state)
+    xs = jax.nn.silu(xs)
+    xs = constrain(xs, "batch", "seq", "ssm_inner")
+    Bv = jax.nn.silu(Bv).astype(jnp.float32)
+    Cv = jax.nn.silu(Cv).astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    log_a = -jnp.exp(p["A_log"].astype(jnp.float32)) * dt          # (B,S,H)
+    v = xs.reshape(B, S, H, P).astype(jnp.float32) * dt[..., None]
+    k = Bv[:, :, None, :]                                          # (B,S,1,N)
+    q = Cv[:, :, None, :]
+    h0 = (jnp.zeros((B, H, P, N), jnp.float32) if state is None
+          else state["h"].astype(jnp.float32))
+    y, h_out = linear_rnn_chunked(log_a, v, k, q, h0, chunk=cfg.ssm_chunk)
+    y = y + p["D_skip"].astype(jnp.float32)[None, None, :, None] \
+        * xs.reshape(B, S, H, P).astype(jnp.float32)
+    y = y.reshape(B, S, DI).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    new_state = None
+    if state is not None:
+        new_state = {"h": h_out, "conv": new_conv.astype(state["conv"].dtype)}
+    return x + out, new_state
+
+
+# ---------------------------------------------------------------------------
+# xLSTM blocks
+# ---------------------------------------------------------------------------
+
+def mlstm_defs(cfg: ModelConfig, L: int) -> dict:
+    D, DI, H = cfg.d_model, cfg.d_inner, cfg.n_heads
+    N = DI // H
+    return {
+        "ln": ParamDef((L, D), ("layers", None), "zeros"),
+        "up": ParamDef((L, D, 2 * DI), ("layers", "fsdp", "ssm_inner")),
+        "wq": ParamDef((L, DI, DI), ("layers", None, "ssm_inner")),
+        "wk": ParamDef((L, DI, DI), ("layers", None, "ssm_inner")),
+        "wv": ParamDef((L, DI, DI), ("layers", None, "ssm_inner")),
+        "w_if": ParamDef((L, DI, 2 * H), ("layers", "ssm_inner", None)),
+        "norm": ParamDef((L, DI), ("layers", "ssm_inner"), "zeros"),
+        "down": ParamDef((L, DI, D), ("layers", "ssm_inner", "fsdp")),
+    }
+
+
+def mlstm_block(p, x, cfg: ModelConfig, state=None):
+    """mLSTM: matrix memory + normalizer (folded as an extra value channel)."""
+    B, S, D = x.shape
+    DI, H = cfg.d_inner, cfg.n_heads
+    N = DI // H
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    xi, z = jnp.split(h @ p["up"], 2, axis=-1)
+    q = (xi @ p["wq"]).reshape(B, S, H, N)
+    k = (xi @ p["wk"]).reshape(B, S, H, N) / math.sqrt(N)
+    v = (xi @ p["wv"]).reshape(B, S, H, N)
+    gates = (xi @ p["w_if"]).astype(jnp.float32)
+    i_g = jax.nn.sigmoid(gates[..., :H])                            # (B,S,H)
+    log_f = jax.nn.log_sigmoid(gates[..., H:])
+    # fold normalizer: value channel N+1 carries the input gate itself
+    v_aug = jnp.concatenate(
+        [v.astype(jnp.float32) * i_g[..., None],
+         i_g[..., None] * jnp.ones((B, S, H, 1), jnp.float32)], axis=-1)
+    h0 = (jnp.zeros((B, H, N + 1, N), jnp.float32) if state is None
+          else state["h"].astype(jnp.float32))
+    y_aug, h_out = linear_rnn_chunked(log_f, v_aug, k, q, h0, chunk=cfg.ssm_chunk)
+    y = y_aug[..., :N]
+    denom = jnp.maximum(jnp.abs(y_aug[..., N]), 1.0)[..., None]
+    y = (y / denom).reshape(B, S, DI).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = y @ p["down"]
+    new_state = None if state is None else {"h": h_out}
+    return x + out, new_state
+
+
+def slstm_defs(cfg: ModelConfig, L: int) -> dict:
+    D, H = cfg.d_model, cfg.n_heads
+    hd = D // H
+    return {
+        "ln": ParamDef((L, D), ("layers", None), "zeros"),
+        "w_gates": ParamDef((L, D, 4 * D), ("layers", "fsdp", "ssm_inner")),
+        "r_gates": ParamDef((L, H, hd, 4 * hd), ("layers", None, None, None)),
+        "out": ParamDef((L, D, D), ("layers", "ssm_inner", "fsdp")),
+    }
+
+
+def slstm_block(p, x, cfg: ModelConfig, state=None):
+    """sLSTM: per-head scalar memory with recurrent gate contributions.
+
+    Sequential scan over time (cheap per step: (hd x 4hd) per head)."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    hd = D // H
+    h_in = rms_norm(x, p["ln"], cfg.norm_eps)
+    pre = (h_in @ p["w_gates"]).reshape(B, S, H, 4 * hd).astype(jnp.float32)
+    if state is None:
+        c0 = jnp.zeros((B, H, hd), jnp.float32)
+        n0 = jnp.ones((B, H, hd), jnp.float32)
+        hp0 = jnp.zeros((B, H, hd), jnp.float32)
+    else:
+        c0, n0, hp0 = (state["c"].astype(jnp.float32),
+                       state["n"].astype(jnp.float32),
+                       state["hp"].astype(jnp.float32))
+    R = p["r_gates"].astype(jnp.float32)
+
+    def step(carry, pre_t):
+        c, n, hp = carry
+        rec = jnp.einsum("bhd,hdk->bhk", hp, R)
+        g = pre_t + rec                                             # (B,H,4hd)
+        i_g, f_g, z_g, o_g = jnp.split(g, 4, axis=-1)
+        i_g = jax.nn.sigmoid(i_g)
+        f_g = jax.nn.sigmoid(f_g)
+        c = f_g * c + i_g * jnp.tanh(z_g)
+        n = f_g * n + i_g
+        hp = jax.nn.sigmoid(o_g) * c / jnp.maximum(n, 1.0)
+        return (c, n, hp), hp
+
+    (c, n, hp), ys = jax.lax.scan(step, (c0, n0, hp0), jnp.moveaxis(pre, 1, 0))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, D).astype(x.dtype)
+    out = y @ p["out"]
+    new_state = None if state is None else {"c": c, "n": n, "hp": hp}
+    return x + out, new_state
+
+
+# ---------------------------------------------------------------------------
+# models
+# ---------------------------------------------------------------------------
+
+def _take(tree, i):
+    return jax.tree_util.tree_map(lambda a: a[i], tree)
+
+
+def _slice(tree, lo, hi):
+    return jax.tree_util.tree_map(lambda a: a[lo:hi], tree)
+
+
+class MambaLM:
+    """Mamba2 LM; with ``cfg.attn_every`` > 0 it is the Zamba2 hybrid:
+    one *shared* attention+MLP transformer block (single parameter set)
+    applied before every group of ``attn_every`` Mamba2 layers, each
+    application with its own KV cache."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.groups = []
+        step = cfg.attn_every or cfg.n_layers
+        lo = 0
+        while lo < cfg.n_layers:
+            self.groups.append((lo, min(lo + step, cfg.n_layers)))
+            lo += step
+
+    @property
+    def n_attn_apps(self) -> int:
+        return len(self.groups) if self.cfg.attn_every else 0
+
+    def param_defs(self):
+        cfg = self.cfg
+        D, V, L = cfg.d_model, cfg.vocab_size, cfg.n_layers
+        defs = {
+            "embed": ParamDef((V, D), ("vocab", "fsdp"), "embed"),
+            "layers": mamba2_defs(cfg, L),
+            "final_norm": ParamDef((D,), (None,), "zeros"),
+            "lm_head": ParamDef((D, V), ("fsdp", "vocab")),
+        }
+        if cfg.attn_every:
+            H, KVH, hd, F = cfg.n_heads, cfg.n_kv_heads, cfg.hd, cfg.d_ff
+            defs["shared_attn"] = {
+                "ln_attn": ParamDef((D,), (None,), "zeros"),
+                "wq": ParamDef((D, H * hd), ("fsdp", "heads")),
+                "wk": ParamDef((D, KVH * hd), ("fsdp", "kv_heads")),
+                "wv": ParamDef((D, KVH * hd), ("fsdp", "kv_heads")),
+                "wo": ParamDef((H * hd, D), ("heads", "fsdp")),
+                "ln_mlp": ParamDef((D,), (None,), "zeros"),
+                "w_gate": ParamDef((D, F), ("fsdp", "ff")),
+                "w_up": ParamDef((D, F), ("fsdp", "ff")),
+                "w_down": ParamDef((F, D), ("ff", "fsdp")),
+            }
+        return defs
+
+    def _zero_states(self, B):
+        cfg = self.cfg
+        H, P, N = cfg.n_ssm_heads, cfg.d_inner // cfg.n_ssm_heads, cfg.ssm_state
+        L, K, DI = cfg.n_layers, cfg.ssm_conv, cfg.d_inner
+        return {
+            "h": jnp.zeros((L, B, H, P, N), jnp.float32),
+            "conv": jnp.zeros((L, B, K - 1, DI), jnp.dtype(cfg.dtype)),
+        }
+
+    def _backbone(self, params, x, positions, mode, cache=None, cache_len=None):
+        cfg = self.cfg
+        states = cache["ssm"] if mode == "decode" else (
+            self._zero_states(x.shape[0]) if mode == "prefill" else None)
+
+        def mamba_scan(pslice, x, sslice):
+            def body(carry, xs):
+                if sslice is not None:
+                    p, st = xs
+                    xc, new_st = mamba2_block(p, carry, cfg, st)
+                    return xc, new_st
+                xc, _ = mamba2_block(xs, carry, cfg, None)
+                return xc, 0
+            fn = body
+            if cfg.remat and mode == "train":
+                fn = jax.checkpoint(body)
+            xs = pslice if sslice is None else (pslice, sslice)
+            return jax.lax.scan(fn, x, xs)
+
+        new_states = []
+        new_kv = []
+        for g, (lo, hi) in enumerate(self.groups):
+            if cfg.attn_every:
+                kv_arg = None
+                if mode == "prefill":
+                    kv_arg = "collect"
+                elif mode == "decode":
+                    kv_arg = (cache["attn_k"][g], cache["attn_v"][g])
+                x, kv, _ = attn_block(params["shared_attn"], x, positions, cfg,
+                                      kv_arg, cache_len)
+                if kv is not None:
+                    new_kv.append(kv)
+            sl = None if states is None else _slice(states, lo, hi)
+            x, st = mamba_scan(_slice(params["layers"], lo, hi), x, sl)
+            if states is not None:
+                new_states.append(st)
+        new_cache = None
+        if mode in ("prefill", "decode"):
+            ssm = jax.tree_util.tree_map(
+                lambda *gs: jnp.concatenate(gs, axis=0), *new_states)
+            new_cache = {"ssm": ssm}
+            if cfg.attn_every:
+                new_cache["attn_k"] = jnp.stack([k for k, _ in new_kv])
+                new_cache["attn_v"] = jnp.stack([v for _, v in new_kv])
+        return x, new_cache
+
+    def loss_fn(self, params, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+        x = constrain(x, "batch", "seq", "embed")
+        positions = jnp.arange(S)[None, :]
+        x, _ = self._backbone(params, x, positions, "train")
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        labels = jnp.roll(tokens, -1, axis=1)
+        mask = jnp.ones((B, S), jnp.float32).at[:, -1].set(0.0)
+        return chunked_softmax_xent(x, params["lm_head"], labels, mask)
+
+    def prefill(self, params, batch, max_len: int | None = None):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+        positions = jnp.arange(S)[None, :]
+        x, cache = self._backbone(params, x, positions, "prefill")
+        if cfg.attn_every and max_len is not None and max_len > S:
+            pad = ((0, 0), (0, 0), (0, max_len - S), (0, 0), (0, 0))
+            cache["attn_k"] = jnp.pad(cache["attn_k"], pad)
+            cache["attn_v"] = jnp.pad(cache["attn_v"], pad)
+        xl = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", xl, params["lm_head"],
+                            preferred_element_type=jnp.float32)[:, 0]
+        cache["len"] = jnp.full((), S, jnp.int32)
+        return logits, cache
+
+    def decode_step(self, params, cache, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B = tokens.shape[0]
+        clen = cache["len"]
+        x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+        positions = jnp.full((B, 1), clen, jnp.int32)
+        x, new_cache = self._backbone(params, x, positions, "decode",
+                                      cache=cache, cache_len=clen)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"],
+                            preferred_element_type=jnp.float32)[:, 0]
+        new_cache["len"] = clen + 1
+        return logits, new_cache
+
+    def cache_defs(self, batch_size: int, max_len: int):
+        cfg = self.cfg
+        H, P, N = cfg.n_ssm_heads, cfg.d_inner // cfg.n_ssm_heads, cfg.ssm_state
+        L, K, DI = cfg.n_layers, cfg.ssm_conv, cfg.d_inner
+        defs = {
+            "ssm": {
+                "h": ParamDef((L, batch_size, H, P, N),
+                              ("layers", "batch", None, "ssm_inner", "ssm_state"),
+                              "zeros"),
+                "conv": ParamDef((L, batch_size, K - 1, DI),
+                                 ("layers", "batch", None, "ssm_inner"), "zeros"),
+            },
+            "len": ParamDef((), (), "zeros"),
+        }
+        if cfg.attn_every:
+            A, KVH, hd = self.n_attn_apps, cfg.n_kv_heads, cfg.hd
+            kv = ParamDef((A, batch_size, max_len, KVH, hd),
+                          (None, "batch", "kv_seq", "kv_heads", "head_dim"),
+                          "zeros")
+            defs["attn_k"] = kv
+            defs["attn_v"] = kv
+        return defs
+
+
+class XLSTMLM:
+    """xLSTM: mLSTM blocks with an sLSTM block every ``slstm_every``."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        e = cfg.slstm_every or 0
+        self.n_slstm = cfg.n_layers // e if e else 0
+        self.n_mlstm = cfg.n_layers - self.n_slstm
+        self.per_group = (e - 1) if e else cfg.n_layers
+
+    def param_defs(self):
+        cfg = self.cfg
+        D, V = cfg.d_model, cfg.vocab_size
+        defs = {
+            "embed": ParamDef((V, D), ("vocab", "fsdp"), "embed"),
+            "mlstm": mlstm_defs(cfg, self.n_mlstm),
+            "final_norm": ParamDef((D,), (None,), "zeros"),
+            "lm_head": ParamDef((D, V), ("fsdp", "vocab")),
+        }
+        if self.n_slstm:
+            defs["slstm"] = slstm_defs(cfg, self.n_slstm)
+        return defs
+
+    def _zero_states(self, B):
+        cfg = self.cfg
+        DI, H = cfg.d_inner, cfg.n_heads
+        N = DI // H
+        hd = cfg.d_model // H
+        return {
+            "m": {"h": jnp.zeros((self.n_mlstm, B, H, N + 1, N), jnp.float32)},
+            "s": {"c": jnp.zeros((self.n_slstm, B, H, hd), jnp.float32),
+                  "n": jnp.ones((self.n_slstm, B, H, hd), jnp.float32),
+                  "hp": jnp.zeros((self.n_slstm, B, H, hd), jnp.float32)},
+        }
+
+    def _backbone(self, params, x, mode, cache=None):
+        cfg = self.cfg
+        states = cache["ssm"] if mode == "decode" else (
+            self._zero_states(x.shape[0]) if mode == "prefill" else None)
+
+        def mlstm_scan(pslice, x, sslice):
+            def body(carry, xs):
+                if sslice is not None:
+                    p, st = xs
+                    xc, new_st = mlstm_block(p, carry, cfg, st)
+                    return xc, new_st
+                xc, _ = mlstm_block(xs, carry, cfg, None)
+                return xc, 0
+            fn = jax.checkpoint(body) if (cfg.remat and mode == "train") else body
+            xs = pslice if sslice is None else (pslice, sslice)
+            return jax.lax.scan(fn, x, xs)
+
+        n_groups = max(self.n_slstm, 1)
+        new_m, new_s = [], []
+        for g in range(n_groups):
+            lo, hi = g * self.per_group, (g + 1) * self.per_group
+            sl = None if states is None else _slice(states["m"], lo, hi)
+            x, st = mlstm_scan(_slice(params["mlstm"], lo, hi), x, sl)
+            if states is not None:
+                new_m.append(st)
+            if self.n_slstm:
+                s_st = None if states is None else _take(states["s"], g)
+                x, s_new = slstm_block(_take(params["slstm"], g), x, cfg, s_st)
+                if states is not None:
+                    new_s.append(s_new)
+        new_cache = None
+        if mode in ("prefill", "decode"):
+            m = jax.tree_util.tree_map(lambda *gs: jnp.concatenate(gs, 0), *new_m)
+            out = {"m": m}
+            if new_s:
+                out["s"] = jax.tree_util.tree_map(lambda *gs: jnp.stack(gs, 0), *new_s)
+            else:
+                out["s"] = states["s"] if states else None
+            new_cache = {"ssm": out}
+        return x, new_cache
+
+    def loss_fn(self, params, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+        x = constrain(x, "batch", "seq", "embed")
+        x, _ = self._backbone(params, x, "train")
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        labels = jnp.roll(tokens, -1, axis=1)
+        mask = jnp.ones((B, S), jnp.float32).at[:, -1].set(0.0)
+        return chunked_softmax_xent(x, params["lm_head"], labels, mask)
+
+    def prefill(self, params, batch, max_len: int | None = None):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+        x, cache = self._backbone(params, x, "prefill")
+        xl = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", xl, params["lm_head"],
+                            preferred_element_type=jnp.float32)[:, 0]
+        cache["len"] = jnp.full((), S, jnp.int32)
+        return logits, cache
+
+    def decode_step(self, params, cache, batch):
+        cfg = self.cfg
+        x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(jnp.dtype(cfg.dtype))
+        x, new_cache = self._backbone(params, x, "decode", cache=cache)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"],
+                            preferred_element_type=jnp.float32)[:, 0]
+        new_cache["len"] = cache["len"] + 1
+        return logits, new_cache
+
+    def cache_defs(self, batch_size: int, max_len: int):
+        cfg = self.cfg
+        DI, H = cfg.d_inner, cfg.n_heads
+        N = DI // H
+        hd = cfg.d_model // H
+        return {
+            "ssm": {
+                # NOTE: dim 3 is N+1 (normalizer channel) — never sharded
+                "m": {"h": ParamDef((self.n_mlstm, batch_size, H, N + 1, N),
+                                    ("layers", "batch", None, None, None),
+                                    "zeros")},
+                "s": {"c": ParamDef((self.n_slstm, batch_size, H, hd),
+                                    ("layers", "batch", None, None), "zeros"),
+                      "n": ParamDef((self.n_slstm, batch_size, H, hd),
+                                    ("layers", "batch", None, None), "ones"),
+                      "hp": ParamDef((self.n_slstm, batch_size, H, hd),
+                                     ("layers", "batch", None, None), "zeros")},
+            },
+            "len": ParamDef((), (), "zeros"),
+        }

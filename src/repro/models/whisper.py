@@ -1,0 +1,211 @@
+"""Whisper-style encoder-decoder (audio backbone only).
+
+Per the assignment, the conv frontend is a STUB: ``input_specs()`` provides
+precomputed frame embeddings (B, S_enc, d_model).  The encoder is
+non-causal self-attention over frames with sinusoidal positions; the
+decoder is causal self-attention + cross-attention with learned positions.
+
+Shape semantics (DESIGN.md §6): ``seq_len`` is the *encoder* length;
+decoder length is ``min(max_decoder_len, seq_len)`` for training and 1 for
+decode, with per-layer cross-K/V of length seq_len held in the cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import (chunked_softmax_xent, decode_attention,
+                                 flash_attention, glu_mlp, rms_norm,
+                                 sinusoid_positions)
+from repro.models.params import ParamDef
+from repro.sharding import constrain
+
+
+def _attn_defs(L, D, H, KVH, hd, prefix=""):
+    return {
+        prefix + "ln": ParamDef((L, D), ("layers", None), "zeros"),
+        prefix + "wq": ParamDef((L, D, H * hd), ("layers", "fsdp", "heads")),
+        prefix + "wk": ParamDef((L, D, KVH * hd), ("layers", "fsdp", "kv_heads")),
+        prefix + "wv": ParamDef((L, D, KVH * hd), ("layers", "fsdp", "kv_heads")),
+        prefix + "wo": ParamDef((L, H * hd, D), ("layers", "heads", "fsdp")),
+    }
+
+
+def _mlp_defs(L, D, F):
+    return {
+        "ln_mlp": ParamDef((L, D), ("layers", None), "zeros"),
+        "w_gate": ParamDef((L, D, F), ("layers", "fsdp", "ff")),
+        "w_up": ParamDef((L, D, F), ("layers", "fsdp", "ff")),
+        "w_down": ParamDef((L, F, D), ("layers", "ff", "fsdp")),
+    }
+
+
+class WhisperModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        assert cfg.encoder_layers > 0
+
+    def param_defs(self):
+        cfg = self.cfg
+        D, H, KVH, hd, F, V = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.hd, cfg.d_ff, cfg.vocab_size)
+        Le, Ld = cfg.encoder_layers, cfg.n_layers
+        enc = {**_attn_defs(Le, D, H, KVH, hd), **_mlp_defs(Le, D, F)}
+        dec = {**_attn_defs(Ld, D, H, KVH, hd),
+               **_attn_defs(Ld, D, H, KVH, hd, prefix="x_"),
+               **_mlp_defs(Ld, D, F)}
+        return {
+            "embed": ParamDef((V, D), ("vocab", "fsdp"), "embed"),
+            "pos_dec": ParamDef((cfg.max_decoder_len, D), (None, None)),
+            "enc": enc,
+            "dec": dec,
+            "enc_norm": ParamDef((D,), (None,), "zeros"),
+            "final_norm": ParamDef((D,), (None,), "zeros"),
+            "lm_head": ParamDef((D, V), ("fsdp", "vocab")),
+        }
+
+    # -- encoder --------------------------------------------------------------
+    def encode(self, params, frames):
+        cfg = self.cfg
+        B, S, D = frames.shape
+        x = frames.astype(jnp.dtype(cfg.dtype))
+        x = x + sinusoid_positions(S, D).astype(x.dtype)[None]
+        x = constrain(x, "batch", "seq", "embed")
+        H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+
+        def body(xc, p):
+            h = rms_norm(xc, p["ln"], cfg.norm_eps)
+            q = (h @ p["wq"]).reshape(B, S, H, hd)
+            k = (h @ p["wk"]).reshape(B, S, KVH, hd)
+            v = (h @ p["wv"]).reshape(B, S, KVH, hd)
+            q = constrain(q, "batch", "seq", "heads", "head_dim")
+            a = flash_attention(q, k, v, causal=False,
+                                q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+            xc = xc + a.reshape(B, S, H * hd) @ p["wo"]
+            h2 = rms_norm(xc, p["ln_mlp"], cfg.norm_eps)
+            xc = xc + glu_mlp(h2, p["w_gate"], p["w_up"], p["w_down"], cfg.act)
+            return xc, 0
+
+        fn = jax.checkpoint(body) if cfg.remat else body
+        x, _ = jax.lax.scan(fn, x, params["enc"])
+        return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+    # -- decoder --------------------------------------------------------------
+    def _decoder(self, params, tokens, memory, mode, cache=None, cache_len=None):
+        """memory: encoder output (train/prefill) or None (decode — cached
+        cross-K/V are used instead)."""
+        cfg = self.cfg
+        B, S = tokens.shape
+        H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+        x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+        if mode == "decode":
+            pos = jax.lax.dynamic_slice_in_dim(params["pos_dec"], cache_len, 1)
+            x = x + pos[None].astype(x.dtype)
+        else:
+            x = x + params["pos_dec"][None, :S].astype(x.dtype)
+        positions = (jnp.arange(S)[None, :] if mode != "decode"
+                     else jnp.full((B, 1), cache_len, jnp.int32))
+
+        def body(carry, xs):
+            xc = carry
+            if mode == "decode":
+                p, (ck, cv, xk, xv) = xs
+            else:
+                p = xs
+            h = rms_norm(xc, p["ln"], cfg.norm_eps)
+            q = (h @ p["wq"]).reshape(B, S, H, hd)
+            k = (h @ p["wk"]).reshape(B, S, KVH, hd)
+            v = (h @ p["wv"]).reshape(B, S, KVH, hd)
+            if mode == "decode":
+                ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                                  (0, cache_len, 0, 0))
+                cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                                  (0, cache_len, 0, 0))
+                a = decode_attention(q, ck, cv, cache_len + 1)
+            else:
+                a = flash_attention(q, k, v, causal=True,
+                                    q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+            xc = xc + a.reshape(B, S, H * hd) @ p["wo"]
+            # cross attention
+            h = rms_norm(xc, p["x_ln"], cfg.norm_eps)
+            q = (h @ p["x_wq"]).reshape(B, S, H, hd)
+            if mode == "decode":
+                a = decode_attention(q, xk, xv, xk.shape[1])
+            else:
+                xk = (memory @ p["x_wk"]).reshape(B, -1, KVH, hd)
+                xv = (memory @ p["x_wv"]).reshape(B, -1, KVH, hd)
+                a = flash_attention(q, xk, xv, causal=False,
+                                    q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+            xc = xc + a.reshape(B, S, H * hd) @ p["x_wo"]
+            h2 = rms_norm(xc, p["ln_mlp"], cfg.norm_eps)
+            xc = xc + glu_mlp(h2, p["w_gate"], p["w_up"], p["w_down"], cfg.act)
+            ys = 0
+            if mode == "decode":
+                ys = (ck, cv)
+            elif mode == "prefill":
+                ys = (k, v, xk, xv)
+            return xc, ys
+
+        fn = jax.checkpoint(body) if (cfg.remat and mode == "train") else body
+        xs = params["dec"] if mode != "decode" else (
+            params["dec"], (cache["k"], cache["v"], cache["xk"], cache["xv"]))
+        x, ys = jax.lax.scan(fn, x, xs)
+        return x, ys
+
+    # -- public API -------------------------------------------------------------
+    def loss_fn(self, params, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        memory = self.encode(params, batch["frames"])
+        x, _ = self._decoder(params, tokens, memory, "train")
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        labels = jnp.roll(tokens, -1, axis=1)
+        mask = jnp.ones(tokens.shape, jnp.float32).at[:, -1].set(0.0)
+        return chunked_softmax_xent(x, params["lm_head"], labels, mask,
+                                    chunk=min(512, tokens.shape[1]))
+
+    def prefill(self, params, batch, max_len: int | None = None):
+        """Encode frames + run the decoder prompt; cache self & cross K/V.
+        (Self-KV is always padded to ``max_decoder_len``; ``max_len`` is
+        accepted for API uniformity.)"""
+        cfg = self.cfg
+        memory = self.encode(params, batch["frames"])
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x, (k, v, xk, xv) = self._decoder(params, tokens, memory, "prefill")
+        pad = cfg.max_decoder_len - S
+        cache = {
+            "k": jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+            "v": jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+            "xk": xk, "xv": xv,
+            "len": jnp.full((), S, jnp.int32),
+        }
+        xl = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", xl, params["lm_head"],
+                            preferred_element_type=jnp.float32)[:, 0]
+        return logits, cache
+
+    def decode_step(self, params, cache, batch):
+        cfg = self.cfg
+        clen = cache["len"]
+        x, (k, v) = self._decoder(params, batch["tokens"], None, "decode",
+                                  cache=cache, cache_len=clen)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"],
+                            preferred_element_type=jnp.float32)[:, 0]
+        new_cache = dict(cache)
+        new_cache.update({"k": k, "v": v, "len": clen + 1})
+        return logits, new_cache
+
+    def cache_defs(self, batch_size: int, enc_len: int):
+        cfg = self.cfg
+        Ld, KVH, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+        self_kv = ParamDef((Ld, batch_size, cfg.max_decoder_len, KVH, hd),
+                           ("layers", "batch", None, "kv_heads", "head_dim"),
+                           "zeros")
+        cross_kv = ParamDef((Ld, batch_size, enc_len, KVH, hd),
+                            ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+                            "zeros")
+        return {"k": self_kv, "v": self_kv, "xk": cross_kv, "xv": cross_kv,
+                "len": ParamDef((), (), "zeros")}

@@ -1,0 +1,3 @@
+from repro.profiling.instrument import Profiler
+
+__all__ = ["Profiler"]

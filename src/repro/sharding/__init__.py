@@ -1,0 +1,5 @@
+from repro.sharding.specs import (ShardingRules, constrain, current_rules,
+                                  logical_to_spec, set_rules, spec_for)
+
+__all__ = ["ShardingRules", "constrain", "current_rules", "logical_to_spec",
+           "set_rules", "spec_for"]

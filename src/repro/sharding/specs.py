@@ -1,0 +1,168 @@
+"""Logical-axis sharding rules (DP / TP / EP / SP / FSDP / pod).
+
+Model code annotates tensors with *logical* axis names; a
+:class:`ShardingRules` table maps logical names to mesh axes.  Changing the
+parallelism strategy (the §Perf hillclimb lever) means swapping rule
+tables, never touching model code.
+
+Mesh axes (see ``repro.launch.mesh``):
+
+* ``data`` — data parallel (batch), and the FSDP/ZeRO shard axis
+* ``model`` — tensor parallel (heads / ff / vocab / experts)
+* ``pod``  — second-level data parallel across pods (hierarchical DP);
+             optionally an extra FSDP axis for the largest models
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field, replace
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """logical axis name -> mesh axis (str | tuple | None)."""
+
+    rules: dict = field(default_factory=dict)
+    mesh_axis_sizes: dict = field(default_factory=dict)
+
+    def axis(self, name: str):
+        return self.rules.get(name)
+
+    def size(self, name: str) -> int:
+        ax = self.rules.get(name)
+        if ax is None:
+            return 1
+        if isinstance(ax, tuple):
+            s = 1
+            for a in ax:
+                s *= self.mesh_axis_sizes.get(a, 1)
+            return s
+        return self.mesh_axis_sizes.get(ax, 1)
+
+    def with_overrides(self, **kv) -> "ShardingRules":
+        d = dict(self.rules)
+        d.update(kv)
+        return replace(self, rules=d)
+
+
+def train_rules(mesh_axis_sizes: dict, *, fsdp: bool = False,
+                pod_in_batch: bool = True, seq_shard: bool = False) -> ShardingRules:
+    """Default DP+TP rules; ``fsdp`` adds ZeRO-3 param sharding over data;
+    ``seq_shard`` puts sequence over `model` between blocks (SP)."""
+    batch_axes = ("pod", "data") if (pod_in_batch and "pod" in mesh_axis_sizes) else ("data",)
+    return ShardingRules(rules={
+        "batch": batch_axes if len(batch_axes) > 1 else batch_axes[0],
+        "tokens": batch_axes if len(batch_axes) > 1 else batch_axes[0],
+        "seq": "model" if seq_shard else None,
+        "kv_seq": None,
+        "embed": None,           # activation d_model: replicated
+        "vocab": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "ff": "model",
+        "experts": "model",
+        "expert_ff": None,
+        "moe_cap": None,
+        "layers": None,
+        # FSDP/ZeRO shards params over ALL batch axes (data, and pod when
+        # present) — a 314B model only fits when both axes participate
+        "fsdp": (batch_axes if len(batch_axes) > 1 else batch_axes[0]) if fsdp else None,
+        "ssm_inner": "model",
+        "ssm_state": None,
+        "conv_k": None,
+    }, mesh_axis_sizes=dict(mesh_axis_sizes))
+
+
+def decode_rules(mesh_axis_sizes: dict, *, kv_seq_shard: bool = False,
+                 fsdp: bool = False) -> ShardingRules:
+    """Decode/serving rules: batch over data; long-context KV over data (SP).
+
+    With ``kv_seq_shard`` (batch too small for the data axis, e.g.
+    long_500k's batch=1) the *sequence* of the KV cache takes the data
+    axis and batch/tokens go unsharded.
+    """
+    r = train_rules(mesh_axis_sizes, fsdp=fsdp, pod_in_batch=True)
+    if kv_seq_shard:
+        return r.with_overrides(kv_seq="data", seq=None, batch=None,
+                                tokens=None)
+    return r.with_overrides(kv_seq=None, seq=None)
+
+
+# -- thread-local active (mesh, rules) ---------------------------------------
+
+class _Ctx(threading.local):
+    mesh = None
+    rules: ShardingRules | None = None
+
+
+_ctx = _Ctx()
+
+
+@contextlib.contextmanager
+def set_rules(mesh, rules: ShardingRules):
+    old = (_ctx.mesh, _ctx.rules)
+    _ctx.mesh, _ctx.rules = mesh, rules
+    try:
+        yield
+    finally:
+        _ctx.mesh, _ctx.rules = old
+
+
+def current_rules() -> ShardingRules | None:
+    return _ctx.rules
+
+
+def logical_to_spec(logical_axes: tuple, rules: ShardingRules | None = None) -> P:
+    rules = rules or _ctx.rules
+    if rules is None:
+        return P()
+    parts = []
+    used: set = set()
+
+    def _take(ax):
+        # a mesh axis may appear at most once in a PartitionSpec
+        if ax is None:
+            return None
+        if isinstance(ax, tuple):
+            ax2 = tuple(a for a in ax if a not in used)
+            used.update(ax2)
+            return ax2 if ax2 else None
+        if ax in used:
+            return None
+        used.add(ax)
+        return ax
+
+    for name in logical_axes:
+        if name is None:
+            parts.append(None)
+            continue
+        if isinstance(name, tuple):  # compound: first mappable wins, e.g. ("fsdp","ff")
+            axes = tuple(a for a in (_take(rules.axis(n)) for n in name) if a)
+            flat = tuple(x for a in axes for x in ((a,) if isinstance(a, str) else a))
+            parts.append(flat if flat else None)
+            continue
+        parts.append(_take(rules.axis(name)))
+    return P(*parts)
+
+
+def spec_for(logical_axes: tuple, rules: ShardingRules | None = None):
+    """NamedSharding for the active mesh (None outside a mesh context)."""
+    rules = rules or _ctx.rules
+    mesh = _ctx.mesh
+    if mesh is None or rules is None:
+        return None
+    return NamedSharding(mesh, logical_to_spec(logical_axes, rules))
+
+
+def constrain(x, *logical_axes):
+    """with_sharding_constraint by logical names; no-op without a mesh."""
+    s = spec_for(tuple(logical_axes))
+    if s is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, s)

@@ -1,0 +1,82 @@
+"""Gradient compression for the slow cross-pod hop (DESIGN.md §8).
+
+Two error-feedback schemes:
+
+* **top-k** — keep the k largest-magnitude entries per tensor, accumulate
+  the remainder into a residual that is re-injected next step;
+* **block int8** — the Pallas ``int8_quant`` kernel (block-scaled symmetric
+  quantization), residual = quantization error.
+
+``compressed_psum_pod`` is the collective-schedule variant: inside a
+``shard_map`` over the ``pod`` axis, gradients are quantized to int8,
+all-gathered across pods (4x fewer bytes on the wire than an f32
+all-reduce — this is what moves the §Roofline collective term), and
+dequant-averaged locally.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+
+# -- error-feedback top-k ------------------------------------------------------
+
+def topk_compress(g: jax.Array, frac: float, residual: jax.Array):
+    """Returns ((idx, vals, n), new_residual); g and residual flat f32."""
+    g = g + residual
+    n = g.shape[0]
+    k = max(int(n * frac), 1)
+    vals, idx = jax.lax.top_k(jnp.abs(g), k)
+    picked = g[idx]
+    dense = jnp.zeros_like(g).at[idx].set(picked)
+    return (idx, picked, n), g - dense
+
+
+def topk_decompress(payload, n: int):
+    idx, vals, _ = payload
+    return jnp.zeros(n, vals.dtype).at[idx].set(vals)
+
+
+# -- error-feedback int8 -------------------------------------------------------
+
+def int8_compress(g: jax.Array, residual: jax.Array):
+    q, scales, err = kops.int8_quant(g + residual)
+    return (q, scales), err
+
+
+def int8_decompress(payload, n: int):
+    q, scales = payload
+    return kops.int8_dequant(q, scales, n)
+
+
+# -- compressed cross-pod all-reduce ------------------------------------------
+
+def compressed_psum_pod(x: jax.Array, mesh, *, axis: str = "pod"):
+    """Mean over the pod axis with int8 on the wire.
+
+    Must be called inside shard_map-partitioned code, or applied to a
+    full tensor via the wrapper below.  Wire bytes: n*(1B q + 4B/block
+    scale) vs 4B/elem for f32 psum.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    npods = mesh.shape[axis]
+
+    def body(xl):
+        flat = xl.reshape(-1)
+        pad = (-flat.shape[0]) % 2048
+        flat = jnp.pad(flat, (0, pad))
+        amax = jnp.max(jnp.abs(flat.reshape(-1, 2048)), axis=1)
+        scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+        q = jnp.clip(jnp.round(flat.reshape(-1, 2048) / scale[:, None]),
+                     -127, 127).astype(jnp.int8)
+        qg = jax.lax.all_gather(q, axis)          # int8 on the wire
+        sg = jax.lax.all_gather(scale, axis)
+        deq = (qg.astype(jnp.float32) * sg[..., None]).sum(axis=0) / npods
+        return deq.reshape(-1)[: xl.size].reshape(xl.shape)
+
+    return shard_map(body, mesh=mesh, in_specs=P(), out_specs=P(),
+                     check_rep=False)(x)

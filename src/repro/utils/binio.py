@@ -1,0 +1,89 @@
+"""Binary I/O helpers shared by the profile / PMS / CMS file formats.
+
+Layout conventions (little-endian throughout):
+
+* json block : [u32 length][utf-8 bytes]
+* array block: [4s dtype code][u8 ndim][u64 x ndim shape][raw C-order bytes]
+
+These helpers exist so every on-disk format in :mod:`repro.core` measures its
+exact byte footprint (the paper's evaluation is in bytes, Tables 1/2/4).
+"""
+from __future__ import annotations
+
+import json
+import struct
+from typing import BinaryIO
+
+import numpy as np
+
+_DTYPE_CODES = {
+    "u8  ": np.dtype(np.uint8),
+    "u16 ": np.dtype(np.uint16),
+    "u32 ": np.dtype(np.uint32),
+    "u64 ": np.dtype(np.uint64),
+    "i32 ": np.dtype(np.int32),
+    "i64 ": np.dtype(np.int64),
+    "f32 ": np.dtype(np.float32),
+    "f64 ": np.dtype(np.float64),
+}
+_CODE_FOR_DTYPE = {v: k for k, v in _DTYPE_CODES.items()}
+
+
+def pack_json(obj) -> bytes:
+    payload = json.dumps(obj, separators=(",", ":")).encode("utf-8")
+    return struct.pack("<I", len(payload)) + payload
+
+
+def unpack_json(buf: bytes, off: int = 0):
+    (n,) = struct.unpack_from("<I", buf, off)
+    off += 4
+    obj = json.loads(buf[off : off + n].decode("utf-8"))
+    return obj, off + n
+
+
+def write_json(f: BinaryIO, obj) -> int:
+    data = pack_json(obj)
+    f.write(data)
+    return len(data)
+
+
+def read_json(f: BinaryIO):
+    (n,) = struct.unpack("<I", f.read(4))
+    return json.loads(f.read(n).decode("utf-8"))
+
+
+def pack_array(arr: np.ndarray) -> bytes:
+    arr = np.ascontiguousarray(arr)
+    code = _CODE_FOR_DTYPE[arr.dtype]
+    head = code.encode("ascii") + struct.pack("<B", arr.ndim)
+    head += struct.pack(f"<{arr.ndim}Q", *arr.shape)
+    return head + arr.tobytes()
+
+
+def unpack_array(buf: bytes, off: int = 0):
+    code = buf[off : off + 4].decode("ascii")
+    dtype = _DTYPE_CODES[code]
+    off += 4
+    (ndim,) = struct.unpack_from("<B", buf, off)
+    off += 1
+    shape = struct.unpack_from(f"<{ndim}Q", buf, off)
+    off += 8 * ndim
+    count = int(np.prod(shape)) if ndim else 1
+    nbytes = count * dtype.itemsize
+    arr = np.frombuffer(buf[off : off + nbytes], dtype=dtype).reshape(shape)
+    return arr, off + nbytes
+
+
+def write_array(f: BinaryIO, arr: np.ndarray) -> int:
+    data = pack_array(arr)
+    f.write(data)
+    return len(data)
+
+
+def read_array(f: BinaryIO) -> np.ndarray:
+    code = f.read(4).decode("ascii")
+    dtype = _DTYPE_CODES[code]
+    (ndim,) = struct.unpack("<B", f.read(1))
+    shape = struct.unpack(f"<{ndim}Q", f.read(8 * ndim))
+    count = int(np.prod(shape)) if ndim else 1
+    return np.frombuffer(f.read(count * dtype.itemsize), dtype=dtype).reshape(shape)

@@ -1,0 +1,47 @@
+import numpy as np
+import pytest
+
+from repro.core.cct import KIND_LINE, KIND_MODULE, KIND_OP, KIND_PHASE, ContextTree
+from repro.core.sparse import MeasurementProfile, SparseMetrics, Trace
+
+
+def random_tree(rng: np.random.Generator, n_nodes: int) -> ContextTree:
+    """Random program-structure tree with realistic kinds."""
+    t = ContextTree()
+    kinds = [KIND_PHASE, KIND_MODULE, KIND_MODULE, KIND_OP, KIND_LINE]
+    ids = [0]
+    for i in range(n_nodes):
+        parent = int(rng.choice(ids))
+        k = kinds[min(len(kinds) - 1, int(rng.integers(0, len(kinds))))]
+        ids.append(t.child(parent, k, f"n{i % max(n_nodes // 4, 1)}"))
+    return t
+
+
+def random_sparse(rng: np.random.Generator, n_ctx: int, n_metrics: int,
+                  density: float = 0.1) -> SparseMetrics:
+    n = max(int(n_ctx * n_metrics * density), 1)
+    ctx = rng.integers(0, n_ctx, n)
+    mid = rng.integers(0, n_metrics, n)
+    val = rng.uniform(0.5, 10.0, n)
+    return SparseMetrics.from_triplets(ctx, mid, val)
+
+
+def make_profile(rng: np.random.Generator, n_nodes=50, n_metrics=8, density=0.2,
+                 n_trace=20, identity=None) -> MeasurementProfile:
+    tree = random_tree(rng, n_nodes)
+    sm = random_sparse(rng, len(tree.parent), n_metrics, density)
+    trace = Trace(
+        np.sort(rng.uniform(0, 1, n_trace)),
+        rng.integers(0, len(tree.parent), n_trace).astype(np.uint32),
+    )
+    return MeasurementProfile(
+        environment={"app": "test", "metrics": n_metrics},
+        identity=identity or {"rank": 0, "stream": 0, "kind": "device"},
+        file_paths=["bin/test"],
+        tree=tree, trace=trace, metrics=sm,
+    )
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

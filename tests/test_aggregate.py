@@ -1,0 +1,278 @@
+"""Integration tests: streaming aggregation engine vs direct oracles."""
+import numpy as np
+import pytest
+
+from repro.core.aggregate import AggregationConfig, StreamingAggregator
+from repro.core.cct import (KIND_LOOP, KIND_MODULE, KIND_OP, KIND_PHASE,
+                            ContextTree)
+from repro.core.cms import CMSReader
+from repro.core.lexical import StructureInfo
+from repro.core.metrics import INCLUSIVE_BIT
+from repro.core.pms import PMSReader
+from repro.core.propagate import propagate_inclusive
+from repro.core.reduction import aggregate_multiprocess, tree_reduce
+from repro.core.sparse import MeasurementProfile, SparseMetrics, Trace
+from repro.core.traces import TraceDBReader
+
+
+def pathkey(tree, cid):
+    parts = []
+    while cid > 0:
+        parts.append((tree.kind[cid], tree.name_of(cid)))
+        cid = tree.parent[cid]
+    return tuple(reversed(parts))
+
+
+def keymap(tree):
+    return {pathkey(tree, c): c for c in range(len(tree.parent))}
+
+
+def make_app_profiles(rng, P=6, n_ops=12, n_metrics=6, with_trace=True):
+    """P profiles of one 'application': shared phases, overlapping op sets."""
+    profs = []
+    for p in range(P):
+        t = ContextTree()
+        fwd = t.child(0, KIND_PHASE, "fwd")
+        bwd = t.child(0, KIND_PHASE, "bwd")
+        ctxs, mids, vals = [], [], []
+        for k in range(n_ops):
+            if (k + p) % 3 == 0:
+                continue  # each profile observes a subset (paper's sparsity)
+            phase = fwd if k % 2 == 0 else bwd
+            op = t.child(phase, KIND_OP, f"op{k}")
+            for m in range(n_metrics):
+                if (m + k) % 2 == p % 2:  # device vs host metric split
+                    ctxs.append(op)
+                    mids.append(m)
+                    vals.append(float(rng.uniform(0.5, 4.0)))
+        sm = SparseMetrics.from_triplets(ctxs, mids, vals)
+        trace = Trace(np.sort(rng.uniform(0, 1, 10)),
+                      rng.choice(np.arange(1, len(t)), 10).astype(np.uint32)) \
+            if with_trace else Trace.empty()
+        profs.append(MeasurementProfile(
+            environment={"app": "synthetic"},
+            identity={"rank": p // 2, "stream": p % 2},
+            file_paths=[], tree=t, trace=trace, metrics=sm))
+    return profs
+
+
+def save_profiles(tmp_path, profs):
+    paths = []
+    for i, p in enumerate(profs):
+        path = tmp_path / f"prof{i:03d}.rprf"
+        p.save(path)
+        paths.append(str(path))
+    return paths
+
+
+def oracle(profs):
+    unified = ContextTree()
+    remaps = [unified.merge(p.tree) for p in profs]
+    pos, order, end = unified.preorder()
+    outs = [propagate_inclusive(p.metrics.remap_contexts(r), pos, end)
+            for p, r in zip(profs, remaps)]
+    return unified, outs
+
+
+# ---------------------------------------------------------------------------
+
+def test_engine_matches_oracle(tmp_path, rng):
+    profs = make_app_profiles(rng)
+    paths = save_profiles(tmp_path, profs)
+    res = StreamingAggregator(tmp_path / "out", AggregationConfig(n_threads=3)).run(paths)
+    unified, outs = oracle(profs)
+    with PMSReader(res.pms_path) as r:
+        ekeys = keymap(r.tree)
+        okeys = {c: pathkey(unified, c) for c in range(len(unified.parent))}
+        for pid, out in enumerate(outs):
+            plane = r.plane(pid)
+            rows, mids, vals = out.triplets()
+            # every oracle triplet present with identical value
+            for c, m, v in zip(rows, mids, vals):
+                ec = ekeys[okeys[int(c)]]
+                assert plane.lookup(ec, int(m)) == pytest.approx(v), (pid, okeys[int(c)], m)
+            # and no extra values
+            assert plane.n_values == out.n_values
+        # identities preserved
+        assert r.identity(3) == profs[3].identity
+
+
+def test_engine_stats_match_recomputation(tmp_path, rng):
+    profs = make_app_profiles(rng, P=5)
+    paths = save_profiles(tmp_path, profs)
+    res = StreamingAggregator(tmp_path / "out", AggregationConfig(n_threads=2)).run(paths)
+    with PMSReader(res.pms_path) as r:
+        planes = [r.plane(p) for p in range(res.n_profiles)]
+        stats = r.stats
+        ctx = stats["ctx"].astype(int)
+        mid = stats["mid"].astype(int)
+        for i in range(len(ctx)):
+            col = np.array([pl.lookup(ctx[i], mid[i]) for pl in planes])
+            nz = col[col != 0]
+            assert stats["count"][i] == nz.size
+            assert stats["sum"][i] == pytest.approx(nz.sum())
+            assert stats["mean"][i] == pytest.approx(nz.mean())
+            assert stats["max"][i] == pytest.approx(nz.max())
+
+
+def test_engine_cms_consistent_with_pms(tmp_path, rng):
+    profs = make_app_profiles(rng)
+    paths = save_profiles(tmp_path, profs)
+    res = StreamingAggregator(tmp_path / "out", AggregationConfig(n_threads=2)).run(paths)
+    with PMSReader(res.pms_path) as pr, CMSReader(res.cms_path) as cr:
+        for pid in range(res.n_profiles):
+            rows, mids, vals = pr.plane(pid).triplets()
+            for c, m, v in zip(rows, mids, vals):
+                assert cr.query(int(c), int(m), pid) == pytest.approx(v)
+
+
+def test_inclusive_root_equals_totals(tmp_path, rng):
+    profs = make_app_profiles(rng, P=3, with_trace=False)
+    paths = save_profiles(tmp_path, profs)
+    res = StreamingAggregator(tmp_path / "out").run(paths)
+    with PMSReader(res.pms_path) as r:
+        for pid, prof in enumerate(profs):
+            plane = r.plane(pid)
+            _, mids, vals = prof.metrics.triplets()
+            for m in np.unique(mids):
+                assert plane.lookup(0, int(m) | INCLUSIVE_BIT) == pytest.approx(
+                    vals[mids == m].sum())
+
+
+def test_two_buffer_thresholds_equivalent(tmp_path, rng):
+    profs = make_app_profiles(rng)
+    paths = save_profiles(tmp_path, profs)
+    res_small = StreamingAggregator(
+        tmp_path / "small", AggregationConfig(n_threads=3, buffer_bytes=64)).run(paths)
+    res_big = StreamingAggregator(
+        tmp_path / "big", AggregationConfig(n_threads=1, buffer_bytes=1 << 24)).run(paths)
+    with PMSReader(res_small.pms_path) as a, PMSReader(res_big.pms_path) as b:
+        ka, kb = keymap(a.tree), keymap(b.tree)
+        inv_b = {v: k for k, v in kb.items()}
+        for pid in range(len(profs)):
+            pa, pb = a.plane(pid), b.plane(pid)
+            assert pa.n_values == pb.n_values
+            rows, mids, vals = pb.triplets()
+            for c, m, v in zip(rows, mids, vals):
+                assert pa.lookup(ka[inv_b[int(c)]], int(m)) == pytest.approx(v)
+
+
+# ---------------------------------------------------------------------------
+# lexical expansion & reconstruction through the engine
+# ---------------------------------------------------------------------------
+
+def _profile_with_structure(tmp_path, fused=False):
+    t = ContextTree()
+    fwd = t.child(0, KIND_PHASE, "fwd")
+    op_a = t.child(fwd, KIND_OP, "dot_general.1")
+    op_b = t.child(fwd, KIND_OP, "fusion.7" if fused else "dot_general.2")
+    sm = SparseMetrics.from_triplets([op_a, op_b], [0, 0], [10.0, 8.0])
+    s = StructureInfo("hlo@deadbeef")
+    s.add_op("dot_general.1", [(KIND_MODULE, "layers.0"), (KIND_LOOP, "scan")])
+    if fused:
+        s.add_op("fusion.7", [(KIND_MODULE, "layers.0")], weight=3.0)
+        s.add_op("fusion.7", [(KIND_MODULE, "layers.1")], weight=1.0)
+    else:
+        s.add_op("dot_general.2", [(KIND_MODULE, "layers.1")])
+    spath = str(tmp_path / "mod.struct.json")
+    s.save(spath)
+    prof = MeasurementProfile(identity={"rank": 0}, file_paths=[spath],
+                              tree=t, metrics=sm)
+    ppath = str(tmp_path / "p.rprf")
+    prof.save(ppath)
+    return ppath
+
+
+def test_lexical_expansion_inserts_scopes(tmp_path):
+    ppath = _profile_with_structure(tmp_path)
+    res = StreamingAggregator(tmp_path / "out").run([ppath])
+    with PMSReader(res.pms_path) as r:
+        keys = keymap(r.tree)
+        mod0 = keys[((1, "fwd"), (2, "layers.0"), (3, "scan"))]
+        op0 = keys[((1, "fwd"), (2, "layers.0"), (3, "scan"), (4, "dot_general.1"))]
+        plane = r.plane(0)
+        assert plane.lookup(op0, 0) == 10.0                       # exclusive at leaf
+        assert plane.lookup(mod0, INCLUSIVE_BIT) == 10.0          # rolls up scopes
+        fwd = keys[((1, "fwd"),)]
+        assert plane.lookup(fwd, INCLUSIVE_BIT) == 18.0
+
+
+def test_superposition_redistribution(tmp_path):
+    ppath = _profile_with_structure(tmp_path, fused=True)
+    res = StreamingAggregator(tmp_path / "out").run([ppath])
+    with PMSReader(res.pms_path) as r:
+        keys = keymap(r.tree)
+        leaf0 = keys[((1, "fwd"), (2, "layers.0"), (4, "fusion.7"))]
+        leaf1 = keys[((1, "fwd"), (2, "layers.1"), (4, "fusion.7"))]
+        plane = r.plane(0)
+        assert plane.lookup(leaf0, 0) == pytest.approx(6.0)   # 8 * 3/4
+        assert plane.lookup(leaf1, 0) == pytest.approx(2.0)   # 8 * 1/4
+        # placeholder itself carries nothing after redistribution
+        ph = keys.get(((1, "fwd"), (6, "fusion.7@superposition")))
+        assert ph is not None
+        assert plane.lookup(ph, 0) == 0.0
+        # inclusive flows through the reconstructed routes
+        mod1 = keys[((1, "fwd"), (2, "layers.1"))]
+        assert plane.lookup(mod1, INCLUSIVE_BIT) == pytest.approx(2.0)
+
+
+# ---------------------------------------------------------------------------
+# traces
+# ---------------------------------------------------------------------------
+
+def test_traces_remapped(tmp_path, rng):
+    profs = make_app_profiles(rng, P=4)
+    paths = save_profiles(tmp_path, profs)
+    res = StreamingAggregator(tmp_path / "out").run(paths)
+    with PMSReader(res.pms_path) as r:
+        keys = keymap(r.tree)
+        tr = TraceDBReader(res.trace_path)
+        for pid, prof in enumerate(profs):
+            got = tr.trace(pid)
+            np.testing.assert_allclose(got.time, prof.trace.time)
+            for orig, new in zip(prof.trace.ctx, got.ctx):
+                assert keys[pathkey(prof.tree, int(orig))] == int(new)
+        tr.close()
+
+
+# ---------------------------------------------------------------------------
+# process-level parallelism (paper §4.4)
+# ---------------------------------------------------------------------------
+
+def test_tree_reduce_rounds():
+    merged, rounds = tree_reduce(list(range(27)), lambda a, b: a + b, 3)
+    assert merged == sum(range(27))
+    assert rounds == 3  # log_3(27)
+
+
+def test_multiprocess_matches_single_rank(tmp_path, rng):
+    profs = make_app_profiles(rng, P=8)
+    paths = save_profiles(tmp_path, profs)
+    res1 = StreamingAggregator(tmp_path / "single").run(paths)
+    res2 = aggregate_multiprocess(paths, str(tmp_path / "multi"),
+                                  n_ranks=3, threads_per_rank=2)
+    with PMSReader(res1.pms_path) as a, PMSReader(res2.pms_path) as b:
+        ka, kb = keymap(a.tree), keymap(b.tree)
+        assert set(ka) == set(kb)  # identical unified context sets
+        inv_a = {v: k for k, v in ka.items()}
+        for pid in range(len(profs)):
+            pa, pb = a.plane(pid), b.plane(pid)
+            assert pa.n_values == pb.n_values
+            rows, mids, vals = pa.triplets()
+            for c, m, v in zip(rows, mids, vals):
+                assert pb.lookup(kb[inv_a[int(c)]], int(m)) == pytest.approx(v)
+        # stats agree (keyed by path)
+        sa, sb = a.stats, b.stats
+        da = {(inv_a[int(c)], int(m)): s for c, m, s in
+              zip(sa["ctx"], sa["mid"], sa["sum"])}
+        inv_b = {v: k for k, v in kb.items()}
+        db = {(inv_b[int(c)], int(m)): s for c, m, s in
+              zip(sb["ctx"], sb["mid"], sb["sum"])}
+        assert set(da) == set(db)
+        for k in da:
+            assert da[k] == pytest.approx(db[k])
+    # traces written for all profiles in both modes
+    ta, tb = TraceDBReader(res1.trace_path), TraceDBReader(res2.trace_path)
+    for pid in range(len(profs)):
+        np.testing.assert_allclose(ta.trace(pid).time, tb.trace(pid).time)
+    ta.close(); tb.close()

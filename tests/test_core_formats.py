@@ -1,0 +1,195 @@
+"""Unit + property tests for the sparse formats (paper §3) and CCT."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.cct import KIND_MODULE, KIND_OP, ContextTree
+from repro.core.metrics import INCLUSIVE_BIT, MetricRegistry, default_registry
+from repro.core.sparse import MeasurementProfile, SparseMetrics, Trace
+from tests.conftest import make_profile, random_sparse, random_tree
+
+
+# ---------------------------------------------------------------------------
+# SparseMetrics (Fig. 1 measurement format)
+# ---------------------------------------------------------------------------
+
+def test_from_dense_roundtrip(rng):
+    mat = rng.uniform(0, 1, (40, 12))
+    mat[mat < 0.7] = 0.0
+    sm = SparseMetrics.from_dense(mat)
+    np.testing.assert_allclose(sm.to_dense(40, 12), mat)
+
+
+def test_lookup_matches_dense(rng):
+    mat = rng.uniform(0, 1, (30, 6))
+    mat[mat < 0.5] = 0.0
+    sm = SparseMetrics.from_dense(mat)
+    for c in range(30):
+        for m in range(6):
+            assert sm.lookup(c, m) == pytest.approx(mat[c, m])
+
+
+def test_triplet_duplicates_summed():
+    sm = SparseMetrics.from_triplets([3, 3, 1], [2, 2, 0], [1.0, 2.0, 5.0])
+    assert sm.lookup(3, 2) == 3.0
+    assert sm.lookup(1, 0) == 5.0
+    assert sm.n_contexts == 2
+
+
+def test_zeros_dropped():
+    sm = SparseMetrics.from_triplets([0, 1], [0, 0], [0.0, 1.0])
+    assert sm.n_values == 1
+    assert sm.n_contexts == 1
+
+
+def test_encode_decode_roundtrip(rng):
+    sm = random_sparse(rng, 100, 16, 0.1)
+    dec, _ = SparseMetrics.decode(sm.encode())
+    np.testing.assert_array_equal(dec.ctx, sm.ctx)
+    np.testing.assert_array_equal(dec.start, sm.start)
+    np.testing.assert_array_equal(dec.mid, sm.mid)
+    np.testing.assert_allclose(dec.val, sm.val)
+
+
+def test_sparse_space_bound(rng):
+    """Paper §3.1: O(2(x+c+1)) words vs dense n_ctx*n_metrics."""
+    sm = random_sparse(rng, 1000, 64, 0.01)
+    x, c = sm.n_values, sm.n_contexts
+    # ours: u32 ctx + u64 start + u16 mid + f64 val
+    assert sm.nbytes() <= 12 * (c + 1) + 10 * x + 16
+    dense = SparseMetrics.dense_nbytes(1000, 64)
+    assert sm.nbytes() < dense / 10  # strong savings at 1% density
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 200), st.integers(0, 30),
+                          st.floats(0.001, 1e6)), max_size=200))
+def test_property_triplet_roundtrip(triplets):
+    """Property: from_triplets is the canonical form of any triplet multiset."""
+    if not triplets:
+        return
+    ctx, mid, val = zip(*triplets)
+    sm = SparseMetrics.from_triplets(ctx, mid, val)
+    # CSR invariants
+    assert np.all(np.diff(sm.ctx.astype(np.int64)) > 0)  # strictly increasing contexts
+    assert sm.start[0] == 0 and sm.start[-1] == sm.n_values
+    assert np.all(np.diff(sm.start.astype(np.int64)) > 0)  # non-empty contexts only
+    # per-context metric ids sorted strictly (duplicates combined)
+    for k in range(sm.n_contexts):
+        s, e = int(sm.start[k]), int(sm.start[k + 1])
+        assert np.all(np.diff(sm.mid[s:e].astype(np.int64)) > 0)
+    # total conservation
+    assert np.isclose(sm.val.sum(), sum(val), rtol=1e-12)
+    # encode/decode identity
+    dec, _ = SparseMetrics.decode(sm.encode())
+    np.testing.assert_array_equal(dec.mid, sm.mid)
+    np.testing.assert_allclose(dec.val, sm.val)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 40), st.integers(1, 12), st.integers(0, 2**32 - 1))
+def test_property_dense_sparse_dense(n_ctx, n_met, seed):
+    rng = np.random.default_rng(seed)
+    mat = rng.uniform(0, 1, (n_ctx, n_met))
+    mat[mat < 0.6] = 0.0
+    sm = SparseMetrics.from_dense(mat)
+    np.testing.assert_allclose(sm.to_dense(n_ctx, n_met), mat)
+
+
+# ---------------------------------------------------------------------------
+# ContextTree
+# ---------------------------------------------------------------------------
+
+def test_tree_uniquing():
+    t = ContextTree()
+    a = t.child(0, KIND_MODULE, "layers.0")
+    b = t.child(0, KIND_MODULE, "layers.0")
+    assert a == b
+    c = t.child(a, KIND_OP, "dot")
+    assert c != a and len(t) == 3
+
+
+def test_tree_merge_remap(rng):
+    t1 = random_tree(rng, 30)
+    t2 = random_tree(rng, 30)
+    before = len(t1)
+    remap = t1.merge(t2)
+    assert remap.shape[0] == len(t2)
+    # every remapped node preserves (kind, name) and parent linkage
+    for cid in range(1, len(t2)):
+        nid = int(remap[cid])
+        assert t1.kind[nid] == t2.kind[cid]
+        assert t1.name_of(nid) == t2.name_of(cid)
+        assert int(remap[t2.parent[cid]]) == t1.parent[nid]
+    # merging the same tree again is idempotent
+    n_after = len(t1)
+    t1.merge(t2)
+    assert len(t1) == n_after
+    assert len(t1) >= before
+
+
+def test_preorder_invariants(rng):
+    t = random_tree(rng, 100)
+    pos, order, end = t.preorder()
+    n = len(t)
+    # permutation
+    assert sorted(order.tolist()) == list(range(n))
+    np.testing.assert_array_equal(pos[order], np.arange(n))
+    # subtree containment: child interval nested in parent interval
+    for cid in range(1, n):
+        p = t.parent[cid]
+        assert pos[p] < pos[cid] < end[pos[cid]] <= end[pos[p]]
+    # root spans everything
+    assert pos[0] == 0 and end[0] == n
+
+
+def test_tree_serialization_roundtrip(rng):
+    t = random_tree(rng, 60)
+    t2 = ContextTree.from_arrays(t.to_arrays())
+    assert len(t2) == len(t)
+    for cid in range(len(t)):
+        assert t2.full_path(cid) == t.full_path(cid)
+    # children index rebuilt: uniquing still works
+    assert t2.child(0, t.kind[1], t.name_of(1)) == 1
+
+
+# ---------------------------------------------------------------------------
+# MeasurementProfile file format
+# ---------------------------------------------------------------------------
+
+def test_profile_save_load(tmp_path, rng):
+    p = make_profile(rng)
+    path = tmp_path / "p0.rprf"
+    n = p.save(path)
+    assert path.stat().st_size == n
+    q = MeasurementProfile.load(path)
+    assert q.identity == p.identity
+    assert q.environment == p.environment
+    np.testing.assert_allclose(q.metrics.val, p.metrics.val)
+    np.testing.assert_array_equal(q.trace.ctx, p.trace.ctx)
+    assert len(q.tree) == len(p.tree)
+
+
+# ---------------------------------------------------------------------------
+# MetricRegistry
+# ---------------------------------------------------------------------------
+
+def test_registry_merge_and_inclusive_bit():
+    r1 = default_registry(families=("attention",))
+    r2 = MetricRegistry()
+    r2.register("custom.metric")
+    r2.register("dev.flops")  # collides with r1 name
+    remap = r1.merge(r2)
+    assert r1["custom.metric"].mid == remap[0]
+    assert remap[1] == r1["dev.flops"].mid
+    m = r1["dev.flops"]
+    assert r1.name_of(m.inclusive_mid) == "dev.flops:I"
+    assert m.inclusive_mid & INCLUSIVE_BIT
+
+
+def test_registry_json_roundtrip():
+    r = default_registry()
+    r2 = MetricRegistry.from_json(r.to_json())
+    assert len(r2) == len(r)
+    assert r2["dev.flops"].mid == r["dev.flops"].mid

@@ -1,0 +1,172 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.kernels import ops, ref
+
+
+def _sorted_ids(rng, n, s):
+    return np.sort(rng.integers(0, s, n)).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# segstats
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,s", [(64, 16), (512, 128), (1500, 700), (4096, 1000),
+                                 (1024, 1), (8192, 3000)])
+def test_segstats_matches_ref(rng, n, s):
+    ids = _sorted_ids(rng, n, s)
+    vals = rng.uniform(0.1, 5.0, n).astype(np.float32)
+    got = ops.segstats(jnp.asarray(ids), jnp.asarray(vals), s)
+    want = ref.segstats_ref(jnp.asarray(ids), jnp.asarray(vals), s)
+    # empty-segment min/max finalize to 0 in ops
+    want = np.array(want)
+    empty = want[:, 1] == 0
+    want[empty, 2] = 0.0
+    want[empty, 3] = 0.0
+    assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-5)
+
+
+def test_segstats_negative_and_empty_segments(rng):
+    ids = np.array([0, 0, 5, 5, 5, 9], dtype=np.int32)
+    vals = np.array([-1.0, 2.0, 3.0, -4.0, 1.0, 7.0], dtype=np.float32)
+    out = np.asarray(ops.segstats(jnp.asarray(ids), jnp.asarray(vals), 10))
+    assert out[0, 0] == pytest.approx(1.0)       # sum
+    assert out[0, 2] == pytest.approx(-1.0)      # min
+    assert out[5, 3] == pytest.approx(3.0)       # max
+    assert out[5, 1] == 3                         # count
+    assert np.all(out[1:5] == 0) and np.all(out[6:9] == 0)
+
+
+@pytest.mark.parametrize("block_n,block_s", [(256, 128), (512, 512), (1024, 256)])
+def test_segstats_block_shape_sweep(rng, block_n, block_s):
+    ids = _sorted_ids(rng, 2048, 600)
+    vals = rng.normal(size=2048).astype(np.float32)
+    got = ops.segstats(jnp.asarray(ids), jnp.asarray(vals), 600,
+                       block_n=block_n, block_s=block_s)
+    base = ops.segstats(jnp.asarray(ids), jnp.asarray(vals), 600)
+    assert_allclose(np.asarray(got), np.asarray(base), rtol=1e-5, atol=1e-5)
+
+
+def test_segstats_matches_stats_accumulator(rng):
+    """Kernel output == the engine's StatsAccumulator on identical data."""
+    from repro.core.sparse import SparseMetrics
+    from repro.core.stats import StatsAccumulator, pack_keys
+    sms = [SparseMetrics.from_triplets(rng.integers(0, 20, 50),
+                                       rng.integers(0, 8, 50),
+                                       rng.uniform(0.1, 2, 50)) for _ in range(4)]
+    acc = StatsAccumulator()
+    for sm in sms:
+        acc.update(sm)
+    fin = acc.finalize()
+    # kernel path: keys = ctx*2^16 + mid compacted to dense ranks
+    all_keys, all_vals = [], []
+    for sm in sms:
+        r, m, v = sm.triplets()
+        all_keys.append(pack_keys(r, m))
+        all_vals.append(v)
+    keys = np.concatenate(all_keys)
+    vals = np.concatenate(all_vals).astype(np.float32)
+    uniq, ranks = np.unique(keys, return_inverse=True)
+    order = np.argsort(ranks, kind="stable")
+    out = np.asarray(ops.segstats(jnp.asarray(ranks[order].astype(np.int32)),
+                                  jnp.asarray(vals[order]), uniq.size))
+    assert uniq.size == len(fin["ctx"])
+    assert_allclose(out[:, 0], fin["sum"], rtol=1e-5)
+    assert_allclose(out[:, 1], fin["count"], rtol=1e-6)
+    assert_allclose(out[:, 2], fin["min"], rtol=1e-5)
+    assert_allclose(out[:, 3], fin["max"], rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# blockscan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,m", [(8, 1), (1024, 4), (3000, 2), (8192, 16), (17, 3)])
+def test_blockscan_matches_ref(rng, n, m):
+    x = rng.normal(size=(n, m)).astype(np.float32)
+    got = ops.blockscan(jnp.asarray(x))
+    assert_allclose(np.asarray(got), np.asarray(ref.blockscan_ref(x)),
+                    rtol=1e-4, atol=1e-4)
+
+
+def test_blockscan_1d_and_exclusive(rng):
+    x = rng.uniform(0, 3, 1000).astype(np.float32)
+    inc = np.asarray(ops.blockscan(jnp.asarray(x)))
+    assert_allclose(inc, np.cumsum(x), rtol=1e-5)
+    exc = np.asarray(ops.exclusive_scan(jnp.asarray(x)))
+    assert exc[0] == 0
+    assert_allclose(exc[-1], x.sum(), rtol=1e-5)
+    assert exc.shape[0] == 1001
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_blockscan_dtypes(rng, dtype):
+    x = rng.normal(size=(512, 2)).astype(dtype)
+    got = np.asarray(ops.blockscan(jnp.asarray(x)))
+    assert_allclose(got, np.cumsum(x, axis=0), rtol=1e-3, atol=1e-4)
+
+
+def test_inclusive_from_exclusive_matches_tree_walk(rng):
+    from repro.core.propagate import propagate_inclusive
+    from repro.core.sparse import SparseMetrics
+    from tests.conftest import random_sparse, random_tree
+    t = random_tree(rng, 64)
+    sm = random_sparse(rng, len(t), 4, 0.2)
+    pos, order, end = t.preorder()
+    dense = sm.to_dense(len(t), 4)[order].astype(np.float32)
+    incl = np.asarray(ops.inclusive_from_exclusive(
+        jnp.asarray(dense), jnp.asarray(end)))
+    oracle = propagate_inclusive(sm, pos, end, keep_exclusive=False)
+    from repro.core.metrics import INCLUSIVE_BIT
+    for k in range(oracle.n_contexts):
+        c = int(oracle.ctx[k])
+        mids, vals = oracle.context_slice(c)
+        for m, v in zip(mids, vals):
+            assert incl[pos[c], int(m) & ~INCLUSIVE_BIT] == pytest.approx(v, rel=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# scatter_add
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,s,m", [(256, 64, 1), (1024, 300, 4), (5000, 1200, 2)])
+def test_scatter_add_matches_ref(rng, n, s, m):
+    ids = rng.integers(0, s, n).astype(np.int32)  # UNSORTED
+    vals = rng.normal(size=(n, m)).astype(np.float32)
+    got = ops.scatter_add(jnp.asarray(ids), jnp.asarray(vals), s)
+    want = ref.scatter_add_ref(jnp.asarray(ids), jnp.asarray(vals), s)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_histogram(rng):
+    ids = rng.integers(0, 50, 4000).astype(np.int32)
+    got = np.asarray(ops.histogram(jnp.asarray(ids), 50))
+    assert_allclose(got, np.bincount(ids, minlength=50).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# int8_quant
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [2048, 4096, 1000])
+def test_int8_quant_matches_ref(rng, n):
+    x = rng.normal(size=n).astype(np.float32) * 3.0
+    q, s, e = ops.int8_quant(jnp.asarray(x))
+    # reconstruction + error == original exactly
+    block = min(2048, max(128, n))
+    recon = np.asarray(ops.int8_dequant(q, s, n, block))
+    assert_allclose(recon + np.asarray(e), x, rtol=1e-5, atol=1e-6)
+    # quantization error bounded by scale/2 per element
+    scales = np.repeat(np.asarray(s), block)[:n]
+    assert np.all(np.abs(np.asarray(e)) <= scales * 0.5 + 1e-7)
+
+
+def test_int8_quant_zero_block():
+    x = jnp.zeros(2048, jnp.float32)
+    q, s, e = ops.int8_quant(x)
+    assert np.all(np.asarray(q) == 0) and np.all(np.asarray(e) == 0)

@@ -1,0 +1,111 @@
+"""System-invariant property tests (hypothesis)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.sparse import SparseMetrics
+from repro.core.stats import StatsAccumulator
+from repro.data import TokenPipeline
+from repro.train.compression import (int8_compress, int8_decompress,
+                                     topk_compress, topk_decompress)
+import jax.numpy as jnp
+
+
+def _sm(rng, n_ctx=25, n_met=6, density=0.3):
+    n = max(int(n_ctx * n_met * density), 1)
+    return SparseMetrics.from_triplets(
+        rng.integers(0, n_ctx, n), rng.integers(0, n_met, n),
+        rng.uniform(0.1, 5, n))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 12), st.integers(2, 4))
+def test_stats_merge_associative_and_order_free(seed, n_parts, branching):
+    """Reduction trees of any shape/order give identical statistics —
+    the invariant that makes the paper's §4.4 tree reduction correct."""
+    rng = np.random.default_rng(seed)
+    sms = [_sm(rng) for _ in range(n_parts)]
+    # sequential
+    seq = StatsAccumulator()
+    for s in sms:
+        seq.update(s)
+    # shuffled tree
+    order = rng.permutation(n_parts)
+    accs = []
+    for i in order:
+        a = StatsAccumulator()
+        a.update(sms[i])
+        accs.append(a)
+    while len(accs) > 1:
+        nxt = []
+        for j in range(0, len(accs), branching):
+            head = accs[j]
+            for other in accs[j + 1 : j + branching]:
+                head.merge(other)
+            nxt.append(head)
+        accs = nxt
+    a, b = seq.finalize(), accs[0].finalize()
+    np.testing.assert_array_equal(a["ctx"], b["ctx"])
+    for k in ("sum", "count", "min", "max"):
+        np.testing.assert_allclose(a[k], b[k], rtol=1e-12)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([1, 2, 4, 8]))
+def test_pipeline_elastic_partition_property(seed, n_shards):
+    """Any resharding partitions the identical global batch."""
+    rng = np.random.default_rng(seed)
+    p = TokenPipeline(int(rng.integers(10, 5000)), 8, 16, seed=seed % 997)
+    step = int(rng.integers(0, 1000))
+    shards = [p.resharded(i, n_shards).batch_at(step) for i in range(n_shards)]
+    np.testing.assert_array_equal(np.concatenate(shards),
+                                  p.global_batch_at(step))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.floats(0.05, 0.9))
+def test_topk_compression_error_bounded(seed, frac):
+    """Error feedback: residual norm stays bounded by the gradient norm."""
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(size=1024).astype(np.float32))
+    residual = jnp.zeros_like(g)
+    for _ in range(10):
+        payload, residual = topk_compress(g, frac, residual)
+        d = topk_decompress(payload, 1024)
+        # decompressed payload has exactly k nonzeros
+        assert int((np.asarray(d) != 0).sum()) <= max(int(1024 * frac), 1)
+    assert float(jnp.linalg.norm(residual)) < 10 * float(jnp.linalg.norm(g))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_int8_roundtrip_identity_property(seed):
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray((rng.normal(size=2048) * rng.uniform(0.01, 100))
+                    .astype(np.float32))
+    payload, err = int8_compress(g, jnp.zeros_like(g))
+    recon = int8_decompress(payload, 2048)
+    np.testing.assert_allclose(np.asarray(recon + err), np.asarray(g),
+                               rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_propagation_idempotent_on_inclusive(seed):
+    """Propagating exclusive-only vs keeping both: exclusive values are
+    preserved verbatim and inclusive(root) == total, for any tree."""
+    from repro.core.metrics import INCLUSIVE_BIT
+    from repro.core.propagate import propagate_inclusive
+    from tests.conftest import random_sparse, random_tree
+    rng = np.random.default_rng(seed)
+    t = random_tree(rng, int(rng.integers(2, 50)))
+    sm = random_sparse(rng, len(t), 4, 0.3)
+    pos, order, end = t.preorder()
+    out = propagate_inclusive(sm, pos, end)
+    rows, mids, vals = sm.triplets()
+    for c, m, v in zip(rows, mids, vals):
+        assert out.lookup(int(c), int(m)) == pytest.approx(v)
+    for m in np.unique(mids):
+        assert out.lookup(0, int(m) | INCLUSIVE_BIT) == pytest.approx(
+            vals[mids == m].sum())

@@ -1,0 +1,128 @@
+"""HLO cost model: trip-count awareness, dot flops, collective bytes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import hlo_cost, roofline
+
+
+def _compile(f, *args):
+    return jax.jit(f).lower(*args).compile()
+
+
+def test_scan_trip_count_scaling():
+    """The whole point: while bodies scale by trip count (XLA counts once)."""
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=8)
+        return y.sum()
+
+    x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    w = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    compiled = _compile(f, x, w)
+    cost = hlo_cost.analyze_text(compiled.as_text())
+    expect = 8 * 2 * 256**3
+    assert expect * 0.95 < cost.flops < expect * 1.2, cost.flops
+    # XLA's own count misses the loop: ours must be ~8x larger
+    xla = compiled.cost_analysis()["flops"]
+    assert cost.flops > 6 * xla
+
+
+def test_dot_flops_with_batch_dims():
+    def f(a, b):
+        return jnp.einsum("bij,bjk->bik", a, b)
+    a = jax.ShapeDtypeStruct((4, 64, 128), jnp.float32)
+    b = jax.ShapeDtypeStruct((4, 128, 32), jnp.float32)
+    cost = hlo_cost.analyze_text(_compile(f, a, b).as_text())
+    expect = 2 * 4 * 64 * 128 * 32
+    assert expect * 0.95 < cost.flops < expect * 1.3
+
+
+def test_nested_scan_multiplies():
+    def f(x):
+        def outer(c, _):
+            def inner(d, _):
+                return d @ x, None
+            d, _ = jax.lax.scan(inner, c, None, length=4)
+            return d, None
+        y, _ = jax.lax.scan(outer, x, None, length=3)
+        return y.sum()
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    cost = hlo_cost.analyze_text(_compile(f, x).as_text())
+    expect = 3 * 4 * 2 * 128**3
+    assert expect * 0.9 < cost.flops < expect * 1.3
+
+
+def test_no_loop_matches_xla_cost_analysis():
+    def f(a, b):
+        return jnp.tanh(a @ b).sum()
+    a = jax.ShapeDtypeStruct((512, 512), jnp.float32)
+    b = jax.ShapeDtypeStruct((512, 512), jnp.float32)
+    compiled = _compile(f, a, b)
+    cost = hlo_cost.analyze_text(compiled.as_text())
+    xla = compiled.cost_analysis()["flops"]
+    assert abs(cost.flops - xla) / xla < 0.2
+
+
+def test_collective_bytes_sharded(force8):
+    mesh = jax.make_mesh((8,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def f(x, w):
+        return jnp.tanh(x @ w).sum()
+
+    x = jax.ShapeDtypeStruct((64, 1024), jnp.bfloat16)
+    w = jax.ShapeDtypeStruct((1024, 1024), jnp.bfloat16)
+    with mesh:
+        compiled = jax.jit(f, in_shardings=(
+            NamedSharding(mesh, P("data", None)),
+            NamedSharding(mesh, P(None, "data")),
+        )).lower(x, w).compile()
+    cost = hlo_cost.analyze_text(compiled.as_text())
+    assert cost.coll_bytes > 0
+    stats = roofline.collective_bytes(compiled.as_text())
+    assert stats.total > 0
+
+
+@pytest.fixture(scope="module")
+def force8():
+    # tests run in-process: the device count is already fixed; just require
+    # that at least one device exists (the sharded test uses a size-8 mesh
+    # only when available, else skips)
+    if len(jax.devices()) < 8:
+        pytest.skip("needs 8 devices (run via subprocess with XLA_FLAGS)")
+    return True
+
+
+def test_roofline_terms_math():
+    rf = roofline.Roofline(
+        flops=197e12, hbm_bytes=819e9, coll_bytes=50e9,
+        compute_s=1.0, memory_s=1.0, collective_s=1.0,
+        dominant="compute", model_flops=197e12 * 4, n_chips=4)
+    assert rf.bound_s == 1.0
+    assert rf.useful_fraction == pytest.approx(1.0)
+    assert rf.mfu_bound == pytest.approx(1.0)
+
+
+def test_fusion_dynamic_slice_bytes_not_inflated():
+    """A scan that dynamic-slices a big stacked array must charge slice
+    bytes per step, not the whole array (the sLSTM-cell regression)."""
+    def f(stack, x):
+        def body(c, i):
+            sl = jax.lax.dynamic_index_in_dim(stack, i, 0, keepdims=False)
+            return c * 0.9 + sl, None
+        y, _ = jax.lax.scan(body, x, jnp.arange(64))
+        return y.sum()
+    stack = jax.ShapeDtypeStruct((64, 128, 128), jnp.float32)
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    compiled = _compile(f, stack, x)
+    cost = hlo_cost.analyze_text(compiled.as_text())
+    full_array = 64 * 128 * 128 * 4
+    # worst case bound: per step ~ a few slice-sized tensors; the whole run
+    # must stay well under trips x full-array
+    assert cost.bytes < 64 * full_array * 0.25, cost.bytes
+    # and at least one pass over the stack happens
+    assert cost.bytes > full_array
