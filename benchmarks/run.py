@@ -2,11 +2,16 @@
 
 Prints ``name,us_per_call,derived`` CSV lines.  Usage::
 
-    PYTHONPATH=src python -m benchmarks.run [--only table4]
+    PYTHONPATH=src python -m benchmarks.run [--only table4] \
+        [--executor processes] [--tiny]
+
+``--executor`` / ``--tiny`` are forwarded to every suite whose ``run``
+accepts them (currently table4); other suites ignore the knobs.
 """
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import time
 
@@ -14,6 +19,11 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--executor", default=None,
+                    help="aggregation backend for executor-aware suites "
+                         "(serial | threads | processes)")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI-sized workloads for suites that support it")
     args = ap.parse_args()
 
     from benchmarks import (fig6_breakdown, kernels_bench, query_latency,
@@ -32,10 +42,18 @@ def main() -> None:
     for name, fn in suites.items():
         if args.only and args.only != name:
             continue
+        params = inspect.signature(fn).parameters
+        kwargs = {}
+        if args.executor is not None and "executor" in params:
+            kwargs["executor"] = args.executor
+        if args.tiny and "tiny" in params:
+            kwargs["tiny"] = True
         t0 = time.perf_counter()
         try:
-            fn(out=print)
-        except Exception as e:  # keep the harness running
+            fn(out=print, **kwargs)
+        except Exception as e:
+            # emit a parse-friendly marker for the CSV consumer, then abort:
+            # CI keys off the nonzero exit
             print(f"{name}.ERROR,0,{type(e).__name__}:{e}", file=sys.stdout)
             raise
         print(f"{name}.total,{(time.perf_counter()-t0)*1e6:.0f},",

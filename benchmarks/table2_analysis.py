@@ -11,7 +11,6 @@ from __future__ import annotations
 import tempfile
 import time
 
-import numpy as np
 
 from benchmarks.workloads import TABLE2_WORKLOADS, generate
 from repro.core.aggregate import AggregationConfig, StreamingAggregator

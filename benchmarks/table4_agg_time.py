@@ -6,25 +6,33 @@ Three analyzers over the same measurement set (profiles + traces):
   events into per-context counts — the enter/exit-trace processing model;
 * **dense** (HPCToolkit analog): serial dense merge -> dense propagation ->
   dense (P x C x M) on-disk tensor, 1 worker;
-* **streaming aggregation** (ours) at 1 / 2 / 4 threads, plus the hybrid
-  2-rank x 2-thread multiprocess mode (paper §4.4).
+* **streaming aggregation** (ours) at 1 / 2 / 4 workers on the selected
+  executor backend (``--executor serial|threads|processes``), plus the
+  hybrid 2-rank x 2-thread multiprocess mode (paper §4.4).
 
 Reports analysis wall time, measurement size, and analysis-results size.
 Paper reference: up to 9.4x faster, results up to 23x smaller than dense.
+
+Standalone usage::
+
+    PYTHONPATH=src python -m benchmarks.table4_agg_time \
+        [--executor processes] [--tiny]
 """
 from __future__ import annotations
 
+import argparse
 import os
 import tempfile
 import time
-
-import numpy as np
 
 from benchmarks.workloads import generate_timing_workload
 from repro.core.aggregate import AggregationConfig, StreamingAggregator
 from repro.core.dense_baseline import DenseAnalysis
 from repro.core.reduction import aggregate_multiprocess
 from repro.core.sparse import MeasurementProfile
+
+# CI-sized synthetic workload: seconds, not minutes, per backend
+TINY = dict(n_profiles=8, n_ctx=250, n_metrics=8, trace_len=64, n_private=30)
 
 
 def _trace_replay_baseline(paths):
@@ -38,10 +46,11 @@ def _trace_replay_baseline(paths):
     return counts
 
 
-def run(out=print):
+def run(out=print, executor: str = "threads", tiny: bool = False):
     rows = []
     with tempfile.TemporaryDirectory() as td:
-        paths, n_ctx, n_metrics = generate_timing_workload(td + "/in")
+        gen_kwargs = TINY if tiny else {}
+        paths, n_ctx, n_metrics = generate_timing_workload(td + "/in", **gen_kwargs)
         meas_bytes = sum(os.path.getsize(p) for p in paths)
 
         t0 = time.perf_counter()
@@ -56,12 +65,14 @@ def run(out=print):
 
         stream_times = {}
         stream_bytes = 0
-        for threads in (1, 2, 4):
+        worker_counts = (1,) if executor == "serial" else (1, 2, 4)
+        for workers in worker_counts:
             t0 = time.perf_counter()
             res = StreamingAggregator(
-                td + f"/s{threads}",
-                AggregationConfig(n_threads=threads)).run(paths)
-            stream_times[threads] = time.perf_counter() - t0
+                td + f"/s{workers}",
+                AggregationConfig(executor=executor,
+                                  n_workers=workers)).run(paths)
+            stream_times[workers] = time.perf_counter() - t0
             stream_bytes = res.sizes["pms"] + res.sizes["cms"] \
                 + res.sizes.get("traces", 0)
 
@@ -72,8 +83,8 @@ def run(out=print):
         best = min(stream_times.values())
         out(f"table4.trace_replay,{t_trace*1e6:.0f},baseline=scout-analog")
         out(f"table4.dense_1t,{t_dense*1e6:.0f},result_MiB={dense_bytes/2**20:.2f}")
-        for th, t in stream_times.items():
-            out(f"table4.streaming_{th}t,{t*1e6:.0f},"
+        for w, t in stream_times.items():
+            out(f"table4.streaming_{executor}_{w}w,{t*1e6:.0f},"
                 f"speedup_vs_dense={t_dense/t:.2f}")
         out(f"table4.streaming_2rx2t,{t_mp*1e6:.0f},"
             f"speedup_vs_dense={t_dense/t_mp:.2f}")
@@ -84,10 +95,22 @@ def run(out=print):
             f";best_speedup={t_dense/best:.2f};paper_speedup=9.4"
             f";paper_compression=23")
         rows.append({"t_dense": t_dense, "stream": stream_times, "t_mp": t_mp,
+                     "executor": executor,
                      "meas": meas_bytes, "dense_res": dense_bytes,
                      "sparse_res": stream_bytes})
     return rows
 
 
+def main():
+    from repro.runtime import available_executors
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--executor", default="threads",
+                    choices=available_executors())
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI-sized workload (seconds instead of minutes)")
+    args = ap.parse_args()
+    run(executor=args.executor, tiny=args.tiny)
+
+
 if __name__ == "__main__":
-    run()
+    main()

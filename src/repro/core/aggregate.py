@@ -1,7 +1,7 @@
 """The streaming aggregation engine (paper §4).
 
 Dataflow (Fig. 3 of the paper): profile *sources* are streamed in parallel
-by a pool of worker threads; contexts are unified and lexically expanded
+by a pool of workers; contexts are unified and lexically expanded
 ("edit" + U), metric values are redistributed across reconstructed routes,
 propagated to inclusive costs, accumulated into cross-profile statistics
 (+), and written *as soon as they are computed* to the PMS database through
@@ -16,12 +16,26 @@ Two phases, exactly as §4.4:
 * **phase 2** — parse metrics/traces, remap onto final context ids,
   propagate, accumulate, write.
 
-Thread coordination notes vs the paper (§4.2): CPython serializes the
-uniquing dict through one lock rather than per-subtree reader-writer locks
-(GIL realities, see DESIGN.md §4); everything downstream of phase 1 —
-propagation, statistics, encoding, I/O — runs without shared mutable state
-(thread-local accumulators merged by a reduction tree at completion, the
-"relaxed atomics" analog).
+Execution substrate — the :mod:`repro.runtime` backends (paper §4.2 / §4.4):
+
+* ``serial`` / ``threads`` run both phases in-process; phase-1 uniquing
+  serializes through one lock (GIL realities, see DESIGN.md §4) while
+  everything downstream runs without shared mutable state;
+* ``processes`` shards profiles across multiprocessing workers: each worker
+  unifies a *local* CCT over its shard (no uniquing lock at all) and the
+  shard trees merge up a reduction tree (§4.4 phase 1); phase-2 propagate/
+  encode runs in workers, which ship encoded planes back to the parent — a
+  single writer feeding :class:`TwoBufferWriter`.
+
+**Determinism contract:** all three backends produce byte-identical PMS and
+CMS databases for the same inputs and config.  Three mechanisms pin this
+down: (1) ``ContextTree.preorder`` orders children canonically so final
+context ids are a function of tree *content*, not insertion schedule;
+(2) plane appends pass through :class:`repro.runtime.OrderedSink`, pinning
+region allocation to profile order; (3) summary statistics are accumulated
+per profile and folded in profile order by a streaming carry-chain reducer
+whose merge shape is a pure function of the profile count, pinning the
+floating-point op order with only O(log n) accumulators resident.
 """
 from __future__ import annotations
 
@@ -38,14 +52,19 @@ from repro.core.cct import ContextTree
 from repro.core.lexical import StructureInfo, expand_profile_tree
 from repro.core.pms import PMSWriter
 from repro.core.propagate import propagate_inclusive, redistribute_placeholders
-from repro.core.sparse import MeasurementProfile
+from repro.core.sparse import MeasurementProfile, Trace
 from repro.core.stats import StatsAccumulator
 from repro.core.traces import TraceDBWriter
+from repro.runtime import OrderedSink, get_executor
+from repro.runtime.reduce import (StreamingReducer, TreeWithMaps,
+                                  merge_tree_with_maps, tree_reduce)
 
 
 @dataclass
 class AggregationConfig:
-    n_threads: int = 4
+    n_threads: int = 4                   # legacy knob; used when n_workers unset
+    executor: str = "threads"            # serial | threads | processes
+    n_workers: int | None = None         # worker count for any backend
     buffer_bytes: int = 1 << 20          # PMS double-buffer flush threshold
     cms_workers: int = 4
     cms_strategy: str = "vectorized"     # or "heap" (paper-faithful merge)
@@ -54,6 +73,10 @@ class AggregationConfig:
     write_cms: bool = True
     write_traces: bool = True
     keep_exclusive: bool = True
+
+    @property
+    def workers(self) -> int:
+        return max(1, self.n_threads if self.n_workers is None else self.n_workers)
 
 
 @dataclass
@@ -138,32 +161,25 @@ class TwoBufferWriter:
         self._flush(*to_write)
 
 
-def _parallel_for(n_items: int, n_threads: int, body) -> None:
-    """Non-blocking parallel loop over items (the custom task runtime analog,
-    paper §4.2.4): workers pull indices from a shared counter."""
-    counter = iter(range(n_items))
-    lock = threading.Lock()
-    errors: list[BaseException] = []
+def _load_structures(prof: MeasurementProfile,
+                     cache: dict[str, StructureInfo]) -> dict[str, StructureInfo]:
+    """Eagerly acquire lexical info for the profile's binaries (paper §4.2.3)
+    and return the subset visible to this profile: exactly the structure
+    files named in its file-paths section.  Restricting visibility per
+    profile (instead of handing every profile the whole shared cache) keeps
+    the expansion a pure function of the profile — required for
+    cross-executor determinism, so every phase-1 path must go through this
+    one helper."""
+    for sp in prof.file_paths:
+        if sp.endswith(".struct.json") and os.path.exists(sp) \
+                and sp not in cache:
+            cache[sp] = StructureInfo.load(sp)
+    return {sp: cache[sp] for sp in prof.file_paths if sp in cache}
 
-    def work():
-        while True:
-            with lock:
-                i = next(counter, None)
-            if i is None:
-                return
-            try:
-                body(i)
-            except BaseException as e:
-                errors.append(e)
-                return
 
-    threads = [threading.Thread(target=work) for _ in range(min(n_threads, max(n_items, 1)))]
-    for t in threads:
-        t.start()
-    for t in threads:
-        t.join()
-    if errors:
-        raise errors[0]
+def _merge_stats(a: StatsAccumulator, b: StatsAccumulator) -> StatsAccumulator:
+    a.merge(b)
+    return a
 
 
 class StreamingAggregator:
@@ -174,11 +190,24 @@ class StreamingAggregator:
         os.makedirs(self.out_dir, exist_ok=True)
         self.cfg = config or AggregationConfig()
 
+    def _executor(self):
+        return get_executor(self.cfg.executor, self.cfg.workers)
+
     # -- phase 1: contexts ---------------------------------------------------
     def parse_contexts(self, profile_paths: list[str], timer: _PhaseTimer,
-                       unified: ContextTree | None = None):
-        """Parallel parse + unify; returns (unified, remaps, routes, meta)."""
+                       unified: ContextTree | None = None, executor=None):
+        """Parallel parse + unify; returns (unified, remaps, routes, meta).
+
+        In-process only (the body closes over the shared tree); the
+        ``processes`` backend goes through :func:`_phase1_shard_worker`.
+        """
         cfg = self.cfg
+        ex = executor or get_executor(cfg.executor, cfg.workers)
+        if not ex.in_process:
+            raise ValueError(
+                f"parse_contexts requires an in-process executor, got "
+                f"{ex.name!r}; use StreamingAggregator.run for the sharded "
+                f"path, or pass executor= explicitly")
         unified = unified or ContextTree()
         structures: dict[str, StructureInfo] = {}
         struct_lock = threading.Lock()
@@ -195,14 +224,10 @@ class StreamingAggregator:
             prof = MeasurementProfile.load(profile_paths[i])
             timer.add("io_read", time.perf_counter() - t0)
             t1 = time.perf_counter()
-            # eagerly acquire lexical info for new binaries (paper §4.2.3)
-            for sp in prof.file_paths:
-                if sp.endswith(".struct.json") and os.path.exists(sp):
-                    with struct_lock:
-                        if sp not in structures:
-                            structures[sp] = StructureInfo.load(sp)
+            with struct_lock:
+                own = _load_structures(prof, structures)
             with uniq_lock:  # uniquing (U) — see module docstring on locking
-                remap, rts = expand_profile_tree(unified, prof.tree, structures)
+                remap, rts = expand_profile_tree(unified, prof.tree, own)
             remaps[i] = remap
             routes[i] = rts
             identities[i] = prof.identity
@@ -210,11 +235,18 @@ class StreamingAggregator:
             registry_jsons[i] = prof.environment.get("registry", [])
             timer.add("compute", time.perf_counter() - t1)
 
-        _parallel_for(n, cfg.n_threads, body)
+        ex.parallel_for(n, body)
         return unified, remaps, routes, identities, trace_lens, registry_jsons
 
     # -- full run --------------------------------------------------------------
     def run(self, profile_paths: list[str]) -> AnalysisResult:
+        with self._executor() as ex:
+            if ex.in_process:
+                return self._run_inprocess(profile_paths, ex)
+            return self._run_sharded(profile_paths, ex)
+
+    # -- in-process path (serial / threads) ------------------------------------
+    def _run_inprocess(self, profile_paths: list[str], ex) -> AnalysisResult:
         cfg = self.cfg
         timer = _PhaseTimer()
         t_start = time.perf_counter()
@@ -223,9 +255,9 @@ class StreamingAggregator:
         # ---- phase 1
         t0 = time.perf_counter()
         unified, remaps, routes, identities, trace_lens, registries = (
-            self.parse_contexts(profile_paths, timer))
-        # renumber contexts to preorder ids: subtree intervals become
-        # contiguous and CMS context order matches tree order
+            self.parse_contexts(profile_paths, timer, executor=ex))
+        # renumber contexts to canonical preorder ids: subtree intervals
+        # become contiguous and CMS context order matches tree order
         pos, order, end = unified.preorder()
         final_tree = _renumber(unified, pos, order)
         n_ctx = len(final_tree)
@@ -236,18 +268,24 @@ class StreamingAggregator:
         pms_path = os.path.join(self.out_dir, "db.pms")
         pms = PMSWriter(pms_path, n)
         writer = TwoBufferWriter(pms, cfg.buffer_bytes, timer)
+        # stats fold inside the ordered sink: in profile order with a shape
+        # that is a pure function of n, and only O(log n) accumulators live
+        stats_reducer = StreamingReducer(_merge_stats)
+
+        def consume(i: int, item):
+            payload, p_ctx, p_vals, identity, acc = item
+            writer.append(i, payload, p_ctx, p_vals, identity)
+            stats_reducer.push(acc)
+
+        sink = OrderedSink(consume)
         trace_path = None
         trace_writer = None
         if cfg.write_traces and trace_lens.sum() > 0:
             trace_path = os.path.join(self.out_dir, "db.trc")
             trace_writer = TraceDBWriter(trace_path, [int(x) for x in trace_lens])
-        accs = [StatsAccumulator() for _ in range(cfg.n_threads)]
-        idx_of_thread: dict[int, int] = {}
-        tl_lock = threading.Lock()
-        identity_pos = np.arange(n)
+        nvals = np.zeros(n, dtype=np.int64)
         end_arr = end  # by preorder id
         ident_pos = np.arange(n_ctx)
-        n_values_total = [0]
 
         def body(i: int):
             t0 = time.perf_counter()
@@ -261,29 +299,136 @@ class StreamingAggregator:
                 sm = redistribute_placeholders(sm, rts)
             sm = propagate_inclusive(sm, ident_pos, end_arr,
                                      keep_exclusive=cfg.keep_exclusive)
-            tid = threading.get_ident()
-            with tl_lock:
-                k = idx_of_thread.setdefault(tid, len(idx_of_thread) % cfg.n_threads)
-                n_values_total[0] += sm.n_values
-            accs[k].update(sm)
+            acc = StatsAccumulator()
+            acc.update(sm)
+            nvals[i] = sm.n_values
             payload = sm.encode()
             timer.add("compute", time.perf_counter() - t1)
-            writer.append(i, payload, sm.n_contexts, sm.n_values, identities[i])
+            # in-order append: pins region allocation to profile order
+            sink.put(i, (payload, sm.n_contexts, sm.n_values, identities[i], acc))
             if trace_writer is not None and prof.trace.time.size:
                 tr = prof.trace.remap_contexts(remap_final)
                 t2 = time.perf_counter()
                 trace_writer.write_trace(i, tr)
                 timer.add("io_write", time.perf_counter() - t2)
 
-        _parallel_for(n, cfg.n_threads, body)
-        writer.close()
+        try:
+            ex.parallel_for(n, body)
+            sink.close()
+            writer.close()
+        except BaseException:
+            pms.abort()
+            if trace_writer is not None:
+                trace_writer.close()
+            raise
         if trace_writer is not None:
             trace_writer.close()
         timer.add("phase2", time.perf_counter() - t0)
 
-        # ---- completion (paper: overlapped with CMS generation)
+        return self._complete(pms, final_tree, stats_reducer.result(),
+                              registries, trace_path, timer, t_start, n,
+                              n_ctx, int(nvals.sum()))
+
+    # -- sharded path (processes) ----------------------------------------------
+    def _run_sharded(self, profile_paths: list[str], ex) -> AnalysisResult:
+        cfg = self.cfg
+        timer = _PhaseTimer()
+        t_start = time.perf_counter()
+        n = len(profile_paths)
+        shards = ex.shards(n)
+
+        # ---- phase 1: per-shard local CCTs, merged by a reduction tree ----
         t0 = time.perf_counter()
-        root_acc = _merge_accumulators(accs)
+        shard_paths = [[profile_paths[i] for i in sh] for sh in shards]
+        results1: dict[int, dict] = dict(
+            ex.map_unordered(_phase1_shard_worker, shard_paths))
+        items = [
+            TreeWithMaps(ContextTree.from_arrays(results1[k]["tree"]),
+                         {k: np.arange(len(results1[k]["tree"]["parent"]))})
+            for k in range(len(shards))
+        ]
+        if items:
+            merged, _ = tree_reduce(items, merge_tree_with_maps, 2)
+        else:
+            merged = TreeWithMaps(ContextTree(), {})
+        pos, order, end = merged.tree.preorder()
+        final_tree = _renumber(merged.tree, pos, order)
+        n_ctx = len(final_tree)
+
+        # broadcast final ids back: compose per-profile remaps and routes
+        remaps_final: list[np.ndarray | None] = [None] * n
+        routes_final: list[dict] = [{}] * n
+        identities: list[dict | None] = [None] * n
+        registries: list[list] = [[]] * n
+        trace_lens = np.zeros(n, dtype=np.int64)
+        for k, sh in enumerate(shards):
+            res = results1[k]
+            shard_map = pos[merged.maps[k]]  # local ctx -> final preorder id
+            for j, g in enumerate(sh):
+                remaps_final[g] = shard_map[np.asarray(res["remaps"][j], np.int64)]
+                routes_final[g] = {
+                    int(shard_map[ph]): (shard_map[np.asarray(t_, np.int64)], w)
+                    for ph, (t_, w) in res["routes"][j].items()
+                }
+                identities[g] = res["identities"][j]
+                registries[g] = res["registries"][j]
+                trace_lens[g] = res["trace_lens"][j]
+        timer.add("phase1", time.perf_counter() - t0)
+
+        # ---- phase 2: propagate/encode in workers, single writer here ----
+        t0 = time.perf_counter()
+        pms_path = os.path.join(self.out_dir, "db.pms")
+        pms = PMSWriter(pms_path, n)
+        writer = TwoBufferWriter(pms, cfg.buffer_bytes, timer)
+        trace_path = None
+        trace_writer = None
+        if cfg.write_traces and trace_lens.sum() > 0:
+            trace_path = os.path.join(self.out_dir, "db.trc")
+            trace_writer = TraceDBWriter(trace_path, [int(x) for x in trace_lens])
+        stats_reducer = StreamingReducer(_merge_stats)
+        nvals = np.zeros(n, dtype=np.int64)
+
+        def consume(i: int, item):
+            payload, p_ctx, p_vals, stat_arrays, ttime, tctx = item
+            writer.append(i, payload, p_ctx, p_vals, identities[i])
+            stats_reducer.push(StatsAccumulator.from_arrays(stat_arrays))
+            nvals[i] = p_vals
+            if trace_writer is not None and ttime.size:
+                t2 = time.perf_counter()
+                trace_writer.write_trace(i, Trace(ttime, tctx))
+                timer.add("io_write", time.perf_counter() - t2)
+
+        sink = OrderedSink(consume)
+        tasks = [(profile_paths[i], remaps_final[i], routes_final[i])
+                 for i in range(n)]
+        try:
+            for i, result in ex.map_unordered(
+                    _phase2_profile_worker, tasks,
+                    initializer=_phase2_init,
+                    initargs=(end, cfg.keep_exclusive, cfg.write_traces)):
+                sink.put(i, result)
+            sink.close()
+            writer.close()
+        except BaseException:
+            pms.abort()
+            if trace_writer is not None:
+                trace_writer.close()
+            raise
+        if trace_writer is not None:
+            trace_writer.close()
+        timer.add("phase2", time.perf_counter() - t0)
+
+        return self._complete(pms, final_tree, stats_reducer.result(),
+                              registries, trace_path, timer, t_start, n,
+                              n_ctx, int(nvals.sum()))
+
+    # -- completion (paper: overlapped with CMS generation) --------------------
+    def _complete(self, pms, final_tree, root_acc, registries,
+                  trace_path, timer, t_start, n, n_ctx, n_values) -> AnalysisResult:
+        cfg = self.cfg
+        t0 = time.perf_counter()
+        if root_acc is None:
+            root_acc = StatsAccumulator()
         stats = root_acc.finalize()
         registry_json = next((r for r in registries if r), [])
         pms_bytes = pms.finalize(tree=final_tree, registry_json=registry_json,
@@ -295,7 +440,7 @@ class StreamingAggregator:
             cms_path = os.path.join(self.out_dir, "db.cms")
             t2 = time.perf_counter()
             cms_bytes = cms_mod.build_cms(
-                pms_path, cms_path, n_workers=cfg.cms_workers,
+                pms.path, cms_path, n_workers=cfg.cms_workers,
                 strategy=cfg.cms_strategy, balance=cfg.cms_balance,
                 group_target_bytes=cfg.group_target_bytes)
             timer.add("cms", time.perf_counter() - t2)
@@ -306,25 +451,95 @@ class StreamingAggregator:
         if trace_path:
             sizes["traces"] = os.path.getsize(trace_path)
         return AnalysisResult(
-            pms_path=pms_path, cms_path=cms_path, trace_path=trace_path,
-            n_profiles=n, n_contexts=n_ctx, n_values=n_values_total[0],
+            pms_path=pms.path, cms_path=cms_path, trace_path=trace_path,
+            n_profiles=n, n_contexts=n_ctx, n_values=n_values,
             timings=dict(timer.acc), sizes=sizes,
         )
 
 
+# ---------------------------------------------------------------------------
+# process-backend worker bodies (module-level: must pickle across forks)
+# ---------------------------------------------------------------------------
+
+def _phase1_shard_worker(shard_paths: list[str]) -> dict:
+    """Unify one shard's profiles into a worker-local CCT — no uniquing lock;
+    the shard trees meet in the parent's reduction tree (paper §4.4)."""
+    structures: dict[str, StructureInfo] = {}
+    tree = ContextTree()
+    remaps, routes, identities, trace_lens, registries = [], [], [], [], []
+    for path in shard_paths:
+        prof = MeasurementProfile.load(path)
+        own = _load_structures(prof, structures)
+        remap, rts = expand_profile_tree(tree, prof.tree, own)
+        remaps.append(remap)
+        routes.append(rts)
+        identities.append(prof.identity)
+        trace_lens.append(int(prof.trace.time.size))
+        registries.append(prof.environment.get("registry", []))
+    return {"tree": tree.to_arrays(), "remaps": remaps, "routes": routes,
+            "identities": identities, "trace_lens": trace_lens,
+            "registries": registries}
+
+
+_PHASE2_STATE: tuple[np.ndarray, np.ndarray, bool, bool] | None = None
+
+
+def _phase2_init(end: np.ndarray, keep_exclusive: bool,
+                 write_traces: bool) -> None:
+    """Pool initializer: ship the (large) subtree-interval array — and build
+    the identity position vector — once per worker instead of once per
+    profile task."""
+    global _PHASE2_STATE
+    end = np.asarray(end, dtype=np.int64)
+    _PHASE2_STATE = (end, np.arange(end.size), bool(keep_exclusive),
+                     bool(write_traces))
+
+
+def _phase2_profile_worker(task) -> tuple:
+    """Remap + redistribute + propagate + encode one profile; ship the
+    encoded plane (and per-profile statistics payload) back to the writer."""
+    path, remap_final, routes_final = task
+    assert _PHASE2_STATE is not None, "phase-2 worker used without initializer"
+    end, ident_pos, keep_exclusive, write_traces = _PHASE2_STATE
+    prof = MeasurementProfile.load(path)
+    sm = prof.metrics.remap_contexts(np.asarray(remap_final, dtype=np.int64))
+    if routes_final:
+        sm = redistribute_placeholders(sm, routes_final)
+    sm = propagate_inclusive(sm, ident_pos, end,
+                             keep_exclusive=keep_exclusive)
+    acc = StatsAccumulator()
+    acc.update(sm)
+    if write_traces and prof.trace.time.size:
+        tr = prof.trace.remap_contexts(np.asarray(remap_final, dtype=np.int64))
+        ttime, tctx = prof.trace.time, tr.ctx
+    else:
+        ttime, tctx = np.empty(0, np.float64), np.empty(0, np.uint32)
+    return (sm.encode(), sm.n_contexts, sm.n_values, acc.to_arrays(),
+            ttime, tctx)
+
+
+# ---------------------------------------------------------------------------
+# completion helpers
+# ---------------------------------------------------------------------------
+
 def _renumber(tree: ContextTree, pos: np.ndarray, order: np.ndarray) -> ContextTree:
-    """Rebuild the tree with ids equal to preorder positions."""
+    """Rebuild the tree with ids equal to canonical preorder positions.
+
+    Names are re-interned in preorder encounter order so the serialized
+    name table — like the ids — is a pure function of tree content, not of
+    the (scheduling-dependent) order names were first seen during unification.
+    """
     out = ContextTree.__new__(ContextTree)
     n = len(tree)
-    out.names = list(tree.names)
-    out._name_ids = dict(tree._name_ids)
+    out.names = []
+    out._name_ids = {}
     out.parent = [-1] * n
     out.kind = [0] * n
-    out.name_id = [tree.name_id[0]] * n
+    out.name_id = [0] * n
     for new in range(n):
         old = int(order[new])
         out.kind[new] = tree.kind[old]
-        out.name_id[new] = tree.name_id[old]
+        out.name_id[new] = out._intern(tree.names[tree.name_id[old]])
         out.parent[new] = -1 if old == 0 else int(pos[tree.parent[old]])
     out._children = {
         (out.parent[c], out.kind[c], out.name_id[c]): c for c in range(1, n)
@@ -332,16 +547,3 @@ def _renumber(tree: ContextTree, pos: np.ndarray, order: np.ndarray) -> ContextT
     return out
 
 
-def _merge_accumulators(accs: list[StatsAccumulator],
-                        branching: int = 2) -> StatsAccumulator:
-    """Reduction tree over thread-local accumulators (paper §4.4)."""
-    layer = [a for a in accs if len(a) or True]
-    while len(layer) > 1:
-        nxt = []
-        for i in range(0, len(layer), branching):
-            head = layer[i]
-            for other in layer[i + 1 : i + branching]:
-                head.merge(other)
-            nxt.append(head)
-        layer = nxt
-    return layer[0] if layer else StatsAccumulator()

@@ -111,17 +111,28 @@ class ContextTree:
 
     # -- linearization ----------------------------------------------------
     def preorder(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
-        """DFS-preorder linearization.
+        """Canonical DFS-preorder linearization.
 
         Returns ``(pos, order, end)`` where ``pos[old_id] -> preorder index``,
         ``order[preorder index] -> old_id``, and ``end[preorder index]`` is
         one past the last preorder index of that node's subtree
         (``inclusive interval = [i, end[i])``).
+
+        Children are visited in ``(kind, name)`` order rather than creation
+        order: node ids in a concurrently-unified tree depend on scheduling,
+        so sorting here makes the linearization — and therefore every
+        database derived from it — a pure function of the tree's *content*.
+        This is what lets the serial/threads/processes executors produce
+        byte-identical PMS/CMS files.
         """
         n = len(self.parent)
         kids: list[list[int]] = [[] for _ in range(n)]
         for cid in range(1, n):
             kids[self.parent[cid]].append(cid)
+        names, name_id, kind = self.names, self.name_id, self.kind
+        for ch in kids:
+            if len(ch) > 1:
+                ch.sort(key=lambda c: (kind[c], names[name_id[c]]))
         pos = np.empty(n, dtype=np.int64)
         order = np.empty(n, dtype=np.int64)
         end = np.empty(n, dtype=np.int64)

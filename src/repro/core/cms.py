@@ -28,7 +28,6 @@ import numpy as np
 from repro.utils import binio
 from repro.core import loadbalance
 from repro.core.pms import PMSReader
-from repro.core.sparse import SparseMetrics
 
 CMS_MAGIC = b"RCMS"
 _HEADER = 24

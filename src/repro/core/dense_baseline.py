@@ -22,7 +22,7 @@ import numpy as np
 
 from repro.core.cct import ContextTree
 from repro.core.metrics import INCLUSIVE_BIT
-from repro.core.sparse import MeasurementProfile, SparseMetrics
+from repro.core.sparse import MeasurementProfile
 
 
 # -- dense measurement format ------------------------------------------------

@@ -16,64 +16,28 @@ Implemented over ``multiprocessing`` (fork) as the MPI analog.
 """
 from __future__ import annotations
 
-import math
 import multiprocessing as mp
 import os
 import time
-from dataclasses import dataclass
 
 import numpy as np
 
 from repro.core import cms as cms_mod
 from repro.core.aggregate import (AggregationConfig, AnalysisResult,
-                                  StreamingAggregator, _PhaseTimer,
-                                  _merge_accumulators, _renumber)
+                                  StreamingAggregator, _PhaseTimer, _renumber)
 from repro.core.cct import ContextTree
 from repro.core.propagate import propagate_inclusive, redistribute_placeholders
 from repro.core.pms import PMSWriter
 from repro.core.sparse import MeasurementProfile
 from repro.core.stats import StatsAccumulator
 from repro.core.traces import TraceDBWriter
+# the generic reduction machinery is shared with the executor runtime
+# (re-exported here for back-compat: tests and callers import it from us)
+from repro.runtime.reduce import (TreeWithMaps as _TreeWithMaps,
+                                  merge_tree_with_maps as _merge_trees,
+                                  tree_reduce)
 
-
-# ---------------------------------------------------------------------------
-# generic reduction tree
-# ---------------------------------------------------------------------------
-
-def tree_reduce(items: list, merge, branching: int):
-    """Reduce ``items`` with a branching-factor-``branching`` tree.
-
-    ``merge(a, b) -> a`` combines in place.  Returns (result, rounds);
-    rounds == ceil(log_branching(n)) as in the paper's footnote 6.
-    """
-    assert branching >= 2
-    layer = list(items)
-    rounds = 0
-    while len(layer) > 1:
-        nxt = []
-        for i in range(0, len(layer), branching):
-            head = layer[i]
-            for other in layer[i + 1 : i + branching]:
-                head = merge(head, other)
-            nxt.append(head)
-        layer = nxt
-        rounds += 1
-    return (layer[0] if layer else None), rounds
-
-
-@dataclass
-class _TreeWithMaps:
-    """A CCT plus, per contributing rank, the remap of that rank's ids."""
-
-    tree: ContextTree
-    maps: dict[int, np.ndarray]
-
-
-def _merge_trees(a: _TreeWithMaps, b: _TreeWithMaps) -> _TreeWithMaps:
-    remap = a.tree.merge(b.tree)
-    for rank, m in b.maps.items():
-        a.maps[rank] = remap[m]
-    return a
+__all__ = ["aggregate_multiprocess", "tree_reduce"]
 
 
 # ---------------------------------------------------------------------------

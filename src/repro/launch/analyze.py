@@ -1,7 +1,8 @@
 """Post-mortem analysis CLI — the hpcprof analog.
 
     PYTHONPATH=src python -m repro.launch.analyze runs/profiles/*.rprf \
-        --out runs/db --threads 4 [--ranks 2] [--heap] [--static-lb]
+        --out runs/db --executor processes --workers 4 \
+        [--ranks 2] [--heap] [--static-lb]
 """
 from __future__ import annotations
 
@@ -10,13 +11,22 @@ import json
 
 from repro.core.aggregate import AggregationConfig, StreamingAggregator
 from repro.core.reduction import aggregate_multiprocess
+from repro.runtime import available_executors
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("profiles", nargs="+")
     ap.add_argument("--out", default="runs/db")
-    ap.add_argument("--threads", type=int, default=4)
+    ap.add_argument("--executor", default=None,
+                    choices=available_executors(),
+                    help="aggregation runtime backend (default: threads; "
+                         "single-rank only)")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="worker count for the chosen executor "
+                         "(default: --threads)")
+    ap.add_argument("--threads", type=int, default=4,
+                    help="legacy worker knob; --workers wins when given")
     ap.add_argument("--ranks", type=int, default=1,
                     help=">1 uses the MPI-analog multiprocess driver")
     ap.add_argument("--heap", action="store_true",
@@ -27,8 +37,13 @@ def main():
     ap.add_argument("--no-traces", action="store_true")
     args = ap.parse_args()
 
+    if args.ranks > 1 and (args.executor is not None or args.workers is not None):
+        ap.error("--executor/--workers select the single-rank runtime; "
+                 "with --ranks > 1 use --threads (threads per rank)")
     cfg = AggregationConfig(
         n_threads=args.threads,
+        executor=args.executor or "threads",
+        n_workers=args.workers,
         cms_strategy="heap" if args.heap else "vectorized",
         cms_balance="static" if args.static_lb else "dynamic",
         write_cms=not args.no_cms,
@@ -41,8 +56,11 @@ def main():
                                      config=cfg)
     else:
         res = StreamingAggregator(args.out, cfg).run(args.profiles)
+    runtime = (f"ranks={args.ranks}x{args.threads}t" if args.ranks > 1
+               else cfg.executor)
     print(json.dumps({
         "pms": res.pms_path, "cms": res.cms_path, "traces": res.trace_path,
+        "executor": runtime, "workers": cfg.workers,
         "profiles": res.n_profiles, "contexts": res.n_contexts,
         "values": res.n_values, "sizes": res.sizes,
         "timings": {k: round(v, 4) if isinstance(v, float) else v

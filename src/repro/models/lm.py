@@ -11,8 +11,6 @@ the HLO).
 """
 from __future__ import annotations
 
-import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp

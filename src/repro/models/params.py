@@ -9,7 +9,7 @@ config, sharding, and model code can never drift apart.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp

@@ -17,9 +17,9 @@ from __future__ import annotations
 
 import re
 from collections import defaultdict
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
-from repro.core.cct import KIND_LOOP, KIND_MODULE, KIND_OP
+from repro.core.cct import KIND_LOOP, KIND_MODULE
 from repro.core.lexical import StructureInfo
 
 _SHAPE_BYTES = {

@@ -20,7 +20,7 @@ import time
 
 import numpy as np
 
-from repro.core.cct import (KIND_LINE, KIND_MODULE, KIND_OP, KIND_PHASE,
+from repro.core.cct import (KIND_MODULE, KIND_OP, KIND_PHASE,
                             ContextTree)
 from repro.core.metrics import default_registry
 from repro.core.sparse import MeasurementProfile, SparseMetrics, Trace

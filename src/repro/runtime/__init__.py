@@ -1,0 +1,19 @@
+"""Pluggable execution backends for the aggregation engine.
+
+See :mod:`repro.runtime.base` for the interface contract.  Importing this
+package registers the three built-in backends: ``serial``, ``threads``,
+``processes``.
+"""
+from repro.runtime.base import (Executor, available_executors, get_executor,
+                                register_executor)
+from repro.runtime.ordered import OrderedSink
+from repro.runtime.reduce import TreeWithMaps, merge_tree_with_maps, tree_reduce
+from repro.runtime.serial import SerialExecutor
+from repro.runtime.threads import ThreadsExecutor, parallel_for
+from repro.runtime.processes import ProcessesExecutor
+
+__all__ = [
+    "Executor", "available_executors", "get_executor", "register_executor",
+    "OrderedSink", "TreeWithMaps", "merge_tree_with_maps", "tree_reduce",
+    "SerialExecutor", "ThreadsExecutor", "ProcessesExecutor", "parallel_for",
+]

@@ -1,0 +1,77 @@
+"""In-order result sink: deterministic output from unordered execution.
+
+The PMS two-buffer writer allocates file regions with a fetch-and-add, so
+the *byte layout* of the database depends on the order planes are appended.
+To make every executor backend produce byte-identical databases (the parity
+contract of ``repro.runtime``), workers publish results here tagged with
+their item index and a single consumer observes them in strict index order,
+regardless of completion order.
+
+No dedicated consumer thread: whichever producer delivers the next-expected
+index drains the ready prefix inline (at most one drainer at a time), so
+consumption still overlaps remaining computation — the streaming property
+of paper §4.3.1 is preserved, only the *order* is pinned.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Callable
+
+
+class OrderedSink:
+    """Collects ``(index, item)`` pairs and consumes them in index order.
+
+    ``consume(index, item)`` is invoked exactly once per index, in
+    ascending order starting at 0, from whichever thread happens to drain.
+    A consume exception poisons the sink: it is raised to the draining
+    producer and to every later ``put``/``close`` call (no deadlock, no
+    silent loss).
+    """
+
+    def __init__(self, consume: Callable[[int, object], None]):
+        self._consume = consume
+        self._lock = threading.Lock()
+        self._pending: dict[int, object] = {}
+        self._next = 0
+        self._draining = False
+        self._error: BaseException | None = None
+
+    def put(self, index: int, item: object) -> None:
+        with self._lock:
+            if self._error is not None:
+                raise self._error
+            self._pending[index] = item
+        while True:
+            with self._lock:
+                if (self._draining or self._error is not None
+                        or self._next not in self._pending):
+                    return
+                self._draining = True
+                i = self._next
+                current = self._pending.pop(i)
+            try:
+                self._consume(i, current)
+            except BaseException as e:
+                with self._lock:
+                    self._error = e
+                    self._draining = False
+                raise
+            with self._lock:
+                self._next += 1
+                self._draining = False
+
+    @property
+    def consumed(self) -> int:
+        with self._lock:
+            return self._next
+
+    def close(self) -> None:
+        """Assert the sink fully drained; re-raise a pending consume error."""
+        with self._lock:
+            if self._error is not None:
+                raise self._error
+            if self._pending:
+                raise RuntimeError(
+                    f"OrderedSink closed with {len(self._pending)} items "
+                    f"stranded above index {self._next} (missing index "
+                    f"{self._next})")

@@ -1,0 +1,92 @@
+"""Multiprocessing backend: profile-shard workers, the single-node MPI analog.
+
+Workers live in separate address spaces, so ``in_process`` is False and
+engines must route work through :meth:`map_unordered` with module-level
+(picklable) functions; shared state goes through the pool ``initializer``
+(shipped once per worker, not once per task).
+
+A worker exception propagates to the parent on the next result iteration —
+``imap_unordered`` re-raises the pickled exception and the pool context
+manager terminates remaining workers, so failures surface instead of
+hanging (the crash-propagation contract tested in tests/test_runtime.py).
+"""
+from __future__ import annotations
+
+import multiprocessing as mp
+import os
+import sys
+from functools import partial
+from typing import Callable, Iterable, Iterator
+
+from repro.runtime.base import Executor, register_executor
+
+
+_INIT_FAILURE: BaseException | None = None
+
+
+def _guarded_initializer(initializer: Callable, initargs: tuple) -> None:
+    """Capture initializer errors instead of letting the worker die.
+
+    CPython's Pool silently respawns workers that die during init, forever —
+    the parent would hang instead of seeing the error.  Stashing the
+    exception and re-raising it at the first task routes the failure through
+    the normal result path, where ``imap_unordered`` surfaces it."""
+    global _INIT_FAILURE
+    try:
+        initializer(*initargs)
+    except BaseException as e:
+        _INIT_FAILURE = e
+
+
+def _call_indexed(fn: Callable, item: tuple[int, object]) -> tuple[int, object]:
+    if _INIT_FAILURE is not None:
+        raise _INIT_FAILURE
+    i, task = item
+    return i, fn(task)
+
+
+@register_executor
+class ProcessesExecutor(Executor):
+    name = "processes"
+    in_process = False
+
+    def __init__(self, n_workers: int = 1, mp_context: str | None = None):
+        super().__init__(n_workers)
+        if mp_context is None:
+            mp_context = os.environ.get("REPRO_MP_CONTEXT") or None
+        if mp_context is None:
+            # Linux: fork — forkserver/spawn re-import __main__, which hangs
+            # the pool in a respawn loop for stdin/interactive programs (no
+            # importable main) and re-runs unguarded scripts.  The cost is
+            # the classic fork-from-a-threaded-parent hazard (a worker can
+            # inherit a mutex locked by e.g. an XLA thread); parents that
+            # are thread-heavy can opt out via REPRO_MP_CONTEXT=forkserver.
+            # Elsewhere: spawn — macOS fork is unsafe with system frameworks
+            # (ObjC/Accelerate state), which is why CPython itself switched
+            # the macOS default.  Worker fns and initargs are module-level/
+            # picklable, so every start method works.
+            methods = mp.get_all_start_methods()
+            mp_context = ("fork" if sys.platform == "linux"
+                          and "fork" in methods else "spawn")
+        self._ctx = mp.get_context(mp_context)
+
+    def parallel_for(self, n_items: int, body: Callable[[int], None]) -> None:
+        raise NotImplementedError(
+            "the processes executor cannot run closures over shared state; "
+            "use map_unordered with a module-level function")
+
+    def map_unordered(self, fn: Callable, tasks: Iterable, *,
+                      initializer: Callable | None = None,
+                      initargs: tuple = ()) -> Iterator[tuple[int, object]]:
+        task_list = list(tasks)
+        if not task_list:
+            return
+        n = min(self.n_workers, len(task_list))
+        guarded = (partial(_guarded_initializer, initializer, initargs)
+                   if initializer is not None else None)
+        # a fresh pool per call, not a cached one: the initializer contract
+        # is per-pool (it must run before any task), and callers batch an
+        # entire phase into one map_unordered, so startup amortizes
+        with self._ctx.Pool(n, initializer=guarded) as pool:
+            yield from pool.imap_unordered(
+                partial(_call_indexed, fn), list(enumerate(task_list)))

@@ -1,0 +1,95 @@
+"""Reduction-tree machinery shared by thread, process, and rank engines.
+
+The paper composes parallelism with two-phase reduction trees (§4.4):
+phase 1 merges per-worker CCTs, phase 2 merges per-worker statistic
+accumulators.  This module holds the generic tree reducer plus the
+CCT-with-remaps merge payload, so ``repro.core.aggregate`` (executor
+backends) and ``repro.core.reduction`` (the multi-rank driver) share one
+implementation instead of each holding a global uniquing lock.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.cct import ContextTree
+
+
+def tree_reduce(items: list, merge, branching: int):
+    """Reduce ``items`` with a branching-factor-``branching`` tree.
+
+    ``merge(a, b) -> a`` combines in place.  Returns ``(result, rounds)``;
+    rounds == ceil(log_branching(n)) as in the paper's footnote 6.  The
+    reduction shape is a pure function of ``(len(items), branching)``, so
+    for a fixed item order the result is deterministic — which is what lets
+    floating-point statistic merges stay byte-identical across executors.
+    """
+    assert branching >= 2
+    layer = list(items)
+    rounds = 0
+    while len(layer) > 1:
+        nxt = []
+        for i in range(0, len(layer), branching):
+            head = layer[i]
+            for other in layer[i + 1 : i + branching]:
+                head = merge(head, other)
+            nxt.append(head)
+        layer = nxt
+        rounds += 1
+    return (layer[0] if layer else None), rounds
+
+
+class StreamingReducer:
+    """Deterministic streaming fold with O(log n) items resident.
+
+    A binary-counter carry chain: pushing items 0..n-1 in order merges
+    completed sibling pairs immediately, so at most ``log2(n) + 1`` partial
+    reductions are live at any time — the streaming replacement for
+    materializing all n items and calling :func:`tree_reduce`.  The merge
+    shape (and therefore any floating-point op order) is a pure function of
+    ``n`` alone, which is the property the executor byte-parity contract
+    needs.  ``merge(a, b) -> a`` combines in place with ``a`` the
+    earlier-index operand.
+    """
+
+    def __init__(self, merge):
+        self._merge = merge
+        self._slots: list = []  # slot k: a reduction of 2^k items, or None
+
+    def push(self, item) -> None:
+        k = 0
+        while k < len(self._slots) and self._slots[k] is not None:
+            item = self._merge(self._slots[k], item)  # earlier block on the left
+            self._slots[k] = None
+            k += 1
+        if k == len(self._slots):
+            self._slots.append(item)
+        else:
+            self._slots[k] = item
+
+    def result(self):
+        """Fold the remaining slots (highest weight = earliest indices first);
+        returns None when nothing was pushed."""
+        acc = None
+        for slot in reversed(self._slots):
+            if slot is None:
+                continue
+            acc = slot if acc is None else self._merge(acc, slot)
+        return acc
+
+
+@dataclass
+class TreeWithMaps:
+    """A CCT plus, per contributing shard/rank, the remap of its local ids."""
+
+    tree: ContextTree
+    maps: dict[int, np.ndarray]
+
+
+def merge_tree_with_maps(a: TreeWithMaps, b: TreeWithMaps) -> TreeWithMaps:
+    """Phase-1 merge payload: unify ``b`` into ``a``, composing id remaps."""
+    remap = a.tree.merge(b.tree)
+    for key, m in b.maps.items():
+        a.maps[key] = remap[m]
+    return a

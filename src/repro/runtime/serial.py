@@ -1,0 +1,29 @@
+"""Inline executor: no concurrency, exact same engine semantics.
+
+The byte-identity contract of the aggregation engine (serial == threads ==
+processes output) makes this backend the debugging oracle: any divergence
+observed under a concurrent backend can be bisected against the serial run.
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterable, Iterator
+
+from repro.runtime.base import Executor, register_executor
+
+
+@register_executor
+class SerialExecutor(Executor):
+    name = "serial"
+    in_process = True
+
+    def parallel_for(self, n_items: int, body: Callable[[int], None]) -> None:
+        for i in range(n_items):
+            body(i)
+
+    def map_unordered(self, fn: Callable, tasks: Iterable, *,
+                      initializer: Callable | None = None,
+                      initargs: tuple = ()) -> Iterator[tuple[int, object]]:
+        if initializer is not None:
+            initializer(*initargs)
+        for i, task in enumerate(tasks):
+            yield i, fn(task)

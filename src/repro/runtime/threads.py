@@ -1,0 +1,88 @@
+"""Shared-memory thread backend (paper §4.2.4's custom task runtime analog).
+
+Hosts :func:`parallel_for`, extracted from ``repro.core.aggregate``: workers
+pull indices from a shared counter, so load imbalance between items
+self-schedules without a queue per item.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterable, Iterator
+
+from repro.runtime.base import Executor, register_executor
+
+
+def parallel_for(n_items: int, n_threads: int, body: Callable[[int], None]) -> None:
+    """Non-blocking parallel loop over items: workers pull indices from a
+    shared counter; the first body exception stops the pool and re-raises."""
+    counter = iter(range(n_items))
+    lock = threading.Lock()
+    errors: list[BaseException] = []
+
+    def work():
+        while True:
+            with lock:
+                # stop pulling new indices once any worker failed: a late
+                # failure must not drain (and buffer) the whole remaining run
+                if errors:
+                    return
+                i = next(counter, None)
+            if i is None:
+                return
+            try:
+                body(i)
+            except BaseException as e:
+                errors.append(e)
+                return
+
+    threads = [threading.Thread(target=work)
+               for _ in range(min(n_threads, max(n_items, 1)))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    if errors:
+        raise errors[0]
+
+
+@register_executor
+class ThreadsExecutor(Executor):
+    name = "threads"
+    in_process = True
+
+    def parallel_for(self, n_items: int, body: Callable[[int], None]) -> None:
+        parallel_for(n_items, self.n_workers, body)
+
+    def map_unordered(self, fn: Callable, tasks: Iterable, *,
+                      initializer: Callable | None = None,
+                      initargs: tuple = ()) -> Iterator[tuple[int, object]]:
+        task_list = list(tasks)
+        if not task_list:
+            return
+        if initializer is not None:
+            initializer(*initargs)  # threads share the address space: run once
+        results: queue.Queue = queue.Queue()
+        errors: list[BaseException] = []
+
+        def runner():
+            try:
+                parallel_for(len(task_list), self.n_workers,
+                             lambda i: results.put((i, fn(task_list[i]))))
+            except BaseException as e:
+                errors.append(e)
+            finally:
+                results.put(None)  # sentinel: all workers joined
+
+        t = threading.Thread(target=runner)
+        t.start()
+        try:
+            while True:
+                item = results.get()
+                if item is None:
+                    break
+                yield item
+        finally:
+            t.join()
+        if errors:
+            raise errors[0]

@@ -9,8 +9,6 @@ this function.
 """
 from __future__ import annotations
 
-import queue
-import threading
 from dataclasses import dataclass
 
 import jax

@@ -1,0 +1,17 @@
+"""Small shims over jax API drift so one tree runs on every installed jax.
+
+Keep every version-dependent accessor here; callers stay clean.
+"""
+from __future__ import annotations
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` as a flat dict on every jax version.
+
+    jax <= 0.4.x returns a one-element list of dicts (per computation);
+    jax >= 0.5 returns the dict directly; either may be empty/None.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}

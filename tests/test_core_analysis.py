@@ -1,11 +1,12 @@
 """Propagation, statistics, PMS/CMS, dense-baseline correctness."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+# optional dep: property tests skip without hypothesis, the rest run
+from tests._hypothesis_compat import given, settings, st
 
 from repro.core.cct import ContextTree
-from repro.core.cms import CMSReader, build_cms, census, plane_nbytes
+from repro.core.cms import CMSReader, build_cms, census
 from repro.core.dense_baseline import DenseAnalysis
 from repro.core.metrics import INCLUSIVE_BIT
 from repro.core.pms import PMSReader, PMSWriter

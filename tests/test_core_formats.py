@@ -1,12 +1,13 @@
 """Unit + property tests for the sparse formats (paper §3) and CCT."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+# optional dep: property tests skip without hypothesis, the rest run
+from tests._hypothesis_compat import given, settings, st
 
 from repro.core.cct import KIND_MODULE, KIND_OP, ContextTree
 from repro.core.metrics import INCLUSIVE_BIT, MetricRegistry, default_registry
-from repro.core.sparse import MeasurementProfile, SparseMetrics, Trace
+from repro.core.sparse import MeasurementProfile, SparseMetrics
 from tests.conftest import make_profile, random_sparse, random_tree
 
 

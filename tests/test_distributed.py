@@ -4,13 +4,11 @@ Each test spawns a python subprocess with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so the main pytest
 process keeps its single-device view (per the dry-run isolation rule).
 """
-import json
 import os
 import subprocess
 import sys
 import textwrap
 
-import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -164,10 +162,10 @@ def test_dryrun_cell_mini_multipod():
         # shrink the production mesh to the forced-device pool
         mesh_mod.make_production_mesh = lambda multi_pod=False: (
             jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                          axis_types=(jax.sharding.AxisType.Auto,) * 3)
+                          **mesh_mod._mesh_kwargs(3))
             if multi_pod else
             jax.make_mesh((2, 4), ("data", "model"),
-                          axis_types=(jax.sharding.AxisType.Auto,) * 2))
+                          **mesh_mod._mesh_kwargs(2)))
         import repro.launch.dryrun as dr
         dr.make_production_mesh = mesh_mod.make_production_mesh
         import repro.configs.base as base

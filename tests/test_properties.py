@@ -1,8 +1,9 @@
 """System-invariant property tests (hypothesis)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+# optional dep: property tests skip without hypothesis, the rest run
+from tests._hypothesis_compat import given, settings, st
 
 from repro.core.sparse import SparseMetrics
 from repro.core.stats import StatsAccumulator

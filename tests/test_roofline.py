@@ -1,10 +1,10 @@
 """HLO cost model: trip-count awareness, dot flops, collective bytes."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.analysis import hlo_cost, roofline
+from repro.utils.jaxcompat import cost_analysis_dict
 
 
 def _compile(f, *args):
@@ -26,7 +26,7 @@ def test_scan_trip_count_scaling():
     expect = 8 * 2 * 256**3
     assert expect * 0.95 < cost.flops < expect * 1.2, cost.flops
     # XLA's own count misses the loop: ours must be ~8x larger
-    xla = compiled.cost_analysis()["flops"]
+    xla = cost_analysis_dict(compiled)["flops"]
     assert cost.flops > 6 * xla
 
 
@@ -62,13 +62,13 @@ def test_no_loop_matches_xla_cost_analysis():
     b = jax.ShapeDtypeStruct((512, 512), jnp.float32)
     compiled = _compile(f, a, b)
     cost = hlo_cost.analyze_text(compiled.as_text())
-    xla = compiled.cost_analysis()["flops"]
+    xla = cost_analysis_dict(compiled)["flops"]
     assert abs(cost.flops - xla) / xla < 0.2
 
 
 def test_collective_bytes_sharded(force8):
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import _mesh_kwargs
+    mesh = jax.make_mesh((8,), ("data",), **_mesh_kwargs(1))
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     def f(x, w):

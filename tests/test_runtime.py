@@ -1,0 +1,221 @@
+"""Executor runtime: backend parity (byte-identical DBs) & crash propagation."""
+import hashlib
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.aggregate import AggregationConfig, StreamingAggregator
+from repro.core.pms import PMSReader
+from repro.runtime import (OrderedSink, available_executors, get_executor,
+                           tree_reduce)
+from tests.conftest import make_profile
+
+EXECUTORS = ("serial", "threads", "processes")
+
+
+def _save_workload(tmp_path, rng, n=9):
+    paths = []
+    for i in range(n):
+        prof = make_profile(rng, n_nodes=60, n_metrics=6, density=0.3,
+                            n_trace=12, identity={"rank": i, "stream": i % 2})
+        p = tmp_path / f"prof{i:03d}.rprf"
+        prof.save(p)
+        paths.append(str(p))
+    return paths
+
+
+def _digest(path):
+    with open(path, "rb") as f:
+        return hashlib.sha256(f.read()).hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# parity: every backend must produce the same analysis, byte for byte
+# ---------------------------------------------------------------------------
+
+def test_executor_parity_byte_identical(tmp_path, rng):
+    paths = _save_workload(tmp_path, rng)
+    results = {}
+    for ex, workers in [("serial", 1), ("threads", 3), ("processes", 3),
+                        ("threads", 1), ("processes", 2)]:
+        cfg = AggregationConfig(executor=ex, n_workers=workers,
+                                buffer_bytes=4096)
+        res = StreamingAggregator(tmp_path / f"{ex}{workers}", cfg).run(paths)
+        results[(ex, workers)] = res
+    base = results[("serial", 1)]
+    base_pms, base_cms = _digest(base.pms_path), _digest(base.cms_path)
+    base_trc = _digest(base.trace_path)
+    for key, res in results.items():
+        assert res.n_profiles == base.n_profiles, key
+        assert res.n_contexts == base.n_contexts, key
+        assert res.n_values == base.n_values, key
+        assert _digest(res.pms_path) == base_pms, key
+        assert _digest(res.cms_path) == base_cms, key
+        assert _digest(res.trace_path) == base_trc, key
+    # sanity: the database is non-trivial, not vacuously identical
+    with PMSReader(base.pms_path) as r:
+        assert sum(r.plane(p).n_values for p in range(base.n_profiles)) > 0
+        assert len(r.tree.parent) == base.n_contexts
+
+
+def test_executor_parity_with_lexical_structures(tmp_path):
+    """Superposition routes survive the shard-tree merge of the processes
+    backend identically to the locked in-process unification."""
+    from tests.test_aggregate import _profile_with_structure
+    ppath = _profile_with_structure(tmp_path, fused=True)
+    digests = set()
+    for ex in EXECUTORS:
+        cfg = AggregationConfig(executor=ex, n_workers=2)
+        res = StreamingAggregator(tmp_path / f"lex_{ex}", cfg).run([ppath])
+        digests.add((_digest(res.pms_path), _digest(res.cms_path)))
+    assert len(digests) == 1
+
+
+# ---------------------------------------------------------------------------
+# crash propagation: worker exceptions surface, nothing hangs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("executor", EXECUTORS)
+def test_worker_crash_propagates(tmp_path, rng, executor):
+    paths = _save_workload(tmp_path, rng, n=4)
+    bad = tmp_path / "bad.rprf"
+    bad.write_bytes(b"this is not a profile")
+    cfg = AggregationConfig(executor=executor, n_workers=2)
+    with pytest.raises(Exception, match="not a profile file"):
+        StreamingAggregator(tmp_path / f"crash_{executor}",
+                            cfg).run(paths + [str(bad)])
+
+
+@pytest.mark.parametrize("executor", EXECUTORS)
+def test_map_unordered_raises_on_task_error(executor):
+    ex = get_executor(executor, 2)
+    with pytest.raises(ZeroDivisionError):
+        list(ex.map_unordered(_one_over, [4, 2, 0, 1]))
+
+
+def _one_over(x):  # module-level: must pickle into process workers
+    return 1 / x
+
+
+def _boom_init():
+    raise RuntimeError("init boom")
+
+
+@pytest.mark.parametrize("executor", EXECUTORS)
+def test_initializer_crash_propagates(executor):
+    """A raising initializer must surface, not hang: CPython's Pool would
+    otherwise respawn init-dying workers forever."""
+    ex = get_executor(executor, 2)
+    with pytest.raises(RuntimeError, match="init boom"):
+        list(ex.map_unordered(_one_over, [1, 2], initializer=_boom_init))
+
+
+# ---------------------------------------------------------------------------
+# executor interface
+# ---------------------------------------------------------------------------
+
+def test_registry_lists_builtin_backends():
+    assert set(EXECUTORS) <= set(available_executors())
+
+
+def test_unknown_executor_is_a_value_error(tmp_path):
+    with pytest.raises(ValueError, match="unknown executor"):
+        get_executor("gpu-rdma")
+    agg = StreamingAggregator(tmp_path / "never",
+                              AggregationConfig(executor="typo"))
+    with pytest.raises(ValueError, match="unknown executor"):
+        agg.run([])
+
+
+@pytest.mark.parametrize("executor", EXECUTORS)
+def test_map_unordered_complete_and_initialized(executor):
+    ex = get_executor(executor, 3)
+    got = dict(ex.map_unordered(_one_over, [1, 2, 4, 8, 16]))
+    assert got == {0: 1.0, 1: 0.5, 2: 0.25, 3: 0.125, 4: 0.0625}
+
+
+def test_shards_contiguous_and_balanced():
+    ex = get_executor("serial", 4)
+    shards = ex.shards(10)
+    assert [i for sh in shards for i in sh] == list(range(10))
+    assert len(shards) == 4
+    assert max(len(s) for s in shards) - min(len(s) for s in shards) <= 1
+    assert get_executor("serial", 8).shards(3) == [[0], [1], [2]]
+    assert get_executor("serial", 2).shards(0) == []
+
+
+# ---------------------------------------------------------------------------
+# OrderedSink
+# ---------------------------------------------------------------------------
+
+def test_ordered_sink_reorders_any_arrival_order(rng):
+    seen = []
+    sink = OrderedSink(lambda i, item: seen.append((i, item)))
+    order = rng.permutation(50)
+    for i in order:
+        sink.put(int(i), f"item{i}")
+    sink.close()
+    assert seen == [(i, f"item{i}") for i in range(50)]
+
+
+def test_ordered_sink_concurrent_producers():
+    seen = []
+    sink = OrderedSink(lambda i, item: seen.append(i))
+    threads = [threading.Thread(target=sink.put, args=(i, i))
+               for i in reversed(range(32))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    sink.close()
+    assert seen == list(range(32))
+
+
+def test_ordered_sink_poisons_on_consume_error():
+    def consume(i, item):
+        if i == 1:
+            raise RuntimeError("disk full")
+    sink = OrderedSink(consume)
+    sink.put(0, "a")
+    with pytest.raises(RuntimeError, match="disk full"):
+        sink.put(1, "b")
+    with pytest.raises(RuntimeError, match="disk full"):
+        sink.put(2, "c")
+    with pytest.raises(RuntimeError, match="disk full"):
+        sink.close()
+
+
+def test_ordered_sink_close_detects_gap():
+    sink = OrderedSink(lambda i, item: None)
+    sink.put(0, "a")
+    sink.put(2, "c")  # 1 never arrives
+    with pytest.raises(RuntimeError, match="missing index 1"):
+        sink.close()
+
+
+def test_streaming_reducer_preserves_index_order():
+    """The carry-chain fold must behave like a left-to-right reduction: its
+    shape (and so any FP op order) is a pure function of n — the property
+    the stats byte-parity contract leans on."""
+    from repro.runtime.reduce import StreamingReducer
+    for n in (0, 1, 2, 3, 7, 16, 33):
+        r = StreamingReducer(lambda a, b: a + b)
+        for i in range(n):
+            r.push([i])
+        got = r.result()
+        if n == 0:
+            assert got is None
+        else:
+            assert got == list(range(n))
+
+
+# ---------------------------------------------------------------------------
+# reduction machinery stays importable from its historical home
+# ---------------------------------------------------------------------------
+
+def test_tree_reduce_shared_with_rank_reduction():
+    from repro.core.reduction import tree_reduce as legacy
+    assert legacy is tree_reduce
+    total, rounds = tree_reduce(list(np.arange(16)), lambda a, b: a + b, 2)
+    assert total == 120 and rounds == 4

@@ -15,7 +15,7 @@ from repro.serve import ServeEngine
 from repro.train.compression import (int8_compress, int8_decompress,
                                      topk_compress, topk_decompress)
 from repro.train.loop import Trainer, TrainerConfig, make_train_step
-from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
+from repro.train.optimizer import AdamWConfig, init_opt_state
 
 ARCHS = load_all()
 
