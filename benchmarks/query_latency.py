@@ -1,15 +1,19 @@
-"""Interactive-browser access patterns (paper §3 motivation).
+"""Query-engine latency vs direct readers vs the strawman (paper §3).
 
 The PMS/CMS pair exists so a browser answers both query shapes with ONE
 file open and O(log) searches:
 
-* profile-major: "all metrics of profile p"        -> one PMS plane read
+* profile-major: "all metrics of profile p"            -> one PMS plane
 * context-major: "metric m of context c, all profiles" -> one CMS stripe
 
-We measure both against the strawman (answering the context-major query
-from the profile-major store by scanning every plane — what a PMS-only
-tool would do), reproducing the paper's rationale for storing the same
-tensor twice.
+This suite measures the :mod:`repro.query` engine against (a) the direct
+low-level readers (one ``CMSReader.stripe`` / ``PMSReader.plane`` call per
+query — what PR-1-era callers hand-rolled) and (b) the strawman that
+answers context-major queries by scanning every PMS plane (what a
+PMS-only tool would do).  The engine is measured cold (empty cache; every
+plane decoded from the mmap) and warm (LRU hits), and asserts the
+acceptance bar: engine <= direct baseline for both shapes, warm < cold,
+and zero PMS planes touched by context-major routing.
 """
 from __future__ import annotations
 
@@ -22,49 +26,98 @@ from benchmarks.workloads import generate_timing_workload
 from repro.core.aggregate import AggregationConfig, StreamingAggregator
 from repro.core.cms import CMSReader
 from repro.core.pms import PMSReader
+from repro.query import Database
 
 
-def run(out=print):
+def _time_per(fn, n: int) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return (time.perf_counter() - t0) / max(n, 1)
+
+
+def run(out=print, executor: str | None = None, tiny: bool = False):
+    n_profiles = 16 if tiny else 64
     with tempfile.TemporaryDirectory() as td:
-        paths, _, _ = generate_timing_workload(td + "/in", n_profiles=64,
+        paths, _, _ = generate_timing_workload(td + "/in",
+                                               n_profiles=n_profiles,
                                                n_private=100)
-        res = StreamingAggregator(td + "/db",
-                                  AggregationConfig(n_threads=4)).run(paths)
+        res = StreamingAggregator(
+            td + "/db", AggregationConfig(executor=executor or "threads",
+                                          n_workers=4)).run(paths)
         rng = np.random.default_rng(0)
-        with PMSReader(res.pms_path) as pr, CMSReader(res.cms_path) as cr:
+        with PMSReader(res.pms_path) as pr, CMSReader(res.cms_path) as cr, \
+                Database(td + "/db") as db:
             # pick (ctx, metric) pairs that actually exist
             stats = pr.stats
             order = rng.permutation(len(stats["ctx"]))[:200]
             pairs = [(int(stats["ctx"][i]), int(stats["mid"][i]))
                      for i in order]
+            pids = list(range(pr.n_profiles))
+
+            # ---- context-major ------------------------------------------
+            def eng_ctx():
+                hits = 0
+                for c, m in pairs:
+                    prof, _ = db.stripe(c, m)
+                    hits += len(prof)
+                return hits
 
             t0 = time.perf_counter()
-            n_hits = 0
-            for c, m in pairs:
-                prof, vals = cr.stripe(c, m)
-                n_hits += len(prof)
-            t_cms = (time.perf_counter() - t0) / len(pairs)
+            n_hits = eng_ctx()                      # cold: every plane decodes
+            t_eng_ctx_cold = (time.perf_counter() - t0) / len(pairs)
+            assert n_hits > 0
+            t_eng_ctx_warm = _time_per(eng_ctx, len(pairs))  # pure LRU hits
+            assert db.counters["pms_plane_loads"] == 0, \
+                "context-major queries must never touch PMS planes"
 
-            t0 = time.perf_counter()
-            n_hits2 = 0
-            for c, m in pairs[:20]:  # strawman is slow; sample
-                for pid in range(pr.n_profiles):
-                    v = pr.plane(pid).lookup(c, m)
-                    n_hits2 += v != 0.0
-            t_scan = (time.perf_counter() - t0) / 20
+            t_base_ctx = min(
+                _time_per(lambda: [cr.stripe(c, m) for c, m in pairs],
+                          len(pairs)) for _ in range(2))
 
-            # profile-major query: full profile read
-            t0 = time.perf_counter()
-            for pid in range(pr.n_profiles):
-                pr.plane(pid)
-            t_pms = (time.perf_counter() - t0) / pr.n_profiles
+            def strawman():
+                n = 0
+                for c, m in pairs[:20]:  # slow; sample
+                    for pid in pids:
+                        n += pr.plane(pid).lookup(c, m) != 0.0
+                return n
 
-        assert n_hits > 0
-        out(f"query.cms_stripe,{t_cms*1e6:.1f},hits={n_hits}")
+            t_scan = _time_per(strawman, 20)
+
+            # ---- profile-major ------------------------------------------
+            db2 = Database(td + "/db")   # fresh cache for a true cold pass
+
+            def eng_pms(handle):
+                for pid in pids:
+                    handle.profile_metrics(pid)
+
+            t_eng_pms_cold = _time_per(lambda: eng_pms(db2), len(pids))
+            t_eng_pms_warm = _time_per(lambda: eng_pms(db2), len(pids))
+            t_base_pms = min(
+                _time_per(lambda: [pr.plane(p) for p in pids], len(pids))
+                for _ in range(2))
+            db2.close()
+
+        out(f"query.engine_stripe_cold,{t_eng_ctx_cold*1e6:.1f},hits={n_hits}")
+        out(f"query.engine_stripe_warm,{t_eng_ctx_warm*1e6:.1f},"
+            f"speedup_vs_reader={t_base_ctx/t_eng_ctx_warm:.1f}x")
+        out(f"query.reader_stripe,{t_base_ctx*1e6:.1f},direct_CMSReader")
         out(f"query.pms_scan_strawman,{t_scan*1e6:.1f},"
-            f"speedup={t_scan/t_cms:.0f}x")
-        out(f"query.pms_plane,{t_pms*1e6:.1f},per_profile")
-    return {"cms": t_cms, "scan": t_scan}
+            f"speedup={t_scan/t_eng_ctx_warm:.0f}x")
+        out(f"query.engine_plane_cold,{t_eng_pms_cold*1e6:.1f},per_profile")
+        out(f"query.engine_plane_warm,{t_eng_pms_warm*1e6:.1f},"
+            f"speedup_vs_reader={t_base_pms/t_eng_pms_warm:.1f}x")
+        out(f"query.reader_plane,{t_base_pms*1e6:.1f},direct_PMSReader")
+
+        # acceptance: the engine is never slower than the direct readers
+        # for either query shape, and the cache pays for itself on repeats
+        assert t_eng_ctx_warm <= t_base_ctx, \
+            f"engine stripe {t_eng_ctx_warm} > reader {t_base_ctx}"
+        assert t_eng_pms_warm <= t_base_pms, \
+            f"engine plane {t_eng_pms_warm} > reader {t_base_pms}"
+        assert t_eng_ctx_warm < t_eng_ctx_cold, "warm repeats must beat cold"
+        assert t_eng_ctx_warm < t_scan, "engine must beat the PMS scan"
+    return {"engine_ctx": t_eng_ctx_warm, "cms": t_base_ctx, "scan": t_scan,
+            "engine_pms": t_eng_pms_warm, "pms": t_base_pms}
 
 
 if __name__ == "__main__":

@@ -1,0 +1,80 @@
+"""Postmortem querying end to end: top-k, threshold select, two-run diff.
+
+Builds two analysis databases from synthetic measurement runs (the second
+a simulated regression: every metric 1.6x the first), then answers the
+paper's browser-shaped questions through ``repro.query`` — no dense
+matrices, no hand-rolled reader loops.
+
+    PYTHONPATH=src python examples/query_results.py
+"""
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.workloads import generate_timing_workload
+from repro.core.aggregate import AggregationConfig, StreamingAggregator
+from repro.core.metrics import INCLUSIVE_BIT
+from repro.core.sparse import MeasurementProfile
+from repro.query import (Database, diff, occupancy, threshold_contexts,
+                         topk_hot_paths, total_delta)
+
+
+def main():
+    with tempfile.TemporaryDirectory() as td:
+        # ---- run A, and run B = run A with a 1.6x cost regression ----
+        paths_a, _, _ = generate_timing_workload(td + "/in_a", n_profiles=24,
+                                                 n_private=100)
+        paths_b = []
+        for p in paths_a:
+            prof = MeasurementProfile.load(p)
+            prof.metrics.val = prof.metrics.val * 1.6  # loaded arrays are RO
+            q = td + "/in_b/" + os.path.basename(p)
+            os.makedirs(td + "/in_b", exist_ok=True)
+            prof.save(q)
+            paths_b.append(q)
+        cfg = AggregationConfig(executor="threads", n_workers=4)
+        StreamingAggregator(td + "/db_a", cfg).run(paths_a)
+        StreamingAggregator(td + "/db_b", cfg).run(paths_b)
+
+        with Database(td + "/db_a") as db_a, Database(td + "/db_b") as db_b:
+            metric = int(db_a.stats["mid"][0]) & ~INCLUSIVE_BIT
+
+            print("== top-5 hot paths by inclusive cost (summary stats only)")
+            for hp in topk_hot_paths(db_a, metric, k=5):
+                print(f"  {hp.value:12.3f} (excl {hp.exclusive:10.3f})  "
+                      f"{hp.path}")
+
+            print("\n== contexts over threshold (cross-profile sum >= 5.0)")
+            ctxs, vals = threshold_contexts(db_a, metric, min_value=5.0,
+                                            inclusive=True)
+            for c, v in list(zip(ctxs, vals))[:5]:
+                print(f"  ctx {int(c):5d}  {v:10.3f}  {db_a.path_of(int(c))}")
+            print(f"  ... {len(ctxs)} contexts total")
+
+            print("\n== run B vs run A (simulated regression)")
+            ta, tb = total_delta(db_a, db_b, metric)
+            print(f"  exclusive totals: A={ta:.1f}  B={tb:.1f}  "
+                  f"({tb / ta:.2f}x)")
+            for e in diff(db_a, db_b, metric, top=5):
+                print(f"  {e.delta:+12.3f}  ({e.a:10.3f} -> {e.b:10.3f})  "
+                      f"{e.path}")
+
+            print("\n== trace occupancy, window [10s, 20s)")
+            ctx, counts = occupancy(db_a, 10.0, 20.0)
+            order = (-counts).argsort()[:5]
+            for i in order:
+                print(f"  {int(counts[i]):6d} samples  "
+                      f"{db_a.path_of(int(ctx[i]))}")
+
+            # the engine's routing discipline, observable:
+            print(f"\ncounters: {db_a.counters}  cache: "
+                  f"{db_a.cache_stats()}")
+            assert db_a.counters["pms_plane_loads"] == 0  # never scanned PMS
+    print("query_results OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,13 +1,22 @@
-"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from dry-run JSONs.
+"""Render analysis tables: dry-run/roofline JSONs and database reports.
+
+Dry-run mode (EXPERIMENTS.md §Dry-run / §Roofline)::
 
     PYTHONPATH=src python -m repro.analysis.report runs/dryrun
+
+Database mode — every table is emitted through the :mod:`repro.query`
+engine (summary statistics + routed plane reads), never by hand-rolled
+reader loops::
+
+    PYTHONPATH=src python -m repro.analysis.report --db runs/db \
+        [--metric 3] [--topk 15] [--diff runs/db_b]
 """
 from __future__ import annotations
 
+import argparse
 import glob
 import json
 import os
-import sys
 
 
 def load(dirpath: str) -> list[dict]:
@@ -85,9 +94,116 @@ def summary(cells: list[dict]) -> dict:
             "dominant": doms, "fits": fits}
 
 
+# ---------------------------------------------------------------------------
+# database reports — every row produced by the query engine
+# ---------------------------------------------------------------------------
+
+def _metric_label(db, mid: int) -> str:
+    if db.registry is not None:
+        try:
+            return db.registry.name_of(mid)
+        except KeyError:
+            pass
+    return str(mid)
+
+
+def hot_paths_table(db, metric, k: int = 10, *, stat: str = "sum") -> str:
+    """Top-k call paths by inclusive cost, with exclusive alongside."""
+    from repro.query import topk_hot_paths
+    rows = [f"| rank | inclusive {stat} | exclusive {stat} | call path |",
+            "|---|---|---|---|"]
+    for r, hp in enumerate(topk_hot_paths(db, metric, k=k, inclusive=True,
+                                          stat=stat), 1):
+        rows.append(f"| {r} | {hp.value:.4g} | {hp.exclusive:.4g} "
+                    f"| `{hp.path}` |")
+    return "\n".join(rows)
+
+
+def profile_table(db, metric=None) -> str:
+    """Per-profile totals: one PMS plane read per row, no densification."""
+    from repro.core.metrics import INCLUSIVE_BIT
+    from repro.query import profile_aggregate
+    mid = db.resolve_metric(metric) if metric is not None else None
+    rows = ["| profile | identity | metrics | total |", "|---|---|---|---|"]
+    for pid in range(db.n_profiles):
+        mids, vals = profile_aggregate(db, pid)
+        if mid is not None and mid & INCLUSIVE_BIT:
+            # summing an inclusive metric over contexts double-counts every
+            # subtree; the per-profile total of an inclusive metric is its
+            # value at the root context
+            total = float(db.profile_metrics(pid).lookup(0, mid))
+        elif mid is not None:
+            sel = vals[mids == mid]
+            total = float(sel[0]) if sel.size else 0.0
+        else:
+            total = float(vals.sum())
+        ident = db.identity(pid) or {}
+        ident_s = ",".join(f"{k}={v}" for k, v in sorted(ident.items()))
+        rows.append(f"| {pid} | {ident_s} | {mids.size} | {total:.4g} |")
+    return "\n".join(rows)
+
+
+def diff_table(db_a, db_b, metric, top: int = 10, *, stat: str = "sum") -> str:
+    """Cross-run regression table aligned on the unified CCT."""
+    from repro.query import diff
+    rows = [f"| delta {stat} | A | B | call path |", "|---|---|---|---|"]
+    for e in diff(db_a, db_b, metric, stat=stat, top=top):
+        rows.append(f"| {e.delta:+.4g} | {e.a:.4g} | {e.b:.4g} "
+                    f"| `{e.path}` |")
+    return "\n".join(rows)
+
+
+def database_report(db_dir: str, *, metric=None, k: int = 10,
+                    diff_dir: str | None = None) -> str:
+    """Full markdown report for one database (optionally diffed vs another)."""
+    from repro.core.metrics import INCLUSIVE_BIT
+    from repro.query import Database
+    sections = []
+    with Database(db_dir) as db:
+        mids = sorted(set(int(m) for m in db.stats.get("mid", [])
+                          if not int(m) & INCLUSIVE_BIT))
+        metric = mids[0] if metric is None and mids else metric
+        sections.append(f"## Database {db_dir}\n")
+        sections.append(json.dumps({
+            "profiles": db.n_profiles, "contexts": db.n_contexts,
+            "metrics": len(mids), "has_cms": db.has_cms,
+            "has_traces": db.has_traces}))
+        if metric is not None:
+            label = _metric_label(db, db.resolve_metric(metric))
+            sections.append(f"\n### Hot paths (metric {label})\n")
+            sections.append(hot_paths_table(db, metric, k))
+            sections.append("\n### Profiles\n")
+            sections.append(profile_table(db, metric))
+            if diff_dir is not None:
+                with Database(diff_dir) as db_b:
+                    sections.append(f"\n### Diff vs {diff_dir}\n")
+                    sections.append(diff_table(db, db_b, metric, top=k))
+    return "\n".join(sections)
+
+
 def main():
-    d = sys.argv[1] if len(sys.argv) > 1 else "runs/dryrun"
-    cells = load(d)
+    ap = argparse.ArgumentParser(prog="repro.analysis.report")
+    ap.add_argument("dryrun_dir", nargs="?", default="runs/dryrun")
+    ap.add_argument("--db", default=None,
+                    help="render a database report instead of dry-run tables")
+    ap.add_argument("--metric", default=None)
+    ap.add_argument("--topk", type=int, default=10)
+    ap.add_argument("--diff", default=None,
+                    help="second database directory for a cross-run diff")
+    args = ap.parse_args()
+
+    if args.db is not None:
+        metric = args.metric
+        if metric is not None:
+            try:
+                metric = int(metric)
+            except ValueError:
+                pass
+        print(database_report(args.db, metric=metric, k=args.topk,
+                              diff_dir=args.diff))
+        return
+
+    cells = load(args.dryrun_dir)
     print("## Summary\n", json.dumps(summary(cells)))
     print("\n## Roofline (single-pod 16x16, 256 chips)\n")
     print(roofline_table(cells, "16x16"))

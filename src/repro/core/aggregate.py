@@ -63,9 +63,12 @@ from repro.runtime.reduce import (StreamingReducer, TreeWithMaps,
 @dataclass
 class AggregationConfig:
     n_threads: int = 4                   # legacy knob; used when n_workers unset
-    executor: str = "threads"            # serial | threads | processes
-    n_workers: int | None = None         # worker count for any backend
+    executor: str = "threads"            # serial | threads | processes | ranks
+    n_workers: int | None = None         # worker count / rank count per backend
     buffer_bytes: int = 1 << 20          # PMS double-buffer flush threshold
+    sink_window: int | None = None       # ordered-sink out-of-order bound for
+                                         # in-process backends; None = auto
+                                         # (2 x workers), 0 = unbounded
     cms_workers: int = 4
     cms_strategy: str = "vectorized"     # or "heap" (paper-faithful merge)
     cms_balance: str = "dynamic"         # GLB (paper §4.4) or "static"
@@ -77,6 +80,19 @@ class AggregationConfig:
     @property
     def workers(self) -> int:
         return max(1, self.n_threads if self.n_workers is None else self.n_workers)
+
+    @property
+    def effective_sink_window(self) -> int | None:
+        """Out-of-order plane budget for the in-process ordered sink.
+
+        ``None`` (unbounded) only when explicitly requested with 0; the
+        default bounds residency at 2x the worker count — enough slack that
+        workers rarely stall, small enough that a slow profile 0 cannot
+        force O(n_profiles) encoded planes to buffer (ROADMAP known limit).
+        """
+        if self.sink_window is None:
+            return max(2 * self.workers, 2)
+        return self.sink_window if self.sink_window > 0 else None
 
 
 @dataclass
@@ -241,6 +257,15 @@ class StreamingAggregator:
     # -- full run --------------------------------------------------------------
     def run(self, profile_paths: list[str]) -> AnalysisResult:
         with self._executor() as ex:
+            if ex.driver == "ranks":
+                # whole-run driver backend (paper §4.4): n_workers ranks,
+                # n_threads threads per rank; imported lazily — the rank
+                # driver composes *this* engine, so the import must not be
+                # circular at module load
+                from repro.core.reduction import aggregate_multiprocess
+                return aggregate_multiprocess(
+                    profile_paths, self.out_dir, n_ranks=ex.n_workers,
+                    threads_per_rank=self.cfg.n_threads, config=self.cfg)
             if ex.in_process:
                 return self._run_inprocess(profile_paths, ex)
             return self._run_sharded(profile_paths, ex)
@@ -277,7 +302,11 @@ class StreamingAggregator:
             writer.append(i, payload, p_ctx, p_vals, identity)
             stats_reducer.push(acc)
 
-        sink = OrderedSink(consume)
+        # bounded out-of-order buffer: producers for far-ahead profiles block
+        # instead of stacking encoded planes (safe in-process: the worker
+        # holding the next index is never blocked, and failures poison the
+        # sink so blocked peers wake — see body's except clause)
+        sink = OrderedSink(consume, window=cfg.effective_sink_window)
         trace_path = None
         trace_writer = None
         if cfg.write_traces and trace_lens.sum() > 0:
@@ -288,29 +317,33 @@ class StreamingAggregator:
         ident_pos = np.arange(n_ctx)
 
         def body(i: int):
-            t0 = time.perf_counter()
-            prof = MeasurementProfile.load(profile_paths[i])
-            timer.add("io_read", time.perf_counter() - t0)
-            t1 = time.perf_counter()
-            remap_final = pos[np.asarray(remaps[i], dtype=np.int64)]
-            sm = prof.metrics.remap_contexts(remap_final)
-            if routes[i]:
-                rts = {int(pos[ph]): (pos[t_], w) for ph, (t_, w) in routes[i].items()}
-                sm = redistribute_placeholders(sm, rts)
-            sm = propagate_inclusive(sm, ident_pos, end_arr,
-                                     keep_exclusive=cfg.keep_exclusive)
-            acc = StatsAccumulator()
-            acc.update(sm)
-            nvals[i] = sm.n_values
-            payload = sm.encode()
-            timer.add("compute", time.perf_counter() - t1)
-            # in-order append: pins region allocation to profile order
-            sink.put(i, (payload, sm.n_contexts, sm.n_values, identities[i], acc))
-            if trace_writer is not None and prof.trace.time.size:
-                tr = prof.trace.remap_contexts(remap_final)
-                t2 = time.perf_counter()
-                trace_writer.write_trace(i, tr)
-                timer.add("io_write", time.perf_counter() - t2)
+            try:
+                t0 = time.perf_counter()
+                prof = MeasurementProfile.load(profile_paths[i])
+                timer.add("io_read", time.perf_counter() - t0)
+                t1 = time.perf_counter()
+                remap_final = pos[np.asarray(remaps[i], dtype=np.int64)]
+                sm = prof.metrics.remap_contexts(remap_final)
+                if routes[i]:
+                    rts = {int(pos[ph]): (pos[t_], w) for ph, (t_, w) in routes[i].items()}
+                    sm = redistribute_placeholders(sm, rts)
+                sm = propagate_inclusive(sm, ident_pos, end_arr,
+                                         keep_exclusive=cfg.keep_exclusive)
+                acc = StatsAccumulator()
+                acc.update(sm)
+                nvals[i] = sm.n_values
+                payload = sm.encode()
+                timer.add("compute", time.perf_counter() - t1)
+                # in-order append: pins region allocation to profile order
+                sink.put(i, (payload, sm.n_contexts, sm.n_values, identities[i], acc))
+                if trace_writer is not None and prof.trace.time.size:
+                    tr = prof.trace.remap_contexts(remap_final)
+                    t2 = time.perf_counter()
+                    trace_writer.write_trace(i, tr)
+                    timer.add("io_write", time.perf_counter() - t2)
+            except BaseException as e:
+                sink.fail(e)  # wake producers blocked on the bounded window
+                raise
 
         try:
             ex.parallel_for(n, body)
@@ -442,7 +475,8 @@ class StreamingAggregator:
             cms_bytes = cms_mod.build_cms(
                 pms.path, cms_path, n_workers=cfg.cms_workers,
                 strategy=cfg.cms_strategy, balance=cfg.cms_balance,
-                group_target_bytes=cfg.group_target_bytes)
+                group_target_bytes=cfg.group_target_bytes,
+                executor=cfg.executor)
             timer.add("cms", time.perf_counter() - t2)
         timer.add("completion", time.perf_counter() - t0)
         timer.add("total", time.perf_counter() - t_start)

@@ -21,7 +21,6 @@ from __future__ import annotations
 import heapq
 import os
 import struct
-import threading
 
 import numpy as np
 
@@ -40,6 +39,32 @@ def plane_nbytes(m: int, x: int) -> int:
 def _encode_plane(mids, mstart, prof, vals) -> bytes:
     return (binio.pack_array(mids) + binio.pack_array(mstart)
             + binio.pack_array(prof) + binio.pack_array(vals))
+
+
+def empty_plane():
+    """The canonical shape of a context with no data."""
+    return (np.empty(0, np.uint16), np.zeros(1, np.uint64),
+            np.empty(0, np.uint32), np.empty(0, np.float64))
+
+
+def decode_plane(buf) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Wire format -> ``(mids, mstart, prof, vals)``; the single decoder
+    shared by :class:`CMSReader` and the query engine's mmap path."""
+    mids, off = binio.unpack_array(buf, 0)
+    mstart, off = binio.unpack_array(buf, off)
+    prof, off = binio.unpack_array(buf, off)
+    vals, off = binio.unpack_array(buf, off)
+    return mids, mstart, prof, vals
+
+
+def stripe_from_plane(plane, mid: int) -> tuple[np.ndarray, np.ndarray]:
+    """Slice one metric's (profiles, values) stripe out of a decoded plane."""
+    mids, mstart, prof, vals = plane
+    j = int(np.searchsorted(mids, mid))
+    if j >= mids.size or mids[j] != mid:
+        return np.empty(0, np.uint32), np.empty(0, np.float64)
+    a, b = int(mstart[j]), int(mstart[j + 1])
+    return prof[a:b], vals[a:b]
 
 
 # ---------------------------------------------------------------------------
@@ -157,10 +182,67 @@ def _gather_group_heap(pms: PMSReader, lo: int, hi: int) -> dict[int, bytes]:
 # builder
 # ---------------------------------------------------------------------------
 
+def _cms_shard_worker(task) -> int:
+    """Out-of-process CMS gather: one worker, one contiguous run of groups.
+
+    Offsets are *not* shipped with the task — the parent has already
+    written the header + offset table to the output file, so the worker
+    re-reads them from there (the §4.3.2 property: once sizes are known,
+    workers coordinate through precomputed offsets alone).  Returns the
+    number of planes written (progress/debug only).
+    """
+    pms_path, out_path, strategy, groups = task
+    pms = PMSReader(pms_path)
+    f = open(str(out_path), "r+b")
+    fd = f.fileno()
+    head = os.pread(fd, _HEADER, 0)
+    assert head[:4] == CMS_MAGIC, "CMS header not yet written"
+    (n_ctx,) = struct.unpack_from("<Q", head, 8)
+    raw = os.pread(fd, 8 * (int(n_ctx) + 1), _HEADER)
+    offsets = np.frombuffer(raw, dtype=np.uint64)
+    gather = (_gather_group_vectorized if strategy == "vectorized"
+              else _gather_group_heap)
+    written = 0
+    for lo, hi in groups:
+        planes = gather(pms, lo, hi)
+        if not planes:
+            continue
+        buf = b"".join(planes[c] for c in sorted(planes))
+        os.pwrite(fd, buf, int(offsets[min(planes)]))
+        written += len(planes)
+    f.close()
+    pms.close()
+    return written
+
+
+def _shard_groups(groups, sizes: np.ndarray, n_workers: int):
+    """Contiguous size-balanced split of groups across workers (static LB:
+    dynamic assignment cannot cross address spaces without a server)."""
+    gsz = np.array([int(np.sum(sizes[lo:hi])) for lo, hi in groups],
+                   dtype=np.int64)
+    csum = np.cumsum(gsz)
+    total = int(csum[-1]) if gsz.size else 0
+    shards: list[list[tuple[int, int]]] = [[] for _ in range(n_workers)]
+    for g, grp in enumerate(groups):
+        w = (min(int((csum[g] - 1) * n_workers // max(total, 1)),
+                 n_workers - 1) if total else 0)
+        shards[w].append(grp)
+    return [s for s in shards if s]
+
+
 def build_cms(pms_path, out_path, *, n_workers: int = 4, strategy: str = "vectorized",
               balance: str = "dynamic", group_target_bytes: int = 1 << 20,
-              timings: dict | None = None) -> int:
-    """Generate the CMS file from a completed PMS file (paper §4.3.2)."""
+              executor: str | None = None, timings: dict | None = None) -> int:
+    """Generate the CMS file from a completed PMS file (paper §4.3.2).
+
+    ``executor`` selects the worker substrate (default ``threads``):
+    in-process backends run the gather workers through their own
+    ``parallel_for`` (GLB dynamic assignment; ``serial`` drains every group
+    inline), out-of-process backends (``processes``, ``ranks``) shard
+    context groups statically across a worker pool.  Output bytes land at
+    offsets fixed by the exclusive scan, so every substrate produces a
+    byte-identical file.
+    """
     pms = PMSReader(pms_path)
     n_ctx = len(pms.tree.parent) if pms.tree is not None else (
         int(max((int(pms.plane(p).ctx.max()) for p in range(pms.n_profiles)
@@ -173,8 +255,10 @@ def build_cms(pms_path, out_path, *, n_workers: int = 4, strategy: str = "vector
     offsets += np.uint64(data_start)
 
     groups = loadbalance.make_groups(sizes, group_target_bytes)
-    assigner = loadbalance.make_assigner(balance, groups, sizes, n_workers)
     gather = _gather_group_vectorized if strategy == "vectorized" else _gather_group_heap
+
+    from repro.runtime import get_executor
+    ex = get_executor(executor or "threads", n_workers)
 
     f = open(str(out_path), "w+b")
     fd = f.fileno()
@@ -183,34 +267,33 @@ def build_cms(pms_path, out_path, *, n_workers: int = 4, strategy: str = "vector
     f.write(offsets.tobytes())
     f.flush()  # workers use positional pwrites from here on
 
-    errors: list[BaseException] = []
+    if not ex.in_process:
+        tasks = [(str(pms_path), str(out_path), strategy, shard)
+                 for shard in _shard_groups(groups, sizes, n_workers)]
+        with ex:
+            for _ in ex.map_unordered(_cms_shard_worker, tasks):
+                pass
+    else:
+        assigner = loadbalance.make_assigner(balance, groups, sizes, n_workers)
 
-    def worker(w: int):
-        try:
+        def worker(w: int):
             # every worker opens its own reader: no shared file positions
             wpms = PMSReader(pms_path)
             while True:
                 g = assigner.next_group(w)
                 if g is None:
-                    return
+                    break
                 lo, hi = g
                 planes = gather(wpms, lo, hi)
                 if not planes:
                     continue
-                # group planes are contiguous: assemble one buffer, one pwrite
+                # group planes are contiguous: one buffer, one pwrite
                 buf = b"".join(planes[c] for c in sorted(planes))
                 os.pwrite(fd, buf, int(offsets[min(planes)]))
             wpms.close()
-        except BaseException as e:  # surfaced after join
-            errors.append(e)
 
-    threads = [threading.Thread(target=worker, args=(w,)) for w in range(n_workers)]
-    for t in threads:
-        t.start()
-    for t in threads:
-        t.join()
-    if errors:
-        raise errors[0]
+        with ex:
+            ex.parallel_for(n_workers, worker)
 
     meta_off = int(offsets[-1])
     blob = binio.pack_json({"n_profiles": pms.n_profiles,
@@ -242,24 +325,13 @@ class CMSReader:
         """(mids, mstart, prof, vals) for one context; empty if no data."""
         lo, hi = int(self.offsets[ctx]), int(self.offsets[ctx + 1])
         if lo == hi:
-            return (np.empty(0, np.uint16), np.zeros(1, np.uint64),
-                    np.empty(0, np.uint32), np.empty(0, np.float64))
-        buf = os.pread(self._fd, hi - lo, lo)
-        mids, off = binio.unpack_array(buf, 0)
-        mstart, off = binio.unpack_array(buf, off)
-        prof, off = binio.unpack_array(buf, off)
-        vals, off = binio.unpack_array(buf, off)
-        return mids, mstart, prof, vals
+            return empty_plane()
+        return decode_plane(os.pread(self._fd, hi - lo, lo))
 
     def stripe(self, ctx: int, mid: int) -> tuple[np.ndarray, np.ndarray]:
         """All (profile, value) pairs of one metric for one context —
         the contiguous read CMS is designed for (paper §3.2)."""
-        mids, mstart, prof, vals = self.plane(ctx)
-        j = int(np.searchsorted(mids, mid))
-        if j >= mids.size or mids[j] != mid:
-            return np.empty(0, np.uint32), np.empty(0, np.float64)
-        a, b = int(mstart[j]), int(mstart[j + 1])
-        return prof[a:b], vals[a:b]
+        return stripe_from_plane(self.plane(ctx), mid)
 
     def query(self, ctx: int, mid: int, pid: int) -> float:
         prof, vals = self.stripe(ctx, mid)

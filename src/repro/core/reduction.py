@@ -150,6 +150,7 @@ def aggregate_multiprocess(
     # ---- assemble final PMS: prefix sum over segment sizes = region alloc --
     pms_path = os.path.join(out_dir, "db.pms")
     pms = PMSWriter(pms_path, n)
+    n_values = 0
     for res in sorted(results2, key=lambda d: d["rank"]):
         r = res["rank"]
         with open(res["seg_path"], "rb") as f:
@@ -159,6 +160,7 @@ def aggregate_multiprocess(
         for k, off, nb, nctx, nvals in res["records"]:
             g = gids[r][k]
             pms.record_plane(g, region + off, nb, nctx, nvals, identities[g])
+            n_values += int(nvals)
         os.unlink(res["seg_path"])
 
     # ---- stats reduction tree ----
@@ -197,7 +199,7 @@ def aggregate_multiprocess(
         sizes["traces"] = os.path.getsize(trace_path)
     return AnalysisResult(
         pms_path=pms_path, cms_path=cms_path, trace_path=trace_path,
-        n_profiles=n, n_contexts=n_ctx, n_values=0,
+        n_profiles=n, n_contexts=n_ctx, n_values=n_values,
         timings={"total": time.perf_counter() - t_start,
                  "tree_rounds": rounds, "stat_rounds": stat_rounds},
         sizes=sizes,

@@ -1,0 +1,36 @@
+"""Postmortem query engine over the PMS/CMS/trace analysis databases.
+
+The read path the sparse formats were designed for (paper §3, §4.3):
+
+* :class:`Database` — one handle over a completed run's databases; meta
+  parsed once, planes mmap-read on demand, decoded planes LRU-cached, every
+  query routed to the cheaper store;
+* :mod:`repro.query.select` — call-path predicates, threshold selects,
+  top-k hot paths, per-profile / per-context aggregations (never densify);
+* :mod:`repro.query.diff` — cross-run regression diffs aligned on the
+  unified CCT by call path;
+* :mod:`repro.query.timeline` — trace-window and occupancy queries.
+
+Quick start::
+
+    from repro.query import Database, topk_hot_paths, diff
+
+    with Database("runs/db") as db:
+        for hp in topk_hot_paths(db, metric=3, k=10):
+            print(f"{hp.value:12.3f}  {hp.path}")
+"""
+from repro.query.cache import LRUCache
+from repro.query.database import Database
+from repro.query.diff import DiffEntry, diff, total_delta
+from repro.query.select import (HotPath, context_aggregate, profile_aggregate,
+                                select_contexts, threshold_contexts,
+                                topk_hot_paths)
+from repro.query.timeline import activity, occupancy, samples_in_window
+
+__all__ = [
+    "Database", "LRUCache",
+    "HotPath", "select_contexts", "threshold_contexts", "topk_hot_paths",
+    "profile_aggregate", "context_aggregate",
+    "DiffEntry", "diff", "total_delta",
+    "samples_in_window", "occupancy", "activity",
+]

@@ -1,0 +1,100 @@
+"""Cross-run regression analysis: diff two databases on the unified CCT.
+
+Two runs of the same application produce different context *ids* (each
+run's unified CCT depends on which call paths its profiles observed), so
+alignment is by **call path**: a context in run A matches the context in
+run B with the same root-to-node path.  Costs come from each database's
+summary-statistics section — a diff reads zero planes from either store.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.query.database import Database
+
+
+@dataclass(frozen=True)
+class DiffEntry:
+    """One aligned call path and its cost under each run."""
+
+    path: str
+    ctx_a: int | None     # context id in run A (None: path only in B)
+    ctx_b: int | None     # context id in run B (None: path only in A)
+    a: float
+    b: float
+
+    @property
+    def delta(self) -> float:
+        return self.b - self.a
+
+    @property
+    def ratio(self) -> float:
+        return self.b / self.a if self.a else float("inf")
+
+    def as_dict(self) -> dict:
+        return {"path": self.path, "ctx_a": self.ctx_a, "ctx_b": self.ctx_b,
+                "a": self.a, "b": self.b, "delta": self.delta}
+
+
+# how to fold two same-path contexts' stats into one path-level stat;
+# mean/std are not foldable without counts, so they fail loudly instead
+# of reporting a silently wrong number
+_COMBINE = {"sum": lambda a, b: a + b, "count": lambda a, b: a + b,
+            "max": max, "min": min}
+
+
+def _metric_by_path(db: Database, metric, stat: str, inclusive: bool
+                    ) -> dict[str, tuple[int, float]]:
+    ctx_ids, rows = db.metric_entries(metric, inclusive=inclusive)
+    vals = db.stats[stat][rows]
+    out: dict[str, tuple[int, float]] = {}
+    for c, v in zip(ctx_ids, vals):
+        path = db.path_of(int(c))
+        prev = out.get(path)
+        if prev is None:
+            out[path] = (int(c), float(v))
+            continue
+        # distinct contexts can share a path string (same name, different
+        # node kind): fold them — the diff unit is the call path
+        fold = _COMBINE.get(stat)
+        if fold is None:
+            raise ValueError(
+                f"stat {stat!r} cannot be folded across the {len(ctx_ids)} "
+                f"contexts sharing path {path!r}; use sum/count/max/min")
+        out[path] = (prev[0], fold(prev[1], float(v)))
+    return out
+
+
+def diff(db_a: Database, db_b: Database, metric, *, stat: str = "sum",
+         inclusive: bool = True, top: int | None = None,
+         min_abs_delta: float = 0.0) -> list[DiffEntry]:
+    """Per-call-path cost deltas between two runs, largest first.
+
+    Contexts present in only one run appear with the other side at 0 —
+    exactly the new/vanished call paths a regression hunt wants surfaced.
+    Ordering is deterministic: ``(-|delta|, path)``.  ``top`` truncates;
+    ``min_abs_delta`` filters noise (and drops exact ties at 0.0).
+    """
+    by_a = _metric_by_path(db_a, metric, stat, inclusive)
+    by_b = _metric_by_path(db_b, metric, stat, inclusive)
+    out: list[DiffEntry] = []
+    for path in by_a.keys() | by_b.keys():
+        ca, va = by_a.get(path, (None, 0.0))
+        cb, vb = by_b.get(path, (None, 0.0))
+        if abs(vb - va) < min_abs_delta or (min_abs_delta == 0.0 and vb == va):
+            continue
+        out.append(DiffEntry(path=path, ctx_a=ca, ctx_b=cb, a=va, b=vb))
+    out.sort(key=lambda e: (-abs(e.delta), e.path))
+    return out[:top] if top is not None else out
+
+
+def total_delta(db_a: Database, db_b: Database, metric, *,
+                stat: str = "sum") -> tuple[float, float]:
+    """Whole-run exclusive-cost totals ``(total_a, total_b)`` for a metric.
+
+    Uses exclusive entries only so the total is not inflated by ancestor
+    propagation; zero plane reads.
+    """
+    ta = sum(v for _, v in _metric_by_path(db_a, metric, stat, False).values())
+    tb = sum(v for _, v in _metric_by_path(db_b, metric, stat, False).values())
+    return float(ta), float(tb)

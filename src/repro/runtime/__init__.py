@@ -1,8 +1,8 @@
 """Pluggable execution backends for the aggregation engine.
 
 See :mod:`repro.runtime.base` for the interface contract.  Importing this
-package registers the three built-in backends: ``serial``, ``threads``,
-``processes``.
+package registers the four built-in backends: ``serial``, ``threads``,
+``processes``, and the whole-run ``ranks`` driver.
 """
 from repro.runtime.base import (Executor, available_executors, get_executor,
                                 register_executor)
@@ -11,9 +11,11 @@ from repro.runtime.reduce import TreeWithMaps, merge_tree_with_maps, tree_reduce
 from repro.runtime.serial import SerialExecutor
 from repro.runtime.threads import ThreadsExecutor, parallel_for
 from repro.runtime.processes import ProcessesExecutor
+from repro.runtime.ranks import RanksExecutor
 
 __all__ = [
     "Executor", "available_executors", "get_executor", "register_executor",
     "OrderedSink", "TreeWithMaps", "merge_tree_with_maps", "tree_reduce",
-    "SerialExecutor", "ThreadsExecutor", "ProcessesExecutor", "parallel_for",
+    "SerialExecutor", "ThreadsExecutor", "ProcessesExecutor", "RanksExecutor",
+    "parallel_for",
 ]

@@ -67,6 +67,10 @@ class Executor(ABC):
 
     name: str = ""
     in_process: bool = True
+    # "stream": the executor runs the streaming engine's loops itself.
+    # "ranks": the backend is a whole-run driver (paper §4.4) — the engine
+    # delegates the entire aggregation to it instead of calling primitives.
+    driver: str = "stream"
 
     def __init__(self, n_workers: int = 1):
         self.n_workers = max(1, int(n_workers))

@@ -11,6 +11,16 @@ No dedicated consumer thread: whichever producer delivers the next-expected
 index drains the ready prefix inline (at most one drainer at a time), so
 consumption still overlaps remaining computation — the streaming property
 of paper §4.3.1 is preserved, only the *order* is pinned.
+
+**Bounded mode** (``window=w``): a producer whose index is ``w`` or more
+ahead of the next-expected index blocks until the gap closes.  This caps
+the out-of-order buffer at ``w`` items — without it, one slow early item
+(profile 0 slowest) leaves O(n_items) encoded planes resident.  Blocking
+requires every producer failure to reach :meth:`fail`, otherwise blocked
+peers would wait forever; in-process engines wrap worker bodies
+accordingly.  Single-producer feeders (the ``processes`` engine's parent
+loop) must stay unbounded: with nobody else to deliver the missing index,
+blocking would self-deadlock.
 """
 from __future__ import annotations
 
@@ -26,23 +36,39 @@ class OrderedSink:
     A consume exception poisons the sink: it is raised to the draining
     producer and to every later ``put``/``close`` call (no deadlock, no
     silent loss).
+
+    ``window=w`` bounds the out-of-order buffer: ``put(i)`` blocks while
+    ``i >= next_expected + w``.  The producer holding ``next_expected`` is
+    never blocked, so it always gets through to drain and wake the rest.
+    ``max_pending`` records the high-water mark of buffered items.
     """
 
-    def __init__(self, consume: Callable[[int, object], None]):
+    def __init__(self, consume: Callable[[int, object], None],
+                 window: int | None = None):
+        if window is not None and window < 1:
+            raise ValueError(f"window must be >= 1, got {window}")
         self._consume = consume
+        self._window = window
         self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
         self._pending: dict[int, object] = {}
         self._next = 0
         self._draining = False
         self._error: BaseException | None = None
+        self.max_pending = 0
 
     def put(self, index: int, item: object) -> None:
-        with self._lock:
+        with self._cond:
+            if self._window is not None:
+                while (self._error is None
+                       and index >= self._next + self._window):
+                    self._cond.wait()
             if self._error is not None:
                 raise self._error
             self._pending[index] = item
+            self.max_pending = max(self.max_pending, len(self._pending))
         while True:
-            with self._lock:
+            with self._cond:
                 if (self._draining or self._error is not None
                         or self._next not in self._pending):
                     return
@@ -52,13 +78,27 @@ class OrderedSink:
             try:
                 self._consume(i, current)
             except BaseException as e:
-                with self._lock:
+                with self._cond:
                     self._error = e
                     self._draining = False
+                    self._cond.notify_all()
                 raise
-            with self._lock:
+            with self._cond:
                 self._next += 1
                 self._draining = False
+                self._cond.notify_all()
+
+    def fail(self, exc: BaseException) -> None:
+        """Poison the sink from a failing producer.
+
+        Mandatory in bounded mode: producers blocked in :meth:`put` can
+        only be released by progress or poison, and a dead producer will
+        never deliver the index they are waiting on.
+        """
+        with self._cond:
+            if self._error is None:
+                self._error = exc
+            self._cond.notify_all()
 
     @property
     def consumed(self) -> int:

@@ -1,15 +1,21 @@
-"""Batched serving engine: request coalescing + prefill/decode loop.
+"""Batched serving engines: generation and postmortem queries.
 
-Requests are coalesced into fixed-size batch slots (padded prompts with a
-left-aligned layout and per-slot length masks are avoided by grouping
-same-length prompts; mixed lengths are right-padded and masked via the
-position argument).  The decode loop is one jitted ``decode_step`` per
-token over the whole batch — the ``decode_*`` dry-run shapes lower exactly
-this function.
+Two request classes share the coalescing philosophy — group work so the
+expensive unit (a jitted forward pass; a decoded database plane) is paid
+once per group:
+
+* :class:`ServeEngine` — LLM generation: requests are coalesced into
+  fixed-size batch slots (padded prompts with a left-aligned layout and
+  per-slot length masks are avoided by grouping same-length prompts); the
+  decode loop is one jitted ``decode_step`` per token over the whole batch;
+* :class:`QueryServer` — postmortem analysis queries served from one
+  shared :class:`repro.query.Database`: a batch is sorted by target plane
+  so every plane is decoded once and the LRU (with coalesced concurrent
+  misses) serves the rest — "the cache does the batching".
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
@@ -63,4 +69,81 @@ class ServeEngine:
                 gen = self.generate(prompts, n_new)
                 for row, i in enumerate(group):
                     results[i] = gen[row]
+        return results
+
+
+# ---------------------------------------------------------------------------
+# postmortem query serving
+# ---------------------------------------------------------------------------
+
+@dataclass
+class QueryRequest:
+    """One analysis query against a served database.
+
+    ``op`` selects the shape: ``"profile"`` (all metrics of profile
+    ``pid``), ``"stripe"`` (metric across profiles of context ``ctx``),
+    ``"value"`` (point lookup), ``"topk"`` (hot paths), ``"window"``
+    (trace samples of ``pid`` in ``[t0, t1)``).
+    """
+
+    op: str
+    pid: int | None = None
+    ctx: int | None = None
+    metric: object = None
+    inclusive: bool = False
+    k: int = 10
+    t0: float = 0.0
+    t1: float = float("inf")
+    params: dict = field(default_factory=dict)
+
+
+class QueryServer:
+    """Serves :class:`QueryRequest` batches from one shared ``Database``.
+
+    The server holds a single :class:`repro.query.Database`; its LRU cache
+    is the batching mechanism: :meth:`serve` orders a batch by the plane
+    each request touches, so a burst hitting the same profile plane or
+    context stripe decodes it once and the rest are cache hits — and
+    concurrent misses on one key are coalesced inside the cache itself, so
+    multi-threaded callers get the same property without this sort.
+    """
+
+    def __init__(self, db):
+        self.db = db
+
+    # -- single-request dispatch -------------------------------------------
+    def submit(self, req: QueryRequest):
+        from repro.query import samples_in_window, topk_hot_paths
+        db = self.db
+        if req.op == "profile":
+            return db.profile_metrics(req.pid)
+        if req.op == "stripe":
+            return db.stripe(req.ctx, req.metric, inclusive=req.inclusive)
+        if req.op == "value":
+            return db.value(req.pid, req.ctx, req.metric,
+                            inclusive=req.inclusive)
+        if req.op == "topk":
+            return topk_hot_paths(db, req.metric, k=req.k,
+                                  inclusive=req.inclusive, **req.params)
+        if req.op == "window":
+            return samples_in_window(db, req.pid, req.t0, req.t1)
+        raise ValueError(f"unknown query op {req.op!r}")
+
+    # -- batched serving ----------------------------------------------------
+    def _locality_key(self, req: QueryRequest):
+        """The plane a request will pull through the cache."""
+        if req.op == "profile" or req.op == "window":
+            return (0, int(req.pid or 0))
+        if req.op == "stripe":
+            return (1, int(req.ctx or 0))
+        if req.op == "value":
+            return (1, int(req.ctx or 0))  # point lookups route context-major
+        return (2, 0)  # summary-only ops: no plane at all
+
+    def serve(self, requests: list[QueryRequest]) -> list:
+        order = sorted(range(len(requests)),
+                       key=lambda i: self._locality_key(requests[i]))
+        results: list = [None] * len(requests)
+        for i in order:
+            results[i] = self.submit(requests[i])
         return results

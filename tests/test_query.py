@@ -1,0 +1,401 @@
+"""Query engine: routing, caching, selections, diffs, timelines, serving."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.aggregate import AggregationConfig, StreamingAggregator
+from repro.core.metrics import INCLUSIVE_BIT
+from repro.core.pms import PMSReader
+from repro.core.traces import TraceDBReader
+from repro.query import (Database, LRUCache, activity, context_aggregate,
+                         diff, occupancy, profile_aggregate,
+                         samples_in_window, select_contexts,
+                         threshold_contexts, topk_hot_paths, total_delta)
+from tests.conftest import make_profile
+
+N_PROFILES = 8
+
+
+def _workload(tmp_path, seed=7, n=N_PROFILES, scale=1.0):
+    rng = np.random.default_rng(seed)
+    paths = []
+    for i in range(n):
+        prof = make_profile(rng, n_nodes=60, n_metrics=6, density=0.3,
+                            n_trace=16, identity={"rank": i, "stream": i % 2})
+        if scale != 1.0:
+            prof.metrics.val[:] = prof.metrics.val * scale
+        p = tmp_path / f"prof{i:03d}.rprf"
+        prof.save(p)
+        paths.append(str(p))
+    return paths
+
+
+@pytest.fixture(scope="module")
+def db_dir(tmp_path_factory):
+    td = tmp_path_factory.mktemp("qdb")
+    paths = _workload(td)
+    StreamingAggregator(
+        td / "db", AggregationConfig(executor="threads", n_workers=3)).run(paths)
+    return td / "db"
+
+
+@pytest.fixture
+def db(db_dir):
+    with Database(db_dir) as handle:
+        yield handle
+
+
+# ---------------------------------------------------------------------------
+# the Database handle: one open, routed reads, observable counters
+# ---------------------------------------------------------------------------
+
+def test_database_meta_parsed_once(db):
+    assert db.n_profiles == N_PROFILES
+    assert db.n_contexts == len(db.tree.parent)
+    assert db.has_cms and db.has_traces
+    assert {"ctx", "mid", "sum", "mean", "max"} <= set(db.stats)
+    assert db.identity(0)["rank"] == 0
+
+
+def test_profile_major_matches_reader(db, db_dir):
+    with PMSReader(db_dir / "db.pms") as pr:
+        for pid in range(db.n_profiles):
+            sm = db.profile_metrics(pid)
+            ref = pr.plane(pid)
+            np.testing.assert_array_equal(sm.ctx, ref.ctx)
+            np.testing.assert_array_equal(sm.mid, ref.mid)
+            np.testing.assert_allclose(sm.val, ref.val)
+
+
+def test_context_major_routing_never_scans_pms(db, db_dir):
+    """The routing acceptance bar: context-major queries read CMS only."""
+    with PMSReader(db_dir / "db.pms") as pr:
+        pairs = list(zip(pr.stats["ctx"][:50], pr.stats["mid"][:50]))
+        expected = {}
+        for c, m in pairs:
+            vals = [pr.plane(p).lookup(int(c), int(m))
+                    for p in range(pr.n_profiles)]
+            expected[(int(c), int(m))] = [
+                (p, v) for p, v in enumerate(vals) if v != 0.0]
+    for (c, m), exp in expected.items():
+        prof, vals = db.stripe(c, m)
+        assert [(int(p), pytest.approx(v)) for p, v in zip(prof, vals)] == exp
+    assert db.counters["pms_plane_loads"] == 0
+    assert db.counters["pms_scan_fallbacks"] == 0
+    assert db.counters["cms_plane_loads"] > 0
+
+
+def test_point_lookup_routes_to_cheaper_store(db):
+    ctx = int(db.stats["ctx"][0])
+    mid = int(db.stats["mid"][0])
+    v = db.value(0, ctx, mid)
+    # whichever store answered, the value agrees with the summary over profiles
+    prof, vals = db.stripe(ctx, mid)
+    expected = dict(zip(prof.tolist(), vals.tolist())).get(0, 0.0)
+    assert v == pytest.approx(expected)
+    # a cached PMS plane short-circuits routing to profile-major
+    db.profile_metrics(3)
+    loads_before = dict(db.counters)
+    assert db.value(3, ctx, mid) == pytest.approx(
+        db.profile_metrics(3).lookup(ctx, mid))
+    assert db.counters["cms_plane_loads"] >= loads_before["cms_plane_loads"]
+
+
+def test_point_lookup_decodes_the_smaller_plane(db_dir):
+    """On a double cache miss, the store with the smaller plane pays."""
+    with Database(db_dir) as fresh:
+        ctx = int(fresh.stats["ctx"][1])
+        mid = int(fresh.stats["mid"][1])
+        pms_sz = int(fresh._pms.index[0, 1])
+        cms_sz = int(fresh._cms.offsets[ctx + 1] - fresh._cms.offsets[ctx])
+        fresh.value(0, ctx, mid)
+        if cms_sz <= pms_sz:
+            assert fresh.counters["cms_plane_loads"] == 1
+            assert fresh.counters["pms_plane_loads"] == 0
+        else:
+            assert fresh.counters["pms_plane_loads"] == 1
+            assert fresh.counters["cms_plane_loads"] == 0
+
+
+def test_warm_cache_serves_repeats_without_loads(db_dir):
+    with Database(db_dir) as fresh:
+        pairs = list(zip(fresh.stats["ctx"][:30], fresh.stats["mid"][:30]))
+        for c, m in pairs:
+            fresh.stripe(int(c), int(m))
+        loads = fresh.counters["cms_plane_loads"]
+        hits0 = fresh.cache.hits
+        for c, m in pairs:
+            fresh.stripe(int(c), int(m))
+        assert fresh.counters["cms_plane_loads"] == loads  # no new I/O
+        assert fresh.cache.hits > hits0
+
+
+def test_tiny_cache_evicts_but_stays_correct(db_dir):
+    with Database(db_dir) as big, \
+            Database(db_dir, cache_bytes=2048) as tiny:
+        for pid in range(big.n_profiles):
+            a, b = big.profile_metrics(pid), tiny.profile_metrics(pid)
+            np.testing.assert_allclose(a.val, b.val)
+        for pid in range(big.n_profiles):
+            tiny.profile_metrics(pid)
+        assert tiny.cache.evictions > 0
+
+
+def test_missing_stripe_is_empty(db):
+    prof, vals = db.stripe(0, 11)  # metric 11 never recorded
+    assert prof.size == 0 and vals.size == 0
+
+
+# ---------------------------------------------------------------------------
+# select / top-k / aggregations
+# ---------------------------------------------------------------------------
+
+def test_topk_matches_bruteforce_over_stats(db):
+    mid = int(db.stats["mid"][0]) & ~INCLUSIVE_BIT
+    got = topk_hot_paths(db, mid, k=5, inclusive=True)
+    mask = db.stats["mid"] == (mid | INCLUSIVE_BIT)
+    ctxs, vals = db.stats["ctx"][mask], db.stats["sum"][mask]
+    order = np.lexsort((ctxs, -vals))[:5]
+    assert [h.ctx for h in got] == [int(c) for c in ctxs[order]]
+    assert [h.value for h in got] == pytest.approx(list(vals[order]))
+    # inclusive root cost dominates: the root is always the hottest path
+    assert got[0].ctx == 0 and got[0].path == "/"
+    for h in got:
+        assert h.exclusive == pytest.approx(db.summary(h.ctx, mid))
+
+
+def test_topk_reads_no_planes(db_dir):
+    with Database(db_dir) as fresh:
+        topk_hot_paths(fresh, 0, k=10)
+        threshold_contexts(fresh, 0, min_value=0.1, inclusive=True)
+        assert fresh.counters["pms_plane_loads"] == 0
+        assert fresh.counters["cms_plane_loads"] == 0
+
+
+def test_threshold_select_composes_with_path_select(db):
+    within = select_contexts(db, path_regex="n1")
+    assert within.size > 0
+    ctxs, vals = threshold_contexts(db, 0, min_value=0.0, inclusive=True,
+                                    within=within)
+    assert set(ctxs.tolist()) <= set(within.tolist())
+    assert np.all(np.diff(vals) <= 0)  # sorted descending
+    for c, v in zip(ctxs[:5], vals[:5]):
+        assert db.summary(int(c), 0, inclusive=True) == pytest.approx(v)
+
+
+def test_select_contexts_filters(db):
+    from repro.core.cct import KIND_LINE
+    lines = select_contexts(db, kind=KIND_LINE)
+    assert all(db.tree.kind[int(c)] == KIND_LINE for c in lines)
+    named = select_contexts(db, predicate=lambda c, path: path.endswith("n3"))
+    assert all(db.path_of(int(c)).endswith("n3") for c in named)
+
+
+def test_profile_aggregate_matches_plane_sum(db):
+    for pid in (0, N_PROFILES - 1):
+        mids, vals = profile_aggregate(db, pid)
+        sm = db.profile_metrics(pid)
+        _, pmids, pvals = sm.triplets()
+        keep = (pmids & INCLUSIVE_BIT) == 0
+        assert vals.sum() == pytest.approx(pvals[keep].sum())
+        assert np.all(np.diff(mids) > 0)
+
+
+def test_context_aggregate_matches_stripes(db):
+    ctx = int(db.stats["ctx"][db.stats["ctx"] > 0][0])
+    mids, vals = context_aggregate(db, ctx, agg="sum")
+    for m, v in zip(mids, vals):
+        _, svals = db.stripe(ctx, int(m))
+        assert svals.sum() == pytest.approx(v)
+
+
+# ---------------------------------------------------------------------------
+# cross-run diff
+# ---------------------------------------------------------------------------
+
+def test_diff_of_identical_runs_is_empty(db, db_dir):
+    with Database(db_dir) as other:
+        assert diff(db, other, 0) == []
+
+
+def test_diff_detects_regression(tmp_path, db, db_dir):
+    """A 2x-scaled rerun shows up as positive deltas on every aligned path."""
+    paths_b = _workload(tmp_path, scale=2.0)
+    StreamingAggregator(
+        tmp_path / "dbB",
+        AggregationConfig(executor="threads", n_workers=2)).run(paths_b)
+    with Database(tmp_path / "dbB") as db_b:
+        entries = diff(db, db_b, 0, inclusive=True)
+        assert entries, "scaled run must produce deltas"
+        assert all(e.delta > 0 for e in entries if e.ctx_a is not None)
+        # deterministic ordering: by |delta| desc then path
+        deltas = [abs(e.delta) for e in entries]
+        assert deltas == sorted(deltas, reverse=True)
+        ta, tb = total_delta(db, db_b, 0)
+        assert tb == pytest.approx(2 * ta)
+        root = next(e for e in entries if e.path == "/")
+        assert root.b == pytest.approx(2 * root.a)
+
+
+def test_diff_and_topk_identical_across_backends(tmp_path):
+    """Acceptance: query results do not depend on which executor built the
+    databases — byte-identical stores for serial/threads/processes, and
+    layout-independent query semantics for the ranks driver."""
+    paths = _workload(tmp_path, seed=3, n=5)
+    dbs = {}
+    for ex, w in [("serial", 1), ("threads", 3), ("processes", 2),
+                  ("ranks", 2)]:
+        StreamingAggregator(
+            tmp_path / ex,
+            AggregationConfig(executor=ex, n_workers=w)).run(paths)
+        dbs[ex] = Database(tmp_path / ex)
+    try:
+        base = [(h.ctx, h.path, h.value)
+                for h in topk_hot_paths(dbs["serial"], 0, k=8)]
+        for ex, handle in dbs.items():
+            got = [(h.ctx, h.path, h.value)
+                   for h in topk_hot_paths(handle, 0, k=8)]
+            assert got == base, ex
+            assert diff(dbs["serial"], handle, 0) == [], ex
+    finally:
+        for handle in dbs.values():
+            handle.close()
+
+
+# ---------------------------------------------------------------------------
+# trace timelines
+# ---------------------------------------------------------------------------
+
+def test_samples_in_window_matches_mask(db, db_dir):
+    reader = TraceDBReader(db_dir / "db.trc")
+    try:
+        for pid in range(db.n_profiles):
+            full = reader.trace(pid)
+            win = samples_in_window(db, pid, 0.25, 0.75)
+            mask = (full.time >= 0.25) & (full.time < 0.75)
+            np.testing.assert_allclose(win.time, full.time[mask])
+            np.testing.assert_array_equal(win.ctx, full.ctx[mask])
+    finally:
+        reader.close()
+
+
+def test_occupancy_counts_conserved(db):
+    ctx, counts = occupancy(db, 0.0, 2.0)  # traces live in [0, 1)
+    total = sum(samples_in_window(db, p, 0.0, 2.0).time.size
+                for p in range(db.n_profiles))
+    assert counts.sum() == total > 0
+    assert np.all(np.diff(ctx) > 0)
+
+
+def test_activity_binning(db):
+    bins = activity(db, 0, 0.0, 1.0, n_bins=8)
+    win = samples_in_window(db, 0, 0.0, 1.0)
+    assert bins.sum() == win.time.size
+    assert activity(db, 0, 0.5, 0.5, n_bins=4).sum() == 0  # empty window
+
+
+# ---------------------------------------------------------------------------
+# databases without optional stores
+# ---------------------------------------------------------------------------
+
+def test_pms_only_database_falls_back(tmp_path, db_dir):
+    paths = _workload(tmp_path, seed=7)  # same content as the fixture db
+    StreamingAggregator(
+        tmp_path / "nocms",
+        AggregationConfig(executor="threads", n_workers=2,
+                          write_cms=False, write_traces=False)).run(paths)
+    with Database(tmp_path / "nocms") as bare, Database(db_dir) as full:
+        assert not bare.has_cms and not bare.has_traces
+        ctx = int(full.stats["ctx"][1])
+        mid = int(full.stats["mid"][1])
+        prof_a, vals_a = bare.stripe(ctx, mid)
+        prof_b, vals_b = full.stripe(ctx, mid)
+        np.testing.assert_array_equal(prof_a, prof_b)
+        np.testing.assert_allclose(vals_a, vals_b)
+        assert bare.counters["pms_scan_fallbacks"] > 0
+        assert bare.trace(0).time.size == 0  # no trace store: empty, no error
+
+
+# ---------------------------------------------------------------------------
+# serving layer
+# ---------------------------------------------------------------------------
+
+def test_query_server_batches_through_shared_cache(db):
+    from repro.serve.engine import QueryRequest, QueryServer
+    srv = QueryServer(db)
+    reqs = [QueryRequest(op="stripe", ctx=int(db.stats["ctx"][0]),
+                         metric=int(db.stats["mid"][0])),
+            QueryRequest(op="profile", pid=1),
+            QueryRequest(op="topk", metric=0, inclusive=True, k=3),
+            QueryRequest(op="value", pid=0, ctx=int(db.stats["ctx"][0]),
+                         metric=int(db.stats["mid"][0])),
+            QueryRequest(op="window", pid=0, t0=0.0, t1=0.5)]
+    results = srv.serve(reqs)
+    assert len(results) == len(reqs)
+    prof, vals = results[0]
+    assert prof.size == vals.size
+    assert results[1].n_values == db.profile_metrics(1).n_values
+    assert [h.ctx for h in results[2]] == \
+        [h.ctx for h in topk_hot_paths(db, 0, k=3)]
+    assert results[3] == pytest.approx(
+        db.value(0, int(db.stats["ctx"][0]), int(db.stats["mid"][0])))
+    assert results[4].time.size == \
+        samples_in_window(db, 0, 0.0, 0.5).time.size
+    with pytest.raises(ValueError, match="unknown query op"):
+        srv.submit(QueryRequest(op="nope"))
+
+
+def test_lru_cache_coalesces_concurrent_misses():
+    import threading
+    cache = LRUCache(1 << 20)
+    loads = []
+    gate = threading.Event()
+
+    def loader():
+        gate.wait(1.0)
+        loads.append(1)
+        return "value", 8
+
+    results = []
+    threads = [threading.Thread(
+        target=lambda: results.append(cache.get_or_load("k", loader)))
+        for _ in range(8)]
+    for t in threads:
+        t.start()
+    gate.set()
+    for t in threads:
+        t.join()
+    assert results == ["value"] * 8
+    assert len(loads) == 1  # one loader ran; seven waited
+
+
+def test_lru_cache_byte_budget():
+    cache = LRUCache(100)
+    for i in range(10):
+        cache.put(i, i, 30)
+    assert cache.nbytes <= 100
+    assert cache.evictions >= 6
+    assert 9 in cache  # most recent survives
+
+
+# ---------------------------------------------------------------------------
+# CLI + report front ends
+# ---------------------------------------------------------------------------
+
+def test_analyze_query_cli(db_dir, capsys):
+    from repro.launch.analyze import main
+    main(["query", str(db_dir), "topk", "--metric", "0", "-k", "3"])
+    out = json.loads(capsys.readouterr().out)
+    assert out["op"] == "topk" and len(out["rows"]) == 3
+    assert out["rows"][0]["path"] == "/"
+    main(["query", str(db_dir), "window", "--t0", "0.0", "--t1", "1.0"])
+    out = json.loads(capsys.readouterr().out)
+    assert out["n_samples"] > 0 and out["occupancy"]
+
+
+def test_database_report_uses_query_api(db_dir):
+    from repro.analysis.report import database_report
+    text = database_report(str(db_dir), metric=0, k=4)
+    assert "### Hot paths" in text and "### Profiles" in text
+    assert "`/`" in text  # root path rendered from topk rows

@@ -1,0 +1,168 @@
+"""Reader edge cases the query engine leans on (paper §3 formats).
+
+Empty planes, all-zero-metric contexts, single-profile databases, and CMS
+stripe reads at the first/last context — the boundary geometry a browser
+hits constantly but synthetic dense-ish workloads rarely exercise.
+"""
+import numpy as np
+import pytest
+
+from repro.core.aggregate import AggregationConfig, StreamingAggregator
+from repro.core.cct import KIND_LINE, KIND_MODULE
+from repro.core.cms import CMSReader
+from repro.core.metrics import INCLUSIVE_BIT
+from repro.core.pms import PMSReader
+from repro.core.sparse import MeasurementProfile, SparseMetrics, Trace
+from repro.query import Database, profile_aggregate, topk_hot_paths
+from tests.conftest import make_profile
+
+
+def _profile_with_empty_metrics(rng):
+    prof = make_profile(rng, n_nodes=30, n_metrics=4, density=0.3, n_trace=0)
+    prof.metrics = SparseMetrics.empty()
+    prof.trace = Trace.empty()
+    return prof
+
+
+def _aggregate(tmp_path, profiles, name="db", **cfg):
+    paths = []
+    for i, p in enumerate(profiles):
+        fp = tmp_path / f"{name}{i:03d}.rprf"
+        p.save(fp)
+        paths.append(str(fp))
+    return StreamingAggregator(
+        tmp_path / name,
+        AggregationConfig(executor="serial", **cfg)).run(paths)
+
+
+# ---------------------------------------------------------------------------
+# empty planes
+# ---------------------------------------------------------------------------
+
+def test_empty_plane_among_full_planes(tmp_path, rng):
+    profs = [make_profile(rng, n_nodes=30, n_metrics=4, density=0.3),
+             _profile_with_empty_metrics(rng),
+             make_profile(rng, n_nodes=30, n_metrics=4, density=0.3)]
+    res = _aggregate(tmp_path, profs)
+    with PMSReader(res.pms_path) as pr:
+        assert pr.plane(1).n_values == 0
+        assert pr.plane(1).n_contexts == 0
+        assert pr.plane(0).n_values > 0
+        assert int(pr.index[1, 3]) == 0  # index records zero values
+    with Database(tmp_path / "db") as db:
+        assert db.profile_metrics(1).n_values == 0
+        mids, vals = profile_aggregate(db, 1)
+        assert mids.size == 0 and vals.size == 0
+        # stripes simply omit the empty profile
+        for ctx, mid in zip(db.stats["ctx"][:20], db.stats["mid"][:20]):
+            prof, _ = db.stripe(int(ctx), int(mid))
+            assert 1 not in prof
+
+
+def test_all_profiles_empty(tmp_path, rng):
+    res = _aggregate(tmp_path, [_profile_with_empty_metrics(rng)
+                                for _ in range(3)], write_traces=False)
+    assert res.n_values == 0
+    with Database(tmp_path / "db") as db:
+        assert topk_hot_paths(db, 0, k=5) == []
+        prof, vals = db.stripe(0, 0)
+        assert prof.size == 0
+
+
+# ---------------------------------------------------------------------------
+# all-zero-metric contexts
+# ---------------------------------------------------------------------------
+
+def test_zero_valued_context_is_absent_everywhere(tmp_path, rng):
+    prof = make_profile(rng, n_nodes=25, n_metrics=4, density=0.4, n_trace=0)
+    # context with only zero-valued metrics: dropped by the sparse format
+    zero_ctx = prof.tree.child(0, KIND_MODULE, "all-zeros")
+    dead_ctx = prof.tree.child(zero_ctx, KIND_LINE, "never-recorded")
+    rows, mids, vals = prof.metrics.triplets()
+    rows = np.concatenate([rows, [zero_ctx, zero_ctx]])
+    mids = np.concatenate([mids, [0, 1]])
+    vals = np.concatenate([vals, [0.0, 0.0]])
+    prof.metrics = SparseMetrics.from_triplets(rows, mids, vals)
+    res = _aggregate(tmp_path, [prof], write_traces=False)
+    with Database(tmp_path / "db") as db:
+        # both contexts exist in the unified CCT...
+        z = next(c for c in range(db.n_contexts)
+                 if db.tree.name_of(c) == "all-zeros")
+        d = next(c for c in range(db.n_contexts)
+                 if db.tree.name_of(c) == "never-recorded")
+        # ...but carry no values in either store
+        with PMSReader(res.pms_path) as pr:
+            assert pr.plane(0).lookup(z, 0) == 0.0
+        for c in (z, d):
+            prof_ids, vals = db.stripe(c, 0)
+            assert prof_ids.size == 0
+            assert db.summary(c, 0) == 0.0
+        with CMSReader(res.cms_path) as cr:
+            assert int(cr.offsets[d + 1]) == int(cr.offsets[d])  # empty plane
+
+
+# ---------------------------------------------------------------------------
+# single-profile databases
+# ---------------------------------------------------------------------------
+
+def test_single_profile_database(tmp_path, rng):
+    prof = make_profile(rng, n_nodes=40, n_metrics=5, density=0.4, n_trace=10)
+    res = _aggregate(tmp_path, [prof])
+    assert res.n_profiles == 1
+    with Database(tmp_path / "db") as db:
+        assert db.n_profiles == 1
+        # every stripe names profile 0 exactly once
+        for ctx, mid in zip(db.stats["ctx"][:30], db.stats["mid"][:30]):
+            prof_ids, vals = db.stripe(int(ctx), int(mid))
+            assert prof_ids.tolist() == [0]
+            assert vals[0] == pytest.approx(db.summary(int(ctx), int(mid)))
+        hot = topk_hot_paths(db, 0, k=3)
+        if hot:
+            assert hot[0].ctx == 0  # root holds the largest inclusive cost
+
+
+# ---------------------------------------------------------------------------
+# CMS stripes at the first / last context
+# ---------------------------------------------------------------------------
+
+def test_cms_stripe_at_first_and_last_context(tmp_path, rng):
+    profs = [make_profile(rng, n_nodes=30, n_metrics=4, density=0.5)
+             for _ in range(4)]
+    res = _aggregate(tmp_path, profs)
+    with Database(tmp_path / "db") as db, PMSReader(res.pms_path) as pr, \
+            CMSReader(res.cms_path) as cr:
+        n = db.n_contexts
+        assert cr.n_ctx == n
+        # first context is the root: inclusive metrics make it non-empty
+        first_mids = np.unique(pr.plane(0).mid)
+        incl = [m for m in first_mids if m & INCLUSIVE_BIT]
+        assert incl, "propagation must produce inclusive root metrics"
+        prof_ids, vals = db.stripe(0, int(incl[0]))
+        assert prof_ids.size > 0
+        ref = [pr.plane(p).lookup(0, int(incl[0]))
+               for p in range(pr.n_profiles)]
+        assert vals.tolist() == pytest.approx(
+            [v for v in ref if v != 0.0])
+        # last context: the stripe read uses the final offsets entry
+        for mid in range(4):
+            prof_ids, vals = db.stripe(n - 1, mid)
+            ref = [(p, pr.plane(p).lookup(n - 1, mid))
+                   for p in range(pr.n_profiles)]
+            ref = [(p, v) for p, v in ref if v != 0.0]
+            assert [(int(p), pytest.approx(v))
+                    for p, v in zip(prof_ids, vals)] == ref
+        # one past the end must fail loudly, not read garbage
+        with pytest.raises(IndexError):
+            cr.plane(n)
+
+
+def test_profile_roundtrip_with_empty_sections(tmp_path):
+    """A profile with no trace, no metrics, no file paths still round-trips."""
+    prof = MeasurementProfile()
+    prof.tree.child(0, KIND_MODULE, "only")
+    path = tmp_path / "minimal.rprf"
+    prof.save(path)
+    back = MeasurementProfile.load(path)
+    assert len(back.tree) == 2
+    assert back.metrics.n_values == 0
+    assert back.trace.time.size == 0

@@ -1,6 +1,7 @@
 """Executor runtime: backend parity (byte-identical DBs) & crash propagation."""
 import hashlib
 import threading
+import time
 
 import numpy as np
 import pytest
@@ -192,6 +193,111 @@ def test_ordered_sink_close_detects_gap():
     sink.put(2, "c")  # 1 never arrives
     with pytest.raises(RuntimeError, match="missing index 1"):
         sink.close()
+
+
+# ---------------------------------------------------------------------------
+# bounded out-of-order window (ROADMAP known limit)
+# ---------------------------------------------------------------------------
+
+def test_ordered_sink_window_bounds_buffering():
+    """Profile 0 slowest: producers 1..n must not stack O(n) items."""
+    n, window = 32, 4
+    seen = []
+    sink = OrderedSink(lambda i, item: seen.append(i), window=window)
+    threads = [threading.Thread(target=sink.put, args=(i, i))
+               for i in range(1, n)]
+    for t in threads:
+        t.start()
+    time.sleep(0.05)          # let every unblocked producer land
+    assert len(seen) == 0     # nothing drains before index 0
+    assert sink.max_pending <= window
+    sink.put(0, 0)            # the slow head arrives; everything drains
+    for t in threads:
+        t.join()
+    sink.close()
+    assert seen == list(range(n))
+    assert sink.max_pending <= window
+
+
+def test_ordered_sink_fail_unblocks_producers():
+    sink = OrderedSink(lambda i, item: None, window=2)
+    errors = []
+
+    def put(i):
+        try:
+            sink.put(i, i)
+        except RuntimeError as e:
+            errors.append((i, str(e)))
+
+    blocked = [threading.Thread(target=put, args=(i,)) for i in (5, 6)]
+    for t in blocked:
+        t.start()
+    time.sleep(0.05)
+    assert all(t.is_alive() for t in blocked)  # both wait on the window
+    sink.fail(RuntimeError("producer 0 died"))
+    for t in blocked:
+        t.join(timeout=5)
+    assert not any(t.is_alive() for t in blocked)
+    assert sorted(i for i, _ in errors) == [5, 6]
+    with pytest.raises(RuntimeError, match="producer 0 died"):
+        sink.put(7, 7)
+
+
+def test_ordered_sink_window_validation():
+    with pytest.raises(ValueError, match="window"):
+        OrderedSink(lambda i, item: None, window=0)
+
+
+def test_bounded_window_parity_and_crash(tmp_path, rng):
+    """window=1 (fully serialized appends) still yields byte-identical
+    output, and a worker crash under a bounded window must not hang the
+    blocked producers."""
+    paths = _save_workload(tmp_path, rng, n=8)
+    base = StreamingAggregator(
+        tmp_path / "base", AggregationConfig(executor="serial")).run(paths)
+    tight = StreamingAggregator(
+        tmp_path / "tight",
+        AggregationConfig(executor="threads", n_workers=4,
+                          sink_window=1)).run(paths)
+    assert _digest(tight.pms_path) == _digest(base.pms_path)
+    assert _digest(tight.cms_path) == _digest(base.cms_path)
+    bad = tmp_path / "bad.rprf"
+    bad.write_bytes(b"this is not a profile")
+    cfg = AggregationConfig(executor="threads", n_workers=4, sink_window=1)
+    with pytest.raises(Exception, match="not a profile file"):
+        StreamingAggregator(tmp_path / "crash_bounded",
+                            cfg).run([str(bad)] + paths)
+
+
+# ---------------------------------------------------------------------------
+# the ranks whole-run driver as a registered backend
+# ---------------------------------------------------------------------------
+
+def test_ranks_backend_registered():
+    assert "ranks" in available_executors()
+    ex = get_executor("ranks", 2)
+    assert ex.driver == "ranks" and not ex.in_process
+
+
+def test_ranks_backend_runs_like_the_others(tmp_path, rng):
+    """AggregationConfig(executor='ranks') must produce the same *analysis*
+    as the streaming backends: identical CMS/trace bytes and identical
+    counts (its PMS differs only in plane layout, per-rank segments)."""
+    paths = _save_workload(tmp_path, rng, n=6)
+    base = StreamingAggregator(
+        tmp_path / "ser", AggregationConfig(executor="serial")).run(paths)
+    res = StreamingAggregator(
+        tmp_path / "rnk",
+        AggregationConfig(executor="ranks", n_workers=2,
+                          n_threads=2)).run(paths)
+    assert res.n_profiles == base.n_profiles
+    assert res.n_contexts == base.n_contexts
+    assert res.n_values == base.n_values
+    assert _digest(res.cms_path) == _digest(base.cms_path)
+    assert _digest(res.trace_path) == _digest(base.trace_path)
+    with PMSReader(res.pms_path) as a, PMSReader(base.pms_path) as b:
+        for pid in range(base.n_profiles):
+            np.testing.assert_allclose(a.plane(pid).val, b.plane(pid).val)
 
 
 def test_streaming_reducer_preserves_index_order():
