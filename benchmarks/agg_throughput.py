@@ -1,0 +1,159 @@
+"""Aggregation throughput: profiles/sec and peak RSS, old vs zero-copy path.
+
+Measures the streaming aggregator on the standard synthetic workload for
+every executor backend, comparing the **legacy** data plane (three-pass
+phase 2, pickled plane transport) against the **fused** zero-copy plane
+(single-sort kernel, mmap loads, shm slab transport).  Each configuration
+runs in a fresh subprocess so peak RSS (``ru_maxrss``) is honest — the
+parent's high-water mark can't leak between measurements.
+
+Emits ``BENCH_agg.json`` with per-config wall time, profiles/sec, peak RSS
+and the sharded path's peak out-of-order plane residency (``sink_peak``,
+which the bounded sink must hold at/under the window).
+
+Standalone usage::
+
+    PYTHONPATH=src python -m benchmarks.agg_throughput [--smoke] \
+        [--out BENCH_agg.json] [--check]
+
+``--check`` additionally asserts fused >= 1.5x legacy on the ``processes``
+backend (the acceptance bar; skipped in smoke mode, where fixed pool
+startup costs dominate the tiny workload).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import resource
+import subprocess
+import sys
+import tempfile
+import time
+
+# Workload shape: sparse profiles over a huge unified CCT (the paper's
+# Table-2 regime — rank-private call paths make the unified tree ~P x any
+# single profile's footprint).  This is exactly where the legacy dense
+# propagate pays O(n_ctx_unified x m) per profile regardless of how sparse
+# the profile is, and where the fused kernel's interval segment sums pay
+# only O(x log x).  SMOKE is CI-sized: seconds per config, not minutes.
+SMOKE = dict(n_profiles=10, n_ctx=400, ctx_density=0.2, met_density=0.2,
+             trace_len=64, n_private=150)
+STANDARD = dict(n_profiles=48, n_ctx=4000, ctx_density=0.08,
+                met_density=0.1, trace_len=500, n_private=4000)
+
+
+def _configs(smoke: bool):
+    workers = 2 if smoke else 4
+    cfgs = []
+    for executor in ("serial", "threads", "processes"):
+        for plane in ("legacy", "fused"):
+            transport = "pickle" if plane == "legacy" else "shm"
+            cfgs.append({
+                "name": f"{executor}-{plane}",
+                "executor": executor,
+                "n_workers": 1 if executor == "serial" else workers,
+                "pipeline": plane,
+                "plane_transport": transport,
+            })
+    return cfgs
+
+
+def _run_single(spec: dict) -> dict:
+    """Entry point for the measurement subprocess: one aggregation run."""
+    from repro.core.aggregate import AggregationConfig, StreamingAggregator
+
+    paths = spec["paths"]
+    cfg = AggregationConfig(executor=spec["executor"],
+                            n_workers=spec["n_workers"],
+                            pipeline=spec["pipeline"],
+                            plane_transport=spec["plane_transport"])
+    t0 = time.perf_counter()
+    res = StreamingAggregator(spec["out_dir"], cfg).run(paths)
+    wall = time.perf_counter() - t0
+    rss_kb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    # children (processes backend) report their own high-water mark
+    child_kb = resource.getrusage(resource.RUSAGE_CHILDREN).ru_maxrss
+    return {
+        "name": spec["name"],
+        "wall_s": wall,
+        "profiles_per_s": len(paths) / wall,
+        "peak_rss_mib": rss_kb / 1024,
+        "peak_child_rss_mib": child_kb / 1024,
+        "sink_peak": res.timings.get("sink_peak", 0.0),
+        "n_values": res.n_values,
+        "pms_bytes": res.sizes["pms"],
+    }
+
+
+def run(out=print, tiny: bool = False, check: bool = False,
+        json_path: str = "BENCH_agg.json"):
+    rows = []
+    with tempfile.TemporaryDirectory() as td:
+        from benchmarks.workloads import Workload, generate
+        gen = SMOKE if tiny else STANDARD
+        w = Workload("agg-bench", gen["n_profiles"], gen["n_ctx"], 8, 40,
+                     gen["ctx_density"], gen["met_density"],
+                     trace_len=gen["trace_len"], n_private=gen["n_private"])
+        paths, _, _ = generate(w, td + "/in", seed=1)
+
+        for cfg in _configs(tiny):
+            spec = dict(cfg, paths=paths, out_dir=f"{td}/{cfg['name']}")
+            proc = subprocess.run(
+                [sys.executable, "-m", "benchmarks.agg_throughput",
+                 "--single", json.dumps(spec)],
+                capture_output=True, text=True,
+                env=dict(os.environ,
+                         PYTHONPATH=os.pathsep.join(
+                             filter(None, ["src",
+                                           os.environ.get("PYTHONPATH")]))),
+            )
+            if proc.returncode != 0:
+                raise RuntimeError(
+                    f"bench config {cfg['name']} failed:\n{proc.stderr}")
+            row = json.loads(proc.stdout.strip().splitlines()[-1])
+            rows.append(row)
+            out(f"agg.{row['name']},{row['wall_s']*1e6:.0f},"
+                f"profiles_per_s={row['profiles_per_s']:.1f}"
+                f";peak_rss_mib={row['peak_rss_mib']:.1f}"
+                f";sink_peak={row['sink_peak']:.0f}")
+
+    by_name = {r["name"]: r for r in rows}
+    speedups = {}
+    for executor in ("serial", "threads", "processes"):
+        legacy = by_name[f"{executor}-legacy"]
+        fused = by_name[f"{executor}-fused"]
+        speedups[executor] = legacy["wall_s"] / fused["wall_s"]
+        out(f"agg.speedup_{executor},0,"
+            f"fused_over_legacy={speedups[executor]:.2f}")
+
+    report = {"workload": "smoke" if tiny else "standard",
+              "configs": rows, "fused_speedup": speedups}
+    with open(json_path, "w") as f:
+        json.dump(report, f, indent=2)
+    out(f"agg.report,0,json={json_path}")
+
+    if check and not tiny:
+        assert speedups["processes"] >= 1.5, (
+            f"fused pipeline speedup on processes backend "
+            f"{speedups['processes']:.2f}x < 1.5x acceptance bar")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized workload")
+    ap.add_argument("--check", action="store_true",
+                    help="assert the 1.5x processes-backend speedup")
+    ap.add_argument("--out", default="BENCH_agg.json")
+    ap.add_argument("--single", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+    if args.single is not None:
+        print(json.dumps(_run_single(json.loads(args.single))))
+        return
+    run(tiny=args.smoke, check=args.check, json_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -50,12 +50,13 @@ import numpy as np
 from repro.core import cms as cms_mod
 from repro.core.cct import ContextTree
 from repro.core.lexical import StructureInfo, expand_profile_tree
+from repro.core.pipeline import transform_plane
 from repro.core.pms import PMSWriter
-from repro.core.propagate import propagate_inclusive, redistribute_placeholders
 from repro.core.sparse import MeasurementProfile, Trace
 from repro.core.stats import StatsAccumulator
 from repro.core.traces import TraceDBWriter
 from repro.runtime import OrderedSink, get_executor
+from repro.runtime import shm as shm_mod
 from repro.runtime.reduce import (StreamingReducer, TreeWithMaps,
                                   merge_tree_with_maps, tree_reduce)
 
@@ -76,6 +77,14 @@ class AggregationConfig:
     write_cms: bool = True
     write_traces: bool = True
     keep_exclusive: bool = True
+    pipeline: str = "fused"              # fused single-sort phase-2 kernel,
+                                         # or "legacy" (three-pass chain);
+                                         # byte-identical outputs either way
+    plane_transport: str = "shm"         # processes backend: "shm" slab
+                                         # arena or "pickle" through the
+                                         # pool pipe; byte-identical outputs
+    shm_slab_bytes: int = 1 << 20        # slab size; bigger planes fall
+                                         # back to one-shot segments
 
     @property
     def workers(self) -> int:
@@ -178,19 +187,38 @@ class TwoBufferWriter:
 
 
 def _load_structures(prof: MeasurementProfile,
-                     cache: dict[str, StructureInfo]) -> dict[str, StructureInfo]:
+                     cache: dict[str, StructureInfo],
+                     lock: threading.Lock | None = None
+                     ) -> dict[str, StructureInfo]:
     """Eagerly acquire lexical info for the profile's binaries (paper §4.2.3)
     and return the subset visible to this profile: exactly the structure
     files named in its file-paths section.  Restricting visibility per
     profile (instead of handing every profile the whole shared cache) keeps
     the expansion a pure function of the profile — required for
     cross-executor determinism, so every phase-1 path must go through this
-    one helper."""
-    for sp in prof.file_paths:
-        if sp.endswith(".struct.json") and os.path.exists(sp) \
-                and sp not in cache:
-            cache[sp] = StructureInfo.load(sp)
-    return {sp: cache[sp] for sp in prof.file_paths if sp in cache}
+    one helper.
+
+    With ``lock``, the cache is shared between threads: disk I/O happens
+    *outside* the lock and only cache lookups/publication run under it —
+    holding a lock across file reads would serialize every thread's phase 1
+    behind the slowest disk access.  Two threads may race to load the same
+    file; ``setdefault`` keeps the first copy (the loads are pure functions
+    of the file, so either copy is equivalent).
+    """
+    want = [sp for sp in prof.file_paths
+            if sp.endswith(".struct.json") and os.path.exists(sp)]
+    if lock is None:
+        for sp in want:
+            if sp not in cache:
+                cache[sp] = StructureInfo.load(sp)
+        return {sp: cache[sp] for sp in prof.file_paths if sp in cache}
+    with lock:
+        missing = [sp for sp in want if sp not in cache]
+    loaded = [(sp, StructureInfo.load(sp)) for sp in missing]  # I/O unlocked
+    with lock:
+        for sp, si in loaded:
+            cache.setdefault(sp, si)
+        return {sp: cache[sp] for sp in prof.file_paths if sp in cache}
 
 
 def _merge_stats(a: StatsAccumulator, b: StatsAccumulator) -> StatsAccumulator:
@@ -229,19 +257,20 @@ class StreamingAggregator:
         struct_lock = threading.Lock()
         uniq_lock = threading.Lock()
         n = len(profile_paths)
+        # one fresh container per index — a shared `[{}] * n` alias would let
+        # any in-place mutation silently corrupt every profile's entry
         remaps: list[np.ndarray | None] = [None] * n
-        routes: list[dict] = [{}] * n
-        identities: list[dict] = [{}] * n
+        routes: list[dict] = [{} for _ in range(n)]
+        identities: list[dict] = [{} for _ in range(n)]
         trace_lens = np.zeros(n, dtype=np.int64)
-        registry_jsons: list[list] = [[]] * n
+        registry_jsons: list[list] = [[] for _ in range(n)]
 
         def body(i: int):
             t0 = time.perf_counter()
             prof = MeasurementProfile.load(profile_paths[i])
             timer.add("io_read", time.perf_counter() - t0)
             t1 = time.perf_counter()
-            with struct_lock:
-                own = _load_structures(prof, structures)
+            own = _load_structures(prof, structures, struct_lock)
             with uniq_lock:  # uniquing (U) — see module docstring on locking
                 remap, rts = expand_profile_tree(unified, prof.tree, own)
             remaps[i] = remap
@@ -256,6 +285,13 @@ class StreamingAggregator:
 
     # -- full run --------------------------------------------------------------
     def run(self, profile_paths: list[str]) -> AnalysisResult:
+        if self.cfg.pipeline not in ("fused", "legacy"):
+            raise ValueError(f"unknown pipeline {self.cfg.pipeline!r}; "
+                             f"expected 'fused' or 'legacy'")
+        if self.cfg.plane_transport not in ("shm", "pickle"):
+            raise ValueError(f"unknown plane_transport "
+                             f"{self.cfg.plane_transport!r}; expected 'shm' "
+                             f"or 'pickle'")
         with self._executor() as ex:
             if ex.driver == "ranks":
                 # whole-run driver backend (paper §4.4): n_workers ranks,
@@ -314,7 +350,7 @@ class StreamingAggregator:
             trace_writer = TraceDBWriter(trace_path, [int(x) for x in trace_lens])
         nvals = np.zeros(n, dtype=np.int64)
         end_arr = end  # by preorder id
-        ident_pos = np.arange(n_ctx)
+        parent_pre = np.asarray(final_tree.parent, dtype=np.int64)
 
         def body(i: int):
             try:
@@ -323,12 +359,12 @@ class StreamingAggregator:
                 timer.add("io_read", time.perf_counter() - t0)
                 t1 = time.perf_counter()
                 remap_final = pos[np.asarray(remaps[i], dtype=np.int64)]
-                sm = prof.metrics.remap_contexts(remap_final)
-                if routes[i]:
-                    rts = {int(pos[ph]): (pos[t_], w) for ph, (t_, w) in routes[i].items()}
-                    sm = redistribute_placeholders(sm, rts)
-                sm = propagate_inclusive(sm, ident_pos, end_arr,
-                                         keep_exclusive=cfg.keep_exclusive)
+                rts = {int(pos[ph]): (pos[t_], w)
+                       for ph, (t_, w) in routes[i].items()}
+                sm = transform_plane(prof.metrics, remap_final, rts,
+                                     parent_pre, end_arr,
+                                     pipeline=cfg.pipeline,
+                                     keep_exclusive=cfg.keep_exclusive)
                 acc = StatsAccumulator()
                 acc.update(sm)
                 nvals[i] = sm.n_values
@@ -357,6 +393,7 @@ class StreamingAggregator:
         if trace_writer is not None:
             trace_writer.close()
         timer.add("phase2", time.perf_counter() - t0)
+        timer.add("sink_peak", float(sink.max_pending))
 
         return self._complete(pms, final_tree, stats_reducer.result(),
                               registries, trace_path, timer, t_start, n,
@@ -389,10 +426,11 @@ class StreamingAggregator:
         n_ctx = len(final_tree)
 
         # broadcast final ids back: compose per-profile remaps and routes
+        # (fresh containers per index — never `[{}] * n` aliases)
         remaps_final: list[np.ndarray | None] = [None] * n
-        routes_final: list[dict] = [{}] * n
+        routes_final: list[dict] = [{} for _ in range(n)]
         identities: list[dict | None] = [None] * n
-        registries: list[list] = [[]] * n
+        registries: list[list] = [[] for _ in range(n)]
         trace_lens = np.zeros(n, dtype=np.int64)
         for k, sh in enumerate(shards):
             res = results1[k]
@@ -420,25 +458,70 @@ class StreamingAggregator:
             trace_writer = TraceDBWriter(trace_path, [int(x) for x in trace_lens])
         stats_reducer = StreamingReducer(_merge_stats)
         nvals = np.zeros(n, dtype=np.int64)
+        parent_pre = np.asarray(final_tree.parent, dtype=np.int64)
+
+        # submission credits bound in-flight profiles (worker-resident or
+        # buffered out of order in the sink) to the sink window; with the
+        # shm transport the window doubles as the slab count, so slab
+        # recycling *is* the submission throttle and the single-producer
+        # feed below can never block on its own bounded sink (the next-
+        # expected profile is always already submitted).  An explicit
+        # sink_window=0 ("unbounded") stays unthrottled on the pickle
+        # transport, where no slab scarcity requires a bound.
+        window = cfg.effective_sink_window
+        n_slabs = window if window is not None else max(2 * cfg.workers, 2)
+        arena = None
+        transport = cfg.plane_transport
+        if transport == "shm" and n > 0:
+            try:
+                arena = shm_mod.SlabArena(n_slabs, cfg.shm_slab_bytes)
+            except Exception:
+                transport = "pickle"  # no usable /dev/shm: fall back
+        n_credits = (window if window is not None
+                     else n_slabs if arena is not None else None)
 
         def consume(i: int, item):
-            payload, p_ctx, p_vals, stat_arrays, ttime, tctx = item
-            writer.append(i, payload, p_ctx, p_vals, identities[i])
-            stats_reducer.push(StatsAccumulator.from_arrays(stat_arrays))
-            nvals[i] = p_vals
-            if trace_writer is not None and ttime.size:
-                t2 = time.perf_counter()
-                trace_writer.write_trace(i, Trace(ttime, tctx))
-                timer.add("io_write", time.perf_counter() - t2)
+            try:
+                payload, p_ctx, p_vals, stat_arrays, ttime, tctx, cleanup = (
+                    _open_plane_result(item, arena))
+            except BaseException:
+                _discard_plane_result(item)
+                raise
+            try:
+                writer.append(i, payload, p_ctx, p_vals, identities[i])
+                stats_reducer.push(StatsAccumulator.from_arrays(stat_arrays))
+                nvals[i] = p_vals
+                if trace_writer is not None and len(ttime):
+                    t2 = time.perf_counter()
+                    trace_writer.write_trace(i, Trace(ttime, tctx))
+                    timer.add("io_write", time.perf_counter() - t2)
+            finally:
+                # on success *and* failure: release slab views, then
+                # recycle the slab / unlink the one-shot segment — a
+                # consume error must not strand its own descriptor (the
+                # sink popped it, so the abort sweep can't see it)
+                del payload, ttime, tctx
+                cleanup()
 
-        sink = OrderedSink(consume)
-        tasks = [(profile_paths[i], remaps_final[i], routes_final[i])
-                 for i in range(n)]
+        sink = OrderedSink(consume, window=window)
+        initargs = (end, parent_pre, cfg.keep_exclusive, cfg.write_traces,
+                    cfg.pipeline, cfg.shm_slab_bytes)
+
+        def task_source():
+            # pulled lazily by map_throttled, one task per credit: with the
+            # shm transport a free slab is guaranteed at every pull
+            for i in range(n):
+                slab = arena.acquire() if arena is not None else None
+                yield (profile_paths[i], remaps_final[i], routes_final[i],
+                       slab)
+
+        credits = ((lambda: sink.consumed + n_credits)
+                   if n_credits is not None else (lambda: float("inf")))
         try:
-            for i, result in ex.map_unordered(
-                    _phase2_profile_worker, tasks,
-                    initializer=_phase2_init,
-                    initargs=(end, cfg.keep_exclusive, cfg.write_traces)):
+            for i, result in ex.map_throttled(
+                    _phase2_profile_worker, task_source(), credits=credits,
+                    initializer=_phase2_init, initargs=initargs,
+                    on_discard=lambda res: _discard_plane_result(res[1])):
                 sink.put(i, result)
             sink.close()
             writer.close()
@@ -446,10 +529,18 @@ class StreamingAggregator:
             pms.abort()
             if trace_writer is not None:
                 trace_writer.close()
+            # unlink one-shot segments stranded in the sink's buffer (slabs
+            # themselves die with the arena below)
+            for item in sink.pending_items():
+                _discard_plane_result(item)
             raise
+        finally:
+            if arena is not None:
+                arena.close()
         if trace_writer is not None:
             trace_writer.close()
         timer.add("phase2", time.perf_counter() - t0)
+        timer.add("sink_peak", float(sink.max_pending))
 
         return self._complete(pms, final_tree, stats_reducer.result(),
                               registries, trace_path, timer, t_start, n,
@@ -515,41 +606,125 @@ def _phase1_shard_worker(shard_paths: list[str]) -> dict:
             "registries": registries}
 
 
-_PHASE2_STATE: tuple[np.ndarray, np.ndarray, bool, bool] | None = None
+_PHASE2_STATE: tuple | None = None
+
+_STAT_FIELDS = ("keys", "sum", "cnt", "vmin", "vmax", "sumsq")
 
 
-def _phase2_init(end: np.ndarray, keep_exclusive: bool,
-                 write_traces: bool) -> None:
-    """Pool initializer: ship the (large) subtree-interval array — and build
-    the identity position vector — once per worker instead of once per
-    profile task."""
+def _phase2_init(end: np.ndarray, parent: np.ndarray, keep_exclusive: bool,
+                 write_traces: bool, pipeline: str, slab_bytes: int) -> None:
+    """Pool initializer: ship the (large) preorder-interval arrays once per
+    worker instead of once per profile task."""
     global _PHASE2_STATE
-    end = np.asarray(end, dtype=np.int64)
-    _PHASE2_STATE = (end, np.arange(end.size), bool(keep_exclusive),
-                     bool(write_traces))
+    _PHASE2_STATE = (np.asarray(end, dtype=np.int64),
+                     np.asarray(parent, dtype=np.int64),
+                     bool(keep_exclusive), bool(write_traces), pipeline,
+                     int(slab_bytes))
+
+
+def _plane_section_lengths(nb_payload: int, n_trace: int,
+                           n_stats: int) -> list[int]:
+    """Byte lengths of a slab's sections: encoded plane, trace time (f64),
+    trace ctx (u32), then the six statistics arrays (u64 keys + 5 x f64)."""
+    return [nb_payload, 8 * n_trace, 4 * n_trace,
+            8 * n_stats, 8 * n_stats, 8 * n_stats,
+            8 * n_stats, 8 * n_stats, 8 * n_stats]
 
 
 def _phase2_profile_worker(task) -> tuple:
     """Remap + redistribute + propagate + encode one profile; ship the
-    encoded plane (and per-profile statistics payload) back to the writer."""
-    path, remap_final, routes_final = task
+    encoded plane (and per-profile trace/statistics payload) back to the
+    writer — through the assigned shared-memory slab when one is given
+    (``("shm", ...)`` descriptor), else pickled inline (``("raw", ...)``).
+    """
+    path, remap_final, routes_final, slab_name = task
     assert _PHASE2_STATE is not None, "phase-2 worker used without initializer"
-    end, ident_pos, keep_exclusive, write_traces = _PHASE2_STATE
+    (end, parent, keep_exclusive, write_traces, pipeline,
+     slab_bytes) = _PHASE2_STATE
     prof = MeasurementProfile.load(path)
-    sm = prof.metrics.remap_contexts(np.asarray(remap_final, dtype=np.int64))
-    if routes_final:
-        sm = redistribute_placeholders(sm, routes_final)
-    sm = propagate_inclusive(sm, ident_pos, end,
-                             keep_exclusive=keep_exclusive)
+    remap_arr = np.asarray(remap_final, dtype=np.int64)
+    sm = transform_plane(prof.metrics, remap_arr, routes_final, parent, end,
+                         pipeline=pipeline, keep_exclusive=keep_exclusive)
     acc = StatsAccumulator()
     acc.update(sm)
     if write_traces and prof.trace.time.size:
-        tr = prof.trace.remap_contexts(np.asarray(remap_final, dtype=np.int64))
+        tr = prof.trace.remap_contexts(remap_arr)
         ttime, tctx = prof.trace.time, tr.ctx
     else:
         ttime, tctx = np.empty(0, np.float64), np.empty(0, np.uint32)
-    return (sm.encode(), sm.n_contexts, sm.n_values, acc.to_arrays(),
-            ttime, tctx)
+
+    if slab_name is None:
+        return ("raw", sm.encode(), sm.n_contexts, sm.n_values,
+                acc.to_arrays(), ttime, tctx)
+
+    stats = acc.to_arrays()
+    nb_payload = sm.encoded_nbytes()
+    n_stats = int(stats["keys"].size)
+    offs, total = shm_mod.sections_layout(
+        _plane_section_lengths(nb_payload, int(ttime.size), n_stats))
+    own = None
+    if total <= slab_bytes:
+        seg = shm_mod.worker_slab(slab_name)
+    else:
+        seg = shm_mod.create_segment(total)   # oversize plane: one-shot
+        own = seg.name
+    buf = seg.buf
+    sm.encode_into(buf, offs[0])
+    shm_mod.write_section(buf, offs[1], ttime)
+    shm_mod.write_section(buf, offs[2], tctx)
+    for off, field_name in zip(offs[3:], _STAT_FIELDS):
+        shm_mod.write_section(buf, off, stats[field_name])
+    if own is not None:
+        del buf
+        seg.close()  # parent attaches by name and unlinks after consuming
+    return ("shm", slab_name, own, nb_payload, int(ttime.size), n_stats,
+            sm.n_contexts, sm.n_values)
+
+
+def _open_plane_result(item: tuple, arena):
+    """Resolve a phase-2 result descriptor into (payload, n_ctx, n_vals,
+    stat_arrays, ttime, tctx, cleanup).
+
+    ``raw`` items are self-contained.  ``shm`` items resolve to zero-copy
+    views over the slab (or one-shot segment); statistics arrays are copied
+    out because the stats reducer holds them past slab recycling, while the
+    payload/trace views are consumed (written to disk) before ``cleanup()``
+    recycles the slab.
+    """
+    if item[0] == "raw":
+        _, payload, p_ctx, p_vals, stat_arrays, ttime, tctx = item
+        return payload, p_ctx, p_vals, stat_arrays, ttime, tctx, lambda: None
+    _, slab_name, own, nb_payload, n_trace, n_stats, p_ctx, p_vals = item
+    offs, _ = shm_mod.sections_layout(
+        _plane_section_lengths(nb_payload, n_trace, n_stats))
+    seg = shm_mod.attach(own) if own is not None else None
+    buf = seg.buf if seg is not None else arena.view(slab_name)
+    payload = buf[offs[0]:offs[0] + nb_payload]
+    ttime = shm_mod.read_section(buf, offs[1], np.float64, n_trace)
+    tctx = shm_mod.read_section(buf, offs[2], np.uint32, n_trace)
+    stat_arrays = {
+        f: shm_mod.read_section(buf, off, np.uint64 if f == "keys"
+                                else np.float64, n_stats, copy=True)
+        for off, f in zip(offs[3:], _STAT_FIELDS)
+    }
+
+    def cleanup():
+        if seg is not None:
+            shm_mod.destroy_segment(seg)
+        arena.release(slab_name)
+
+    return payload, p_ctx, p_vals, stat_arrays, ttime, tctx, cleanup
+
+
+def _discard_plane_result(item) -> None:
+    """Abort-path disposal of an unconsumed descriptor: unlink its one-shot
+    segment if it has one (arena slabs are unlinked wholesale)."""
+    if isinstance(item, tuple) and len(item) > 2 and item[0] == "shm" \
+            and item[2] is not None:
+        try:
+            shm_mod.destroy_segment(shm_mod.attach(item[2]))
+        except Exception:
+            pass
 
 
 # ---------------------------------------------------------------------------

@@ -107,15 +107,44 @@ def redistribute_placeholders(
         return metrics
     rows, mids, vals = metrics.triplets()
     is_ph = np.isin(rows, np.fromiter(routes.keys(), dtype=np.int64))
-    keep_r, keep_m, keep_v = rows[~is_ph], mids[~is_ph], vals[~is_ph]
-    new_r, new_m, new_v = [keep_r], [keep_m], [keep_v]
-    for r, m, v in zip(rows[is_ph], mids[is_ph], vals[is_ph]):
-        targets, w = routes[int(r)]
-        w = np.asarray(w, dtype=np.float64)
-        w = w / w.sum()
-        new_r.append(np.asarray(targets, dtype=np.int64))
-        new_m.append(np.full(len(targets), m, dtype=np.int64))
-        new_v.append(v * w)
+    leaf_ctx, e_lens, norm_w = expand_routes(rows[is_ph], routes)
     return SparseMetrics.from_triplets(
-        np.concatenate(new_r), np.concatenate(new_m), np.concatenate(new_v)
+        np.concatenate([rows[~is_ph], leaf_ctx]),
+        np.concatenate([mids[~is_ph], np.repeat(mids[is_ph], e_lens)]),
+        np.concatenate([vals[~is_ph], np.repeat(vals[is_ph], e_lens) * norm_w]),
     )
+
+
+def expand_routes(
+    ph_rows: np.ndarray, routes: dict[int, tuple[np.ndarray, np.ndarray]]
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Vectorized route-expansion core, shared with the fused pipeline.
+
+    For placeholder context ids ``ph_rows`` (stream order, duplicates
+    allowed), returns ``(leaf_ctx, lens, norm_w)``: the flattened route
+    targets per entry, each entry's target count, and the per-route
+    normalized weights gathered per target — one ``np.repeat``/
+    ``np.concatenate`` pass instead of a Python loop per placeholder row.
+    Per-element arithmetic matches the historical loop — the caller applies
+    ``value * norm_w`` where ``norm_w = w / w.sum()`` — and expansion order
+    is (entry order, then route order), so downstream summation order is
+    unchanged.
+    """
+    ph_ids = np.fromiter(routes.keys(), dtype=np.int64)
+    targets = [np.asarray(routes[int(c)][0], dtype=np.int64) for c in ph_ids]
+    weights = [np.asarray(routes[int(c)][1], dtype=np.float64) for c in ph_ids]
+    weights = [w / w.sum() for w in weights]
+    lens = np.array([t.size for t in targets], dtype=np.int64)
+    flat_tgt = np.concatenate(targets) if targets else np.empty(0, np.int64)
+    flat_w = np.concatenate(weights) if weights else np.empty(0, np.float64)
+    route_off = np.concatenate([[0], np.cumsum(lens)])
+
+    order = np.argsort(ph_ids, kind="stable")
+    ridx = order[np.searchsorted(ph_ids[order], ph_rows)]
+    e_lens = lens[ridx]
+    total = int(e_lens.sum())
+    starts = np.repeat(route_off[ridx], e_lens)
+    local = np.arange(total) - np.repeat(
+        np.concatenate([[0], np.cumsum(e_lens)])[:-1], e_lens)
+    gather = starts + local
+    return flat_tgt[gather], e_lens, flat_w[gather]

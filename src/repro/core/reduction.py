@@ -26,7 +26,7 @@ from repro.core import cms as cms_mod
 from repro.core.aggregate import (AggregationConfig, AnalysisResult,
                                   StreamingAggregator, _PhaseTimer, _renumber)
 from repro.core.cct import ContextTree
-from repro.core.propagate import propagate_inclusive, redistribute_placeholders
+from repro.core.pipeline import transform_plane
 from repro.core.pms import PMSWriter
 from repro.core.sparse import MeasurementProfile
 from repro.core.stats import StatsAccumulator
@@ -63,9 +63,7 @@ def _phase1_worker(args):
 
 def _phase2_worker(args):
     (rank, paths, remaps_final, routes_final, seg_path, trc_path,
-     end_arr, keep_exclusive) = args
-    n_ctx = end_arr.shape[0]
-    ident = np.arange(n_ctx)
+     end_arr, parent_arr, keep_exclusive, pipeline) = args
     acc = StatsAccumulator()
     records = []
     trace_blobs = []
@@ -73,10 +71,10 @@ def _phase2_worker(args):
         off = 0
         for i, path in enumerate(paths):
             prof = MeasurementProfile.load(path)
-            sm = prof.metrics.remap_contexts(remaps_final[i])
-            if routes_final[i]:
-                sm = redistribute_placeholders(sm, routes_final[i])
-            sm = propagate_inclusive(sm, ident, end_arr, keep_exclusive=keep_exclusive)
+            sm = transform_plane(prof.metrics, remaps_final[i],
+                                 routes_final[i], parent_arr, end_arr,
+                                 pipeline=pipeline,
+                                 keep_exclusive=keep_exclusive)
             acc.update(sm)
             payload = sm.encode()
             seg.write(payload)
@@ -121,6 +119,7 @@ def aggregate_multiprocess(
         pos, order, end = merged.tree.preorder()
         final_tree = _renumber(merged.tree, pos, order)
         n_ctx = len(final_tree)
+        parent_pre = np.asarray(final_tree.parent, dtype=np.int64)
 
         # ---- broadcast final ids; compose per-profile remaps ----
         phase2_args = []
@@ -142,7 +141,8 @@ def aggregate_multiprocess(
             registry_json = registry_json or next((x for x in res["registries"] if x), [])
             seg_path = os.path.join(out_dir, f"seg{r}.bin")
             phase2_args.append((r, shards[r], remaps_final, routes_final,
-                                seg_path, None, end, cfg.keep_exclusive))
+                                seg_path, None, end, parent_pre,
+                                cfg.keep_exclusive, cfg.pipeline))
 
         # ---- phase 2: stream metrics per rank ----
         results2 = pool.map(_phase2_worker, phase2_args)

@@ -18,6 +18,7 @@ six sections: environment, identity, file paths, contexts, trace, metrics).
 from __future__ import annotations
 
 import io
+import mmap
 import struct
 from dataclasses import dataclass, field
 
@@ -139,11 +140,22 @@ class SparseMetrics:
         return n_ctx * n_metrics * np.dtype(VAL_DTYPE).itemsize
 
     # -- serialization ---------------------------------------------------------
-    def encode(self) -> bytes:
-        out = io.BytesIO()
+    def encoded_nbytes(self) -> int:
+        """Exact :meth:`encode` size — lets slab writers reserve space."""
+        return sum(binio.packed_nbytes(a)
+                   for a in (self.ctx, self.start, self.mid, self.val))
+
+    def encode_into(self, view, off: int = 0) -> int:
+        """Serialize directly into a writable buffer (shared-memory slab);
+        byte-identical to :meth:`encode`.  Returns the new offset."""
         for a in (self.ctx, self.start, self.mid, self.val):
-            binio.write_array(out, a)
-        return out.getvalue()
+            off = binio.pack_array_into(view, off, a)
+        return off
+
+    def encode(self) -> bytes:
+        out = bytearray(self.encoded_nbytes())
+        self.encode_into(out, 0)
+        return bytes(out)
 
     @classmethod
     def decode(cls, buf: bytes, off: int = 0) -> tuple["SparseMetrics", int]:
@@ -203,13 +215,25 @@ class MeasurementProfile:
 
     @classmethod
     def load(cls, path) -> "MeasurementProfile":
+        """Zero-copy load: map the file and decode views over the mapping.
+
+        Metric/trace arrays alias the page cache (via ``binio.unpack_array``
+        views) until something copies them — phase 2 of the aggregator never
+        does, so a profile is read from disk at most once with no private
+        materialization.  The map stays alive for as long as any decoded
+        array references it; falls back to a plain read for empty files and
+        filesystems that refuse ``mmap``.
+        """
         with open(path, "rb") as f:
-            buf = f.read()
+            try:
+                buf = mmap.mmap(f.fileno(), 0, access=mmap.ACCESS_READ)
+            except (OSError, ValueError):
+                buf = f.read()
         return cls.decode(buf)
 
     @classmethod
-    def decode(cls, buf: bytes) -> "MeasurementProfile":
-        assert buf[:4] == PROFILE_MAGIC, "not a profile file"
+    def decode(cls, buf) -> "MeasurementProfile":
+        assert bytes(buf[:4]) == PROFILE_MAGIC, "not a profile file"
         off = 8
         meta, off = binio.unpack_json(buf, off)
         arrs = {}

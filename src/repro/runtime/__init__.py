@@ -9,13 +9,14 @@ from repro.runtime.base import (Executor, available_executors, get_executor,
 from repro.runtime.ordered import OrderedSink
 from repro.runtime.reduce import TreeWithMaps, merge_tree_with_maps, tree_reduce
 from repro.runtime.serial import SerialExecutor
+from repro.runtime.shm import SlabArena
 from repro.runtime.threads import ThreadsExecutor, parallel_for
 from repro.runtime.processes import ProcessesExecutor
 from repro.runtime.ranks import RanksExecutor
 
 __all__ = [
     "Executor", "available_executors", "get_executor", "register_executor",
-    "OrderedSink", "TreeWithMaps", "merge_tree_with_maps", "tree_reduce",
-    "SerialExecutor", "ThreadsExecutor", "ProcessesExecutor", "RanksExecutor",
-    "parallel_for",
+    "OrderedSink", "SlabArena", "TreeWithMaps", "merge_tree_with_maps",
+    "tree_reduce", "SerialExecutor", "ThreadsExecutor", "ProcessesExecutor",
+    "RanksExecutor", "parallel_for",
 ]

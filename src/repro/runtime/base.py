@@ -93,6 +93,23 @@ class Executor(ABC):
         thread on in-process ones — so it must set up state shared through
         the address space (module globals), not per-thread state."""
 
+    def map_throttled(self, fn: Callable, tasks: Iterable, *,
+                      credits: Callable[[], float],
+                      initializer: Callable | None = None,
+                      initargs: tuple = (),
+                      on_discard: Callable[[object], None] | None = None
+                      ) -> Iterator[tuple[int, object]]:
+        """Like :meth:`map_unordered`, but task ``i`` is pulled from
+        ``tasks`` (lazily) and submitted only while ``i < credits()`` —
+        the backpressure primitive for feeders that attach a scarce
+        per-task resource (shared-memory slabs).  ``on_discard`` disposes
+        results that completed but were never yielded to an aborting
+        caller.  In-process engines get backpressure from the bounded
+        :class:`~repro.runtime.OrderedSink` instead, so only
+        out-of-process backends implement this."""
+        raise NotImplementedError(
+            f"executor {self.name!r} does not support throttled submission")
+
     # -- helpers ------------------------------------------------------------
     def shards(self, n_items: int) -> list[list[int]]:
         """Deterministic contiguous split of ``range(n_items)`` into at most

@@ -18,9 +18,12 @@ the out-of-order buffer at ``w`` items — without it, one slow early item
 (profile 0 slowest) leaves O(n_items) encoded planes resident.  Blocking
 requires every producer failure to reach :meth:`fail`, otherwise blocked
 peers would wait forever; in-process engines wrap worker bodies
-accordingly.  Single-producer feeders (the ``processes`` engine's parent
-loop) must stay unbounded: with nobody else to deliver the missing index,
-blocking would self-deadlock.
+accordingly.  A single-producer feeder (the ``processes`` engine's parent
+loop) may use a window only if its *submissions* are already credited
+against consumption (``Executor.map_throttled`` with ``credits =
+consumed + w``): then no delivered index can ever reach ``next + w`` and
+``put`` never blocks — with an uncredited feed, blocking would
+self-deadlock, since nobody else can deliver the missing index.
 """
 from __future__ import annotations
 
@@ -104,6 +107,12 @@ class OrderedSink:
     def consumed(self) -> int:
         with self._lock:
             return self._next
+
+    def pending_items(self) -> list:
+        """Snapshot of buffered (unconsumed) items — abort-path cleanup for
+        feeders whose items carry external resources (shm descriptors)."""
+        with self._lock:
+            return list(self._pending.values())
 
     def close(self) -> None:
         """Assert the sink fully drained; re-raise a pending consume error."""

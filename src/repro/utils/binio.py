@@ -7,6 +7,13 @@ Layout conventions (little-endian throughout):
 
 These helpers exist so every on-disk format in :mod:`repro.core` measures its
 exact byte footprint (the paper's evaluation is in bytes, Tables 1/2/4).
+
+Zero-copy contract: :func:`unpack_array` returns a *view* over the caller's
+buffer (``np.frombuffer`` with an offset, never an intermediate slice), so
+decoding a profile from an ``mmap`` aliases the page cache instead of
+materializing a private copy.  The view keeps the backing buffer alive; it
+is read-only whenever the buffer is (bytes, ``ACCESS_READ`` maps) — callers
+that need to mutate must copy explicitly, exactly as before.
 """
 from __future__ import annotations
 
@@ -60,8 +67,32 @@ def pack_array(arr: np.ndarray) -> bytes:
     return head + arr.tobytes()
 
 
-def unpack_array(buf: bytes, off: int = 0):
-    code = buf[off : off + 4].decode("ascii")
+def packed_nbytes(arr: np.ndarray) -> int:
+    """Size of :func:`pack_array`'s output without materializing it."""
+    return 5 + 8 * arr.ndim + arr.nbytes
+
+
+def pack_array_into(view, off: int, arr: np.ndarray) -> int:
+    """Write the :func:`pack_array` layout directly into a writable buffer
+    (a bytearray or shared-memory view) at ``off``; returns the new offset.
+
+    Byte-for-byte identical to ``pack_array`` — the slab transport and the
+    pickle transport must produce the same plane payloads.
+    """
+    arr = np.ascontiguousarray(arr)
+    code = _CODE_FOR_DTYPE[arr.dtype]
+    view[off : off + 4] = code.encode("ascii")
+    struct.pack_into("<B", view, off + 4, arr.ndim)
+    struct.pack_into(f"<{arr.ndim}Q", view, off + 5, *arr.shape)
+    off += 5 + 8 * arr.ndim
+    if arr.nbytes:
+        dst = np.frombuffer(view, dtype=np.uint8, count=arr.nbytes, offset=off)
+        dst[:] = arr.reshape(-1).view(np.uint8)
+    return off + arr.nbytes
+
+
+def unpack_array(buf, off: int = 0):
+    code = bytes(buf[off : off + 4]).decode("ascii")
     dtype = _DTYPE_CODES[code]
     off += 4
     (ndim,) = struct.unpack_from("<B", buf, off)
@@ -70,7 +101,8 @@ def unpack_array(buf: bytes, off: int = 0):
     off += 8 * ndim
     count = int(np.prod(shape)) if ndim else 1
     nbytes = count * dtype.itemsize
-    arr = np.frombuffer(buf[off : off + nbytes], dtype=dtype).reshape(shape)
+    # a view over the caller's buffer (page cache for mmaps), not a copy
+    arr = np.frombuffer(buf, dtype=dtype, count=count, offset=off).reshape(shape)
     return arr, off + nbytes
 
 

@@ -1,0 +1,394 @@
+"""Zero-copy data plane: fused phase-2 kernel, shm slab transport, mmap
+profile loads.  The central assertion everywhere: every path (fused vs
+legacy pipeline, shm vs pickle transport, all four executors) produces
+byte-identical databases."""
+import hashlib
+import os
+import signal
+import sys
+import time
+
+import numpy as np
+import pytest
+
+from tests._hypothesis_compat import given, settings, st
+
+from repro.core.aggregate import AggregationConfig, StreamingAggregator
+from repro.core.cct import ContextTree
+from repro.core.metrics import INCLUSIVE_BIT
+from repro.core.pipeline import fused_transform
+from repro.core.propagate import (propagate_inclusive,
+                                  propagate_inclusive_reference,
+                                  redistribute_placeholders)
+from repro.core.sparse import MeasurementProfile, SparseMetrics
+from repro.runtime import SlabArena, get_executor
+from repro.runtime.shm import attach, sections_layout
+from repro.utils import binio
+from tests.conftest import make_profile
+
+
+def _digest(path):
+    with open(path, "rb") as f:
+        return hashlib.sha256(f.read()).hexdigest()
+
+
+def _save_workload(tmp_path, rng, n=8, **kw):
+    paths = []
+    for i in range(n):
+        prof = make_profile(rng, n_nodes=70, n_metrics=6, density=0.3,
+                            n_trace=10, identity={"rank": i}, **kw)
+        p = tmp_path / f"prof{i:03d}.rprf"
+        prof.save(p)
+        paths.append(str(p))
+    return paths
+
+
+def _random_tree_case(rng, max_nodes=60):
+    """A preorder-space tree + a random profile remapped onto it."""
+    t = ContextTree()
+    for _ in range(int(rng.integers(2, max_nodes))):
+        t.child(int(rng.integers(0, len(t))), int(rng.integers(1, 5)),
+                f"n{rng.integers(0, 8)}")
+    pos, order, end = t.preorder()
+    n = len(t)
+    parent_pre = np.full(n, -1, np.int64)
+    for c in range(1, n):
+        parent_pre[pos[c]] = pos[t.parent[c]]
+    n_local = int(rng.integers(1, 30))
+    remap = pos[rng.integers(0, n, n_local)]
+    x = int(rng.integers(0, 150))
+    sm = SparseMetrics.from_triplets(
+        rng.integers(0, n_local, x), rng.integers(0, 6, x),
+        rng.uniform(-2, 4, x))
+    routes = {}
+    if rng.integers(0, 2):
+        for ph in rng.choice(n, size=min(3, n), replace=False):
+            k = int(rng.integers(1, 4))
+            routes[int(ph)] = (rng.integers(0, n, k).astype(np.int64),
+                               rng.uniform(0.1, 2.0, k))
+    return sm, remap, routes, parent_pre, end, n
+
+
+# ---------------------------------------------------------------------------
+# fused kernel vs the legacy three-pass chain: byte-identical planes
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.booleans())
+def test_fused_transform_bytes_equal_legacy_chain(seed, keep_exclusive):
+    rng = np.random.default_rng(seed)
+    sm, remap, routes, parent_pre, end, n = _random_tree_case(rng)
+    legacy = sm.remap_contexts(remap)
+    if routes:
+        legacy = redistribute_placeholders(legacy, routes)
+    legacy = propagate_inclusive(legacy, np.arange(n), end,
+                                 keep_exclusive=keep_exclusive)
+    fused = fused_transform(sm, remap, routes, parent_pre, end,
+                            keep_exclusive=keep_exclusive)
+    assert legacy.encode() == fused.encode()
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_fused_transform_matches_recursive_reference(seed):
+    """Property test against the paper's per-node recursive walk."""
+    rng = np.random.default_rng(seed)
+    sm, remap, routes, parent_pre, end, n = _random_tree_case(rng)
+    fused = fused_transform(sm, remap, {}, parent_pre, end)  # no routes:
+    # the reference oracle models propagation only, not redistribution
+    remapped = sm.remap_contexts(remap)
+    ref = propagate_inclusive_reference(remapped, parent_pre)
+    got = {(int(c), int(m)): v for c, m, v in zip(*fused.triplets())}
+    want = {(int(c), int(m)): v for c, m, v in zip(*ref.triplets())}
+    assert set(got) == set(want)
+    for k in want:
+        assert got[k] == pytest.approx(want[k], rel=1e-9, abs=1e-12), k
+
+
+def test_fused_sparse_and_dense_branches_identical(rng):
+    """The density cutoff is a performance knob: both inclusive branches
+    must emit identical bytes, or the cutoff would leak into outputs."""
+    from repro.core import pipeline as pl
+    sm, remap, routes, parent_pre, end, n = _random_tree_case(rng, 50)
+    dense_small, frac = pl.DENSE_SMALL, pl.DENSE_FRACTION
+    try:
+        pl.DENSE_SMALL, pl.DENSE_FRACTION = 1 << 30, 0.0   # always dense
+        a = fused_transform(sm, remap, routes, parent_pre, end)
+        pl.DENSE_SMALL, pl.DENSE_FRACTION = 0, 2.0         # always sparse
+        b = fused_transform(sm, remap, routes, parent_pre, end)
+    finally:
+        pl.DENSE_SMALL, pl.DENSE_FRACTION = dense_small, frac
+    assert a.encode() == b.encode()
+
+
+def test_fused_inclusive_values_simple_chain():
+    """Hand-checked case: root -> a -> b chain, exclusive 1/2/4."""
+    parent = np.array([-1, 0, 1])
+    end = np.array([3, 3, 3])
+    sm = SparseMetrics.from_triplets([0, 1, 2], [0, 0, 0], [1.0, 2.0, 4.0])
+    out = fused_transform(sm, np.arange(3), {}, parent, end)
+    incl = {int(c): v for c, m, v in zip(*out.triplets())
+            if m & INCLUSIVE_BIT}
+    assert incl == {0: 7.0, 1: 6.0, 2: 4.0}
+
+
+# ---------------------------------------------------------------------------
+# zero-copy loads
+# ---------------------------------------------------------------------------
+
+def test_unpack_array_returns_view_not_copy():
+    arr = np.arange(32, dtype=np.float64)
+    buf = b"pad!" + binio.pack_array(arr)
+    out, off = binio.unpack_array(buf, 4)
+    assert not out.flags.owndata          # aliases the buffer
+    assert not out.flags.writeable        # bytes-backed views stay read-only
+    np.testing.assert_array_equal(out, arr)
+    assert off == len(buf)
+
+
+def test_pack_array_into_matches_pack_array(rng):
+    for arr in (np.arange(7, dtype=np.uint16), np.empty(0, np.float64),
+                rng.uniform(size=(3, 4)), np.uint32(5) * np.ones((), np.uint32)):
+        ref = binio.pack_array(arr)
+        buf = bytearray(len(ref))
+        end = binio.pack_array_into(buf, 0, arr)
+        assert end == len(ref)
+        assert bytes(buf) == ref
+
+
+def test_profile_load_arrays_alias_the_mapping(tmp_path, rng):
+    prof = make_profile(rng)
+    p = tmp_path / "p.rprf"
+    prof.save(p)
+    loaded = MeasurementProfile.load(p)
+    for arr in (loaded.metrics.val, loaded.metrics.ctx, loaded.trace.time):
+        assert not arr.flags.owndata
+        assert not arr.flags.writeable
+    np.testing.assert_array_equal(loaded.metrics.val, prof.metrics.val)
+    np.testing.assert_array_equal(loaded.trace.ctx, prof.trace.ctx)
+
+
+def test_encode_into_matches_encode(rng):
+    sm = SparseMetrics.from_triplets(rng.integers(0, 9, 30),
+                                     rng.integers(0, 4, 30),
+                                     rng.uniform(1, 2, 30))
+    ref = sm.encode()
+    assert sm.encoded_nbytes() == len(ref)
+    buf = bytearray(len(ref))
+    assert sm.encode_into(buf, 0) == len(ref)
+    assert bytes(buf) == ref
+
+
+# ---------------------------------------------------------------------------
+# engine parity: pipelines x transports x executors, one database
+# ---------------------------------------------------------------------------
+
+def test_parity_fused_vs_legacy_all_executors(tmp_path, rng):
+    paths = _save_workload(tmp_path, rng)
+    digests = set()
+    results = []
+    for executor in ("serial", "threads", "processes", "ranks"):
+        for pipeline in ("fused", "legacy"):
+            cfg = AggregationConfig(executor=executor, n_workers=2,
+                                    n_threads=2, pipeline=pipeline)
+            res = StreamingAggregator(
+                tmp_path / f"{executor}_{pipeline}", cfg).run(paths)
+            results.append((executor, res))
+            # ranks PMS uses per-rank segment layout (query-identical);
+            # CMS + traces are byte-identical across all four
+            digests.add((_digest(res.cms_path), _digest(res.trace_path),
+                         res.n_contexts, res.n_values))
+    assert len(digests) == 1
+    stream_pms = {_digest(r.pms_path) for e, r in results if e != "ranks"}
+    assert len(stream_pms) == 1
+
+
+def test_parity_shm_vs_pickle_transport(tmp_path, rng):
+    paths = _save_workload(tmp_path, rng)
+    digests = set()
+    for transport, slab in [("pickle", 1 << 20), ("shm", 1 << 20),
+                            ("shm", 128)]:   # 128B forces one-shot fallback
+        cfg = AggregationConfig(executor="processes", n_workers=3,
+                                plane_transport=transport,
+                                shm_slab_bytes=slab)
+        res = StreamingAggregator(
+            tmp_path / f"t_{transport}_{slab}", cfg).run(paths)
+        digests.add((_digest(res.pms_path), _digest(res.cms_path),
+                     _digest(res.trace_path)))
+    assert len(digests) == 1
+
+
+def test_parity_with_lexical_routes_fused(tmp_path):
+    """Superposition routes through the fused kernel: identical across
+    executors and identical to the legacy pipeline."""
+    from tests.test_aggregate import _profile_with_structure
+    ppath = _profile_with_structure(tmp_path, fused=True)
+    digests = set()
+    for executor in ("serial", "threads", "processes"):
+        for pipeline in ("fused", "legacy"):
+            cfg = AggregationConfig(executor=executor, n_workers=2,
+                                    pipeline=pipeline)
+            res = StreamingAggregator(
+                tmp_path / f"lex_{executor}_{pipeline}", cfg).run([ppath])
+            digests.add((_digest(res.pms_path), _digest(res.cms_path)))
+    assert len(digests) == 1
+
+
+def test_sharded_sink_residency_bounded_by_window(tmp_path, rng):
+    """The sharded path now honors the bounded sink: out-of-order plane
+    residency (and the slab arena) stay within the window instead of
+    O(n_profiles)."""
+    paths = _save_workload(tmp_path, rng, n=12)
+    cfg = AggregationConfig(executor="processes", n_workers=3, sink_window=3)
+    res = StreamingAggregator(tmp_path / "bounded", cfg).run(paths)
+    assert res.timings["sink_peak"] <= 3
+    base = StreamingAggregator(
+        tmp_path / "base", AggregationConfig(executor="serial")).run(paths)
+    assert _digest(res.pms_path) == _digest(base.pms_path)
+    assert _digest(res.cms_path) == _digest(base.cms_path)
+
+
+def test_sharded_unbounded_pickle_feed_still_works(tmp_path, rng):
+    """sink_window=0 ('unbounded') with the pickle transport keeps the
+    historical unthrottled feed — no slab scarcity, no credit gate."""
+    paths = _save_workload(tmp_path, rng, n=6)
+    cfg = AggregationConfig(executor="processes", n_workers=2, sink_window=0,
+                            plane_transport="pickle")
+    res = StreamingAggregator(tmp_path / "unb", cfg).run(paths)
+    base = StreamingAggregator(
+        tmp_path / "unb_base", AggregationConfig(executor="serial")).run(paths)
+    assert _digest(res.pms_path) == _digest(base.pms_path)
+    assert _digest(res.cms_path) == _digest(base.cms_path)
+
+
+def test_unknown_pipeline_and_transport_are_value_errors(tmp_path):
+    with pytest.raises(ValueError, match="pipeline"):
+        StreamingAggregator(tmp_path / "a", AggregationConfig(
+            pipeline="warp")).run([])
+    with pytest.raises(ValueError, match="plane_transport"):
+        StreamingAggregator(tmp_path / "b", AggregationConfig(
+            plane_transport="carrier-pigeon")).run([])
+
+
+# ---------------------------------------------------------------------------
+# slab arena + worker-death liveness
+# ---------------------------------------------------------------------------
+
+def test_slab_arena_acquire_release_cycle():
+    arena = SlabArena(2, 1024)
+    try:
+        a = arena.acquire()
+        b = arena.acquire()
+        assert a != b
+        with pytest.raises(RuntimeError, match="exhausted"):
+            arena.acquire()
+        arena.release(a)
+        assert arena.acquire() == a
+        # worker-visible roundtrip through an attach
+        arena.view(b)[:4] = b"ping"
+        seg = attach(b)
+        assert bytes(seg.buf[:4]) == b"ping"
+        seg.close()
+    finally:
+        arena.close()
+    arena.close()  # idempotent
+
+
+def test_sections_layout_is_aligned():
+    offs, total = sections_layout([13, 0, 7, 8])
+    assert offs == [0, 16, 16, 24]
+    assert total == 32
+    assert all(o % 8 == 0 for o in offs)
+
+
+def _kill_self(task):
+    os.kill(os.getpid(), signal.SIGKILL)
+
+
+def test_killed_worker_raises_not_hangs():
+    """SIGKILL mid-task must surface as BrokenProcessPool-style failure in
+    the parent, not a silent respawn + eternal hang (the mp.Pool failure
+    mode this runtime replaced)."""
+    ex = get_executor("processes", 2)
+    t0 = time.monotonic()
+    with pytest.raises(Exception):
+        list(ex.map_unordered(_kill_self, [0, 1, 2]))
+    assert time.monotonic() - t0 < 60
+
+
+_KILL_MARKER = "prof002"
+
+
+def _kill_on_marker(task):
+    from repro.core.aggregate import _phase2_profile_worker
+    if _KILL_MARKER in task[0]:
+        os.kill(os.getpid(), signal.SIGKILL)
+    return _phase2_profile_worker(task)
+
+
+@pytest.mark.skipif(sys.platform != "linux", reason="fork start method")
+def test_killed_worker_mid_slab_raises_and_cleans_up(tmp_path, rng,
+                                                     monkeypatch):
+    """A worker SIGKILLed while owning a slab: the parent must raise (not
+    hang waiting on the lost plane) and unlink the whole arena."""
+    import repro.core.aggregate as agg_mod
+    monkeypatch.setattr(agg_mod, "_phase2_profile_worker", _kill_on_marker)
+    paths = _save_workload(tmp_path, rng, n=6)
+    before = {f for f in os.listdir("/dev/shm")} if os.path.isdir("/dev/shm") \
+        else set()
+    cfg = AggregationConfig(executor="processes", n_workers=2,
+                            plane_transport="shm")
+    t0 = time.monotonic()
+    with pytest.raises(Exception):
+        StreamingAggregator(tmp_path / "killed", cfg).run(paths)
+    assert time.monotonic() - t0 < 60
+    if os.path.isdir("/dev/shm"):
+        leaked = {f for f in os.listdir("/dev/shm")
+                  if f.startswith("psm_")} - before
+        assert not leaked
+
+
+def test_map_throttled_respects_credits():
+    ex = get_executor("processes", 2)
+    pulled = []
+
+    def tasks():
+        for i in range(6):
+            pulled.append(i)
+            yield i
+
+    credit = {"n": 2}
+    out = []
+    for i, r in ex.map_throttled(_echo, tasks(),
+                                 credits=lambda: credit["n"]):
+        # at any point, no more tasks were pulled than credits granted
+        assert len(pulled) <= credit["n"]
+        out.append((i, r))
+        credit["n"] += 1   # consuming grants another credit
+    assert sorted(out) == [(i, i) for i in range(6)]
+
+
+def _echo(x):
+    return x
+
+
+def test_map_throttled_zero_credit_stall_is_an_error():
+    ex = get_executor("processes", 2)
+    with pytest.raises(RuntimeError, match="stalled"):
+        list(ex.map_throttled(_echo, [1, 2], credits=lambda: 0))
+
+
+def test_map_throttled_discards_unyielded_results():
+    """An aborting caller must not strand completed results: whatever
+    finished but was never yielded goes through on_discard (the hook that
+    unlinks one-shot shm segments on the sharded abort path)."""
+    ex = get_executor("processes", 2)
+    discarded = []
+    gen = ex.map_throttled(_echo, range(4), credits=lambda: 10,
+                           on_discard=discarded.append)
+    first = next(gen)
+    time.sleep(0.5)          # let the remaining instant tasks complete
+    gen.close()              # caller aborts mid-iteration
+    assert first not in discarded
+    assert discarded         # the finished-but-unyielded results arrived
+    assert all(isinstance(d, tuple) and d[0] == d[1] for d in discarded)
