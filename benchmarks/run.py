@@ -27,7 +27,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (agg_throughput, fig6_breakdown, kernels_bench,
-                            query_latency, table1_measurement,
+                            query_latency, serve_load, table1_measurement,
                             table2_analysis, table4_agg_time, table5_glb)
     suites = {
         "table1": table1_measurement.run,
@@ -38,6 +38,7 @@ def main() -> None:
         "query": query_latency.run,
         "kernels": kernels_bench.run,
         "agg": agg_throughput.run,
+        "serve": serve_load.run,
     }
     print("name,us_per_call,derived")
     for name, fn in suites.items():

@@ -1,0 +1,522 @@
+"""Closed-loop load generator for the query service (emits BENCH_serve.json).
+
+Measures the three serving claims of the subsystem, each against its
+baseline:
+
+* **batched vs unbatched** — a concurrent client pool (each client
+  posting dashboard-shaped calls of several queries) drives the
+  :class:`BatchScheduler` with plane-locality windows on
+  (``max_batch``-sized) vs one-request-at-a-time (``max_batch=1``), same
+  single serving worker, same byte-starved cache.  The workload is the
+  exascale serving regime the paper's stores exist for: profile planes
+  ~MBs, plane working set >> the decoded-plane LRU, so *arrival order
+  decides the decode count* — sorted windows decode each hot plane once
+  per window while the one-at-a-time baseline re-decodes on every
+  interleaved touch.  Reports throughput, client p50/p99, and the decode
+  counters that expose the mechanism; checks results stay byte-identical
+  to serial ``QueryServer.submit``.
+* **warm vs cold start** — first-touch latency of hot-plane queries on a
+  fresh server vs one preloaded by :func:`repro.serve.warm.warm_cache`.
+* **overload** — a burst beyond the admission bound must be *rejected*
+  (fast :class:`Overloaded` / HTTP 429), never queued without bound.
+
+``--http`` runs a mixed-op pool through the real HTTP transport
+(:class:`QueryHTTPServer` + ``QueryClient``), including a 429 probe and a
+health check; ``--check`` asserts the acceptance bars.
+
+    PYTHONPATH=src python -m benchmarks.serve_load [--tiny|--smoke] \
+        [--http] [--check] [--out BENCH_serve.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.workloads import build_app_tree, generate_timing_workload
+from repro.core.aggregate import AggregationConfig, StreamingAggregator
+from repro.core.sparse import MeasurementProfile, SparseMetrics, Trace
+from repro.query import Database
+from repro.serve.engine import QueryError, QueryRequest, QueryServer
+from repro.serve.scheduler import BatchScheduler, Overloaded
+from repro.serve.warm import warm_cache
+
+
+# ---------------------------------------------------------------------------
+# workloads
+# ---------------------------------------------------------------------------
+
+def build_database(td: str, tiny: bool) -> str:
+    """Mixed-op database (stripes/values/windows) for the HTTP + warm
+    phases: many profiles, moderate planes."""
+    n_profiles = 12 if tiny else 48
+    paths, _, _ = generate_timing_workload(
+        td + "/in", n_profiles=n_profiles, n_ctx=800 if tiny else 2500,
+        n_metrics=12, trace_len=400, n_private=60 if tiny else 250)
+    StreamingAggregator(
+        td + "/db", AggregationConfig(executor="threads", n_workers=4)
+    ).run(paths)
+    return td + "/db"
+
+
+def build_heavy_database(td: str, tiny: bool) -> str:
+    """Heavy-plane database for the batching phase: few profiles whose PMS
+    planes are MB-scale, so plane decode dominates per-request cost (the
+    shape an exascale run serves — dense-ish profiles over a large CCT)."""
+    n_profiles = 8 if tiny else 12
+    n_ctx = 8000 if tiny else 16000
+    n_metrics, density = 8, 0.8
+    rng = np.random.default_rng(7)
+    shared = build_app_tree(n_ctx, rng)
+    os.makedirs(td + "/hin", exist_ok=True)
+    paths = []
+    for p in range(n_profiles):
+        live = rng.choice(len(shared), size=int(len(shared) * density),
+                          replace=False)
+        ctxs = np.repeat(live, n_metrics)
+        mids = np.tile(np.arange(n_metrics), live.size)
+        vals = rng.exponential(1.0, ctxs.size)
+        prof = MeasurementProfile(
+            environment={"app": "serve-heavy", "n_metrics": n_metrics},
+            identity={"rank": p, "stream": 0, "kind": "cpu"},
+            file_paths=[], tree=shared, trace=Trace.empty(),
+            metrics=SparseMetrics.from_triplets(ctxs, mids, vals))
+        path = os.path.join(td, "hin", f"h{p:03d}.rprf")
+        prof.save(path)
+        paths.append(path)
+    StreamingAggregator(
+        td + "/hdb", AggregationConfig(executor="threads", n_workers=4,
+                                       write_cms=False, write_traces=False)
+    ).run(paths)
+    return td + "/hdb"
+
+
+def request_mix(db: Database, n: int, seed: int = 0) -> list[QueryRequest]:
+    """The standard interactive-browser mix: stripe-heavy, with a hot set.
+
+    Contexts are drawn zipf-ish over the population-ranked hot list, so
+    concurrent clients repeatedly hit the same planes out of order — the
+    access pattern locality-sorted windows exist to fix.
+    """
+    rng = np.random.default_rng(seed)
+    ctx_heat = np.zeros(db.n_contexts)
+    np.add.at(ctx_heat, db.stats["ctx"].astype(np.int64),
+              db.stats["count"].astype(np.float64)
+              if "count" in db.stats else 1.0)
+    hot = np.argsort(-ctx_heat)[:max(32, db.n_contexts // 20)]
+    by_ctx: dict[int, int] = {}
+    for c, m in zip(db.stats["ctx"], db.stats["mid"]):
+        by_ctx.setdefault(int(c), int(m))
+
+    reqs = []
+    for _ in range(n):
+        r = rng.random()
+        ctx = int(hot[min(int(rng.zipf(1.6)) - 1, hot.size - 1)])
+        metric = by_ctx.get(ctx, 0)
+        if r < 0.60:
+            reqs.append(QueryRequest(op="stripe", ctx=ctx, metric=metric))
+        elif r < 0.75:
+            reqs.append(QueryRequest(
+                op="profile", pid=int(rng.integers(db.n_profiles))))
+        elif r < 0.90:
+            reqs.append(QueryRequest(
+                op="value", pid=int(rng.integers(db.n_profiles)),
+                ctx=ctx, metric=metric))
+        elif r < 0.96:
+            reqs.append(QueryRequest(op="topk", metric=0, inclusive=True,
+                                     k=10))
+        else:
+            reqs.append(QueryRequest(
+                op="window", pid=int(rng.integers(db.n_profiles)),
+                t0=0.0, t1=0.5))
+    return reqs
+
+
+def results_equal(a, b) -> bool:
+    if isinstance(a, QueryError) or isinstance(b, QueryError):
+        return type(a) is type(b)
+    if hasattr(a, "val"):                      # SparseMetrics plane
+        return (np.array_equal(a.ctx, b.ctx) and np.array_equal(a.mid, b.mid)
+                and np.array_equal(a.val, b.val))
+    if hasattr(a, "time"):                     # Trace window
+        return (np.array_equal(a.time, b.time)
+                and np.array_equal(a.ctx, b.ctx))
+    if isinstance(a, tuple):                   # stripe
+        return (np.array_equal(a[0], b[0]) and np.array_equal(a[1], b[1]))
+    if isinstance(a, list):                    # topk rows
+        return a == b
+    return a == b
+
+
+# ---------------------------------------------------------------------------
+# closed-loop client pool over the scheduler
+# ---------------------------------------------------------------------------
+
+def _drive_pool(shards: list[list[list[QueryRequest]]], issue) -> dict:
+    """Closed-loop client pool: client ``k`` plays ``shards[k]`` — a list
+    of *calls* (each a small list of requests, the dashboard shape) —
+    waiting for each call's results before posting the next.  Returns
+    request throughput, per-call latency percentiles, and the results."""
+    n_clients = len(shards)
+    lat: list[list[float]] = [[] for _ in range(n_clients)]
+    out: list[list] = [[] for _ in range(n_clients)]
+    errors = [0] * n_clients
+    start = threading.Barrier(n_clients + 1)
+
+    def client(k: int):
+        start.wait()
+        for call in shards[k]:
+            t0 = time.perf_counter()
+            try:
+                res = issue(call)
+            except Exception:       # noqa: BLE001 - count, keep driving
+                errors[k] += 1
+                res = [None] * len(call)
+            lat[k].append(time.perf_counter() - t0)
+            out[k].extend(res)
+
+    threads = [threading.Thread(target=client, args=(k,))
+               for k in range(n_clients)]
+    for t in threads:
+        t.start()
+    start.wait()
+    t0 = time.perf_counter()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    flat = np.array([x for ls in lat for x in ls])
+    n = sum(len(call) for s in shards for call in s)
+    return {"n": n, "calls": int(flat.size), "wall_s": round(wall, 4),
+            "throughput_rps": round(n / wall, 1),
+            "call_p50_ms": round(float(np.percentile(flat, 50)) * 1e3, 3),
+            "call_p99_ms": round(float(np.percentile(flat, 99)) * 1e3, 3),
+            "errors": int(sum(errors)), "results": out}
+
+
+def run_scheduled(db_dir: str, shards, *, max_batch: int,
+                  cache_bytes: int, n_workers: int = 1) -> dict:
+    with Database(db_dir, cache_bytes=cache_bytes) as db:
+        server = QueryServer(db)
+        with BatchScheduler(server, max_batch=max_batch, max_wait_ms=0.0,
+                            max_queue=8192, n_workers=n_workers) as sched:
+
+            def issue(call):
+                return [f.result(60) for f in sched.submit_many(call)]
+
+            rep = _drive_pool(shards, issue)
+            rep["plane_decodes"] = (db.counters["pms_plane_loads"]
+                                    + db.counters["cms_plane_loads"]
+                                    + db.counters["cms_stripe_reads"])
+            rep["cache"] = db.cache_stats()
+            rep["mean_batch"] = round(
+                sched.metrics()["mean_batch_size"], 2)
+    return rep
+
+
+# ---------------------------------------------------------------------------
+# phases
+# ---------------------------------------------------------------------------
+
+def plane_mix(n: int, n_profiles: int, seed: int = 1) -> list[QueryRequest]:
+    """The profile-browser mix for the heavy database: zipf-hot profile
+    planes plus a sprinkle of summary-only top-k."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for _ in range(n):
+        pid = min(int(rng.zipf(1.5)) - 1, n_profiles - 1)
+        if rng.random() < 0.85:
+            reqs.append(QueryRequest(op="profile", pid=pid))
+        else:
+            reqs.append(QueryRequest(op="topk", metric=0, inclusive=True,
+                                     k=10))
+    return reqs
+
+
+def phase_batched_vs_unbatched(heavy_db: str, *, tiny: bool, out) -> dict:
+    # many more clients than serving workers — the shape a service in
+    # front of "millions of users" sees — each posting dashboard calls
+    n_clients = 12 if tiny else 16
+    call_size, n_calls = 8, 4 if tiny else 8
+    with Database(heavy_db) as db:
+        n_profiles = db.n_profiles
+        plane_bytes = int(db._pms.index[:, 1].max())
+    reqs = plane_mix(n_clients * n_calls * call_size, n_profiles)
+    it = iter(reqs)
+    shards = [[[next(it) for _ in range(call_size)] for _ in range(n_calls)]
+              for _ in range(n_clients)]
+    # byte-starve the cache to ~1 decoded plane: the working set is the
+    # whole profile set, so arrival order decides how often planes decode
+    cache_bytes = int(plane_bytes * 1.3)
+
+    with Database(heavy_db, cache_bytes=cache_bytes) as ref_db:
+        ref_srv = QueryServer(ref_db)
+        reference = [ref_srv.serve_one(r)
+                     for shard in shards for call in shard for r in call]
+
+    unbatched = run_scheduled(heavy_db, shards, max_batch=1,
+                              cache_bytes=cache_bytes)
+    batched = run_scheduled(heavy_db, shards, max_batch=128,
+                            cache_bytes=cache_bytes)
+
+    # pop results out of both reports BEFORE the (short-circuiting)
+    # correctness scan: numpy objects must never reach the JSON report
+    flat = [[r for cl in rep.pop("results") for r in cl]
+            for rep in (unbatched, batched)]
+    correct = all(results_equal(a, b)
+                  for got in flat for a, b in zip(reference, got))
+    speedup = batched["throughput_rps"] / max(unbatched["throughput_rps"], 1e-9)
+    out(f"serve.unbatched_rps,{unbatched['throughput_rps']:.1f},"
+        f"p99_call={unbatched['call_p99_ms']}ms "
+        f"decodes={unbatched['plane_decodes']}")
+    out(f"serve.batched_rps,{batched['throughput_rps']:.1f},"
+        f"p99_call={batched['call_p99_ms']}ms "
+        f"decodes={batched['plane_decodes']} "
+        f"mean_batch={batched['mean_batch']}")
+    out(f"serve.batching_speedup,{speedup:.2f},correct={correct}")
+    return {"unbatched": unbatched, "batched": batched,
+            "speedup": round(speedup, 3), "correct": bool(correct),
+            "clients": n_clients, "requests": len(reqs),
+            "plane_bytes": plane_bytes, "cache_bytes": cache_bytes}
+
+
+def request_mix_db(db_dir: str, n: int) -> list[QueryRequest]:
+    with Database(db_dir) as db:
+        return request_mix(db, n)
+
+
+def phase_warm_vs_cold(db_dir: str, *, tiny: bool, out) -> dict:
+    n_hot = 16 if tiny else 40
+    with Database(db_dir) as db:
+        ctx_heat = np.zeros(db.n_contexts)
+        np.add.at(ctx_heat, db.stats["ctx"].astype(np.int64), 1.0)
+        hot = np.argsort(-ctx_heat)[:n_hot]
+        by_ctx = {}
+        for c, m in zip(db.stats["ctx"], db.stats["mid"]):
+            by_ctx.setdefault(int(c), int(m))
+        probes = ([QueryRequest(op="stripe", ctx=int(c),
+                                metric=by_ctx.get(int(c), 0)) for c in hot]
+                  + [QueryRequest(op="profile", pid=p)
+                     for p in range(min(db.n_profiles, n_hot))])
+
+    def first_touch_ms(warm: bool) -> list[float]:
+        with Database(db_dir, cache_bytes=64 << 20) as db:
+            report = warm_cache(db) if warm else None
+            srv = QueryServer(db)
+            lat = []
+            for req in probes:
+                t0 = time.perf_counter()
+                srv.submit(req)
+                lat.append((time.perf_counter() - t0) * 1e3)
+            if warm:
+                assert report["loaded"] > 0
+            return lat
+
+    cold = first_touch_ms(False)
+    warm = first_touch_ms(True)
+    rep = {"cold_p99_ms": round(float(np.percentile(cold, 99)), 3),
+           "warm_p99_ms": round(float(np.percentile(warm, 99)), 3),
+           "cold_p50_ms": round(float(np.percentile(cold, 50)), 3),
+           "warm_p50_ms": round(float(np.percentile(warm, 50)), 3),
+           "probes": len(probes)}
+    out(f"serve.cold_p99,{rep['cold_p99_ms'] * 1e3:.1f},first-touch")
+    out(f"serve.warm_p99,{rep['warm_p99_ms'] * 1e3:.1f},"
+        f"speedup={rep['cold_p99_ms'] / max(rep['warm_p99_ms'], 1e-9):.1f}x")
+    return rep
+
+
+class _SlowServer(QueryServer):
+    """QueryServer with a stallable op — makes overload deterministic."""
+
+    def submit(self, req):
+        if req.op == "sleep":
+            time.sleep(req.t0)
+            return 0.0
+        return super().submit(req)
+
+
+def phase_overload(db_dir: str, *, out) -> dict:
+    """Admission control under a burst: reject fast, serve the admitted."""
+    max_queue = 8
+    with Database(db_dir) as db:
+        with BatchScheduler(_SlowServer(db), max_batch=4, max_wait_ms=0.5,
+                            max_queue=max_queue, n_workers=2) as sched:
+            # occupy both workers, then fill the queue to the brim
+            stall = []
+            for _ in range(2 + max_queue):
+                try:
+                    stall.append(sched.submit(
+                        QueryRequest(op="sleep", t0=0.25)))
+                except Overloaded:
+                    break  # already brim-full: workers were slower than us
+            time.sleep(0.05)  # let workers pick up their windows
+            admitted, rejected, depths = [], 0, []
+            for _ in range(64):
+                try:
+                    admitted.append(sched.submit(
+                        QueryRequest(op="topk", metric=0, k=3)))
+                except Overloaded as e:
+                    rejected += 1
+                    assert e.retry_after_s > 0
+                depths.append(sched.depth())
+            served = sum(not isinstance(f.result(30), QueryError)
+                         for f in admitted + stall)
+    rep = {"burst": 64, "rejected": rejected, "admitted": len(admitted),
+           "served": served, "max_depth_seen": max(depths),
+           "max_queue": max_queue}
+    out(f"serve.overload_rejected,{rejected},of_burst=64 "
+        f"max_depth={max(depths)}<= {max_queue}")
+    return rep
+
+
+def _probe_http_429(db_dir: str) -> bool:
+    """Deterministic 429: hold the single worker with a sleep op, fill the
+    one-slot admission queue, then watch the next call bounce."""
+    from repro.serve.client import QueryClient, ServerOverloaded
+    from repro.serve.http import QueryHTTPServer
+    with Database(db_dir) as db:
+        with QueryHTTPServer(db, port=0, max_queue=1, n_workers=1,
+                             warm_bytes=0) as srv:
+            srv.scheduler.server = _SlowServer(db)
+            host, port = srv.address
+
+            def post(op, t0=0.0):
+                with QueryClient(host, port) as c:
+                    c.batch([QueryRequest(op=op, metric=0, k=1, t0=t0)])
+
+            bg = [threading.Thread(target=post, args=("sleep", 0.6)),
+                  threading.Thread(target=post, args=("topk",))]
+            bg[0].start()
+            time.sleep(0.15)          # worker now inside the sleep window
+            bg[1].start()
+            time.sleep(0.15)          # queue now at its bound
+            try:
+                with QueryClient(host, port) as cl:
+                    cl.batch([QueryRequest(op="topk", metric=0, k=1)])
+                return False
+            except ServerOverloaded as e:
+                return e.retry_after_s > 0
+            finally:
+                for t in bg:
+                    t.join(10)
+
+
+def phase_http(db_dir: str, *, tiny: bool, out) -> dict:
+    """The same pool through the real transport, plus health + 429 probe."""
+    from repro.serve.client import QueryClient
+    from repro.serve.http import QueryHTTPServer
+
+    n_clients = 4 if tiny else 8
+    call_size, n_calls = 5, 5 if tiny else 12
+    reqs = request_mix_db(db_dir, n_clients * n_calls * call_size)
+    it = iter(reqs)
+    shards = [[[next(it) for _ in range(call_size)] for _ in range(n_calls)]
+              for _ in range(n_clients)]
+
+    with Database(db_dir, cache_bytes=8 << 20) as db:
+        with QueryHTTPServer(db, port=0, max_batch=16,
+                             max_queue=1024, warm_bytes=None) as srv:
+            host, port = srv.address
+            probe = QueryClient(host, port)
+            health = probe.health()
+            if health.get("status") != "ok":
+                raise RuntimeError(f"health check failed: {health}")
+
+            lat: list[float] = []
+            lat_lock = threading.Lock()
+            t0 = time.perf_counter()
+
+            def client_loop(k: int):
+                with QueryClient(host, port) as cl:
+                    for call in shards[k]:
+                        s = time.perf_counter()
+                        cl.batch(call)
+                        dt = time.perf_counter() - s
+                        with lat_lock:
+                            lat.append(dt)
+
+            threads = [threading.Thread(target=client_loop, args=(k,))
+                       for k in range(n_clients)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            wall = time.perf_counter() - t0
+            metrics = probe.metrics()
+
+            saw_429 = _probe_http_429(db_dir)
+            probe.close()
+
+    arr = np.array(lat)
+    rep = {"n": len(reqs), "calls": int(arr.size),
+           "throughput_rps": round(len(reqs) / wall, 1),
+           "call_p50_ms": round(float(np.percentile(arr, 50)) * 1e3, 3),
+           "call_p99_ms": round(float(np.percentile(arr, 99)) * 1e3, 3),
+           "health": health["status"], "saw_429": bool(saw_429),
+           "mean_batch": metrics["scheduler"]["mean_batch_size"],
+           "cache_hits": metrics["cache"]["hits"]}
+    out(f"serve.http_rps,{rep['throughput_rps']:.1f},"
+        f"p99_call={rep['call_p99_ms']}ms 429_probe={saw_429}")
+    return rep
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+
+def run(out=print, tiny: bool = False, check: bool = False,
+        http: bool = False, out_path: str | None = None) -> dict:
+    report: dict = {"workload": "tiny" if tiny else "standard"}
+    with tempfile.TemporaryDirectory() as td:
+        heavy_db = build_heavy_database(td, tiny)
+        report["batching"] = phase_batched_vs_unbatched(heavy_db, tiny=tiny,
+                                                        out=out)
+        db_dir = build_database(td, tiny)
+        report["warm"] = phase_warm_vs_cold(db_dir, tiny=tiny, out=out)
+        report["overload"] = phase_overload(db_dir, out=out)
+        if http:
+            report["http"] = phase_http(db_dir, tiny=tiny, out=out)
+
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(report, f, indent=2)
+        out(f"serve.report,0,{out_path}")
+
+    if check:
+        b = report["batching"]
+        assert b["correct"], "batched/unbatched results diverged from serial"
+        assert b["speedup"] >= 1.5, \
+            f"batching speedup {b['speedup']:.2f} < 1.5x"
+        w = report["warm"]
+        assert w["warm_p99_ms"] < w["cold_p99_ms"], \
+            f"warm p99 {w['warm_p99_ms']} !< cold {w['cold_p99_ms']}"
+        o = report["overload"]
+        assert o["rejected"] > 0, "burst was never rejected"
+        assert o["max_depth_seen"] <= o["max_queue"], "queue grew past bound"
+        if http:
+            assert report["http"]["saw_429"], "HTTP 429 probe failed"
+        out("serve.check,0,all acceptance bars hold")
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true", help="CI-sized workload")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny + HTTP transport + --check")
+    ap.add_argument("--http", action="store_true",
+                    help="also drive the real HTTP transport")
+    ap.add_argument("--check", action="store_true",
+                    help="assert the acceptance bars")
+    ap.add_argument("--out", default=None, help="write BENCH_serve.json here")
+    args = ap.parse_args()
+    run(tiny=args.tiny or args.smoke, check=args.check or args.smoke,
+        http=args.http or args.smoke, out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

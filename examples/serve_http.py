@@ -1,0 +1,71 @@
+"""Query service over HTTP, end to end against a fixture database.
+
+Builds a small analysis database, starts the :class:`QueryHTTPServer`
+(warming the plane cache from summary statistics first), then talks to it
+through the typed :class:`QueryClient` the way an analysis dashboard
+would: health check, a batched dashboard call, single-op conveniences,
+and a look at the /metrics counters.
+
+    PYTHONPATH=src python examples/serve_http.py
+"""
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.workloads import generate_timing_workload
+from repro.core.aggregate import AggregationConfig, StreamingAggregator
+from repro.query import Database
+from repro.serve import QueryClient, QueryHTTPServer, QueryRequest
+
+
+def main():
+    with tempfile.TemporaryDirectory() as td:
+        paths, _, _ = generate_timing_workload(td + "/in", n_profiles=16,
+                                               n_private=80)
+        StreamingAggregator(
+            td + "/db", AggregationConfig(executor="threads", n_workers=4)
+        ).run(paths)
+
+        with Database(td + "/db", cache_bytes=32 << 20) as db, \
+                QueryHTTPServer(db, port=0, max_batch=16, max_queue=256,
+                                warm_bytes=None) as srv:  # None = default budget
+            host, port = srv.address
+            print(f"serving {db.n_profiles} profiles / {db.n_contexts} "
+                  f"contexts at {srv.url}")
+            print(f"warm start: {srv.warm_report}")
+
+            with QueryClient(host, port) as cl:
+                print(f"health: {cl.health()}")
+
+                print("\n== top-5 hot paths over HTTP")
+                for hp in cl.topk(0, k=5):
+                    print(f"  {hp.value:12.3f}  {hp.path}")
+
+                print("\n== a dashboard call: one POST, many queries")
+                ctx = int(db.stats["ctx"][0])
+                mid = int(db.stats["mid"][0])
+                results = cl.batch([
+                    QueryRequest(op="profile", pid=0),
+                    QueryRequest(op="stripe", ctx=ctx, metric=mid),
+                    QueryRequest(op="value", pid=1, ctx=ctx, metric=mid),
+                    QueryRequest(op="window", pid=0, t0=0.0, t1=30.0),
+                ])
+                sm, (prof, vals), v, win = results
+                print(f"  profile 0: {sm.n_values} values")
+                print(f"  stripe(ctx={ctx}, m={mid}): {prof.size} profiles")
+                print(f"  value(pid=1): {v:.3f}")
+                print(f"  window[0,30): {win.time.size} samples")
+
+                m = cl.metrics()
+                print(f"\ncache: {m['cache']}")
+                print(f"scheduler: completed={m['scheduler']['completed']} "
+                      f"batches={m['scheduler']['batches']} "
+                      f"mean_batch={m['scheduler']['mean_batch_size']:.2f}")
+    print("serve_http OK")
+
+
+if __name__ == "__main__":
+    main()

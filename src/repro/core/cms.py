@@ -67,6 +67,42 @@ def stripe_from_plane(plane, mid: int) -> tuple[np.ndarray, np.ndarray]:
     return prof[a:b], vals[a:b]
 
 
+def stripe_from_buffer(buf, off: int, mid: int
+                       ) -> tuple[np.ndarray, np.ndarray] | None:
+    """Predicate-pushdown stripe read: decode ONE metric's (profiles,
+    values) slice from an encoded plane at ``buf[off:]`` without
+    materializing the other metrics.
+
+    Only the tiny ``mids``/``mstart`` header arrays are parsed; the metric
+    is binary-searched, and the matching sub-ranges of the ``prof`` and
+    ``vals`` blocks are returned as zero-copy views over ``buf`` (the page
+    cache, when ``buf`` is an mmap).  Returns ``None`` when the plane does
+    not carry ``mid`` — the caller learns the predicate failed for the
+    price of the header alone, never the plane.
+    """
+    mids, pos = binio.unpack_array(buf, off)
+    mstart, pos = binio.unpack_array(buf, pos)
+    j = int(np.searchsorted(mids, mid))
+    if j >= mids.size or int(mids[j]) != int(mid):
+        return None
+    a, b = int(mstart[j]), int(mstart[j + 1])
+    x = int(mstart[-1])
+    # prof block (u32[x]) starts at pos; vals block (f64[x]) right after.
+    # Each 1-D binio array block is a 13-byte header + payload (see
+    # plane_nbytes); slice the [a, b) sub-range of each payload directly.
+    # The dtype codes guard the hardcoded layout: a format drift must fail
+    # loudly here, never mis-slice silently.
+    if bytes(buf[pos:pos + 4]) != b"u32 ":
+        raise ValueError("CMS plane layout drift: prof block is not u32")
+    prof = np.frombuffer(buf, np.uint32, count=b - a, offset=pos + 13 + 4 * a)
+    vals_block = pos + 13 + 4 * x
+    if bytes(buf[vals_block:vals_block + 4]) != b"f64 ":
+        raise ValueError("CMS plane layout drift: vals block is not f64")
+    vals = np.frombuffer(buf, np.float64, count=b - a,
+                         offset=vals_block + 13 + 8 * a)
+    return prof, vals
+
+
 # ---------------------------------------------------------------------------
 # pass 1: size census over the PMS planes
 # ---------------------------------------------------------------------------

@@ -1,22 +1,93 @@
-"""Serving launcher: batched generation with the ServeEngine.
+"""Serving launcher: batched generation, and the query service over HTTP.
+
+Batched LLM generation (the original mode)::
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
         --requests 6 --prompt-len 16 --new-tokens 8
+
+Query service over a completed analysis database::
+
+    PYTHONPATH=src python -m repro.launch.serve query-server runs/db \
+        --port 8422 --max-batch 16 --max-wait-ms 2 --max-queue 256 \
+        --cache-mb 64 [--warm-mb 32 | --no-warm] [--no-batching]
+
+The query server prints one JSON line with its URL and warming report,
+then blocks until SIGINT.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import sys
 import time
 
 import numpy as np
 
-from repro.configs.base import get_arch, reduced
-from repro.models import params as PD
-from repro.models.api import build_model
-from repro.serve.engine import Request, ServeEngine
+
+def _query_server_main(argv):
+    from repro.query import Database
+    from repro.serve.http import QueryHTTPServer
+
+    ap = argparse.ArgumentParser(prog="repro.launch.serve query-server")
+    ap.add_argument("db", help="database directory (db.pms [+ db.cms/db.trc])")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8422,
+                    help="0 picks a free port (printed on startup)")
+    ap.add_argument("--max-batch", type=int, default=16,
+                    help="micro-batch window size cap")
+    ap.add_argument("--max-wait-ms", type=float, default=0.0,
+                    help="max stall collecting a window after its first "
+                         "request arrives (default 0: opportunistic — "
+                         "serve what is queued, never stall an idle "
+                         "worker; small positive values trade latency "
+                         "for fuller windows under sparse bursty traffic)")
+    ap.add_argument("--max-queue", type=int, default=256,
+                    help="admission queue bound; overflow answers 429")
+    ap.add_argument("--workers", type=int, default=4,
+                    help="window-serving workers on the runtime executor")
+    ap.add_argument("--executor", default="threads",
+                    choices=["threads", "serial"],
+                    help="runtime backend for the serving loops")
+    ap.add_argument("--cache-mb", type=int, default=64,
+                    help="decoded-plane LRU budget")
+    ap.add_argument("--warm-mb", type=int, default=None,
+                    help="startup warming budget (default: 90%% of cache)")
+    ap.add_argument("--no-warm", action="store_true",
+                    help="skip startup cache warming")
+    ap.add_argument("--no-batching", action="store_true",
+                    help="serve each HTTP call directly (baseline mode)")
+    ap.add_argument("--timeout-s", type=float, default=30.0,
+                    help="default per-request deadline")
+    args = ap.parse_args(argv)
+
+    warm_bytes = (0 if args.no_warm
+                  else None if args.warm_mb is None else args.warm_mb << 20)
+    with Database(args.db, cache_bytes=args.cache_mb << 20) as db, \
+            QueryHTTPServer(db, host=args.host, port=args.port,
+                            batching=not args.no_batching,
+                            max_batch=args.max_batch,
+                            max_wait_ms=args.max_wait_ms,
+                            max_queue=args.max_queue,
+                            executor=args.executor, n_workers=args.workers,
+                            default_timeout_s=args.timeout_s,
+                            warm_bytes=warm_bytes) as srv:
+        print(json.dumps({"url": srv.url, "batching": srv.batching,
+                          "profiles": db.n_profiles,
+                          "contexts": db.n_contexts,
+                          "warm": srv.warm_report}), flush=True)
+        try:
+            while True:
+                time.sleep(3600)
+        except KeyboardInterrupt:
+            print("shutting down", file=sys.stderr)
 
 
-def main():
+def _generate_main(argv):
+    from repro.configs.base import get_arch, reduced
+    from repro.models import params as PD
+    from repro.models.api import build_model
+    from repro.serve.engine import Request, ServeEngine
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
@@ -24,7 +95,7 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--max-batch", type=int, default=4)
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
     if args.reduced:
@@ -47,6 +118,14 @@ def main():
           f"in {dt:.2f}s ({total_tokens/dt:.1f} tok/s incl. compile)")
     for i, o in enumerate(outs[:3]):
         print(f"req{i}: {o.tolist()}")
+
+
+def main(argv=None):
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if argv and argv[0] == "query-server":
+        _query_server_main(argv[1:])
+    else:
+        _generate_main(argv)
 
 
 if __name__ == "__main__":

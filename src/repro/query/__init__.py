@@ -22,15 +22,19 @@ Quick start::
 from repro.query.cache import LRUCache
 from repro.query.database import Database
 from repro.query.diff import DiffEntry, diff, total_delta
-from repro.query.select import (HotPath, context_aggregate, profile_aggregate,
-                                select_contexts, threshold_contexts,
+from repro.query.export import to_dataframe
+from repro.query.select import (HotPath, StripeRow, context_aggregate,
+                                profile_aggregate, select_contexts,
+                                stripe_select, threshold_contexts,
                                 topk_hot_paths)
 from repro.query.timeline import activity, occupancy, samples_in_window
 
 __all__ = [
     "Database", "LRUCache",
-    "HotPath", "select_contexts", "threshold_contexts", "topk_hot_paths",
+    "HotPath", "StripeRow", "select_contexts", "stripe_select",
+    "threshold_contexts", "topk_hot_paths",
     "profile_aggregate", "context_aggregate",
     "DiffEntry", "diff", "total_delta",
     "samples_in_window", "occupancy", "activity",
+    "to_dataframe",
 ]

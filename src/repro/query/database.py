@@ -24,10 +24,12 @@ from __future__ import annotations
 
 import mmap
 import os
+import threading
 
 import numpy as np
 
-from repro.core.cms import CMSReader, decode_plane, empty_plane, stripe_from_plane
+from repro.core.cms import (CMSReader, decode_plane, empty_plane,
+                            stripe_from_buffer, stripe_from_plane)
 from repro.core.metrics import INCLUSIVE_BIT, MetricRegistry
 from repro.core.pms import PMSReader
 from repro.core.sparse import SparseMetrics, Trace
@@ -82,7 +84,15 @@ class Database:
 
         self.cache = LRUCache(cache_bytes)
         self.counters = {"pms_plane_loads": 0, "cms_plane_loads": 0,
+                         "cms_stripe_reads": 0, "cms_stripe_skips": 0,
                          "trace_loads": 0, "pms_scan_fallbacks": 0}
+        # `+=` on a dict slot is not atomic; the serving layer drives one
+        # handle from many threads and the load benchmark sums these
+        self._counter_lock = threading.Lock()
+
+    def _count(self, key: str) -> None:
+        with self._counter_lock:
+            self.counters[key] += 1
 
     # -- identity / naming ---------------------------------------------------
     @property
@@ -125,7 +135,7 @@ class Database:
         pid = int(pid)
 
         def load():
-            self.counters["pms_plane_loads"] += 1
+            self._count("pms_plane_loads")
             off, nbytes = int(self._pms.index[pid, 0]), int(self._pms.index[pid, 1])
             if nbytes == 0:
                 return SparseMetrics.empty(), 64
@@ -142,7 +152,7 @@ class Database:
         ctx = int(ctx)
 
         def load():
-            self.counters["cms_plane_loads"] += 1
+            self._count("cms_plane_loads")
             lo, hi = int(self._cms.offsets[ctx]), int(self._cms.offsets[ctx + 1])
             if lo == hi:
                 return empty_plane(), 64
@@ -157,25 +167,56 @@ class Database:
         pid = int(pid)
 
         def load():
-            self.counters["trace_loads"] += 1
+            self._count("trace_loads")
             tr = self._trc.trace(pid)
             return tr, tr.nbytes()
 
         return self.cache.get_or_load(("trc", pid), load)
 
+    def _stripe_pushdown(self, ctx: int, mid: int):
+        """One stripe decoded straight from the CMS mmap (pushdown read).
+
+        The metric predicate runs against the plane *header* (the
+        ``mids``/``mstart`` arrays, tens of bytes), so a context whose plane
+        lacks the metric is discarded without materializing it — the cost
+        model threshold/call-path selects rely on.  Hits cache only the
+        stripe (``("cms-stripe", ctx, mid)``), not the full plane.
+        """
+        key = ("cms-stripe", ctx, mid)
+
+        def load():
+            lo, hi = int(self._cms.offsets[ctx]), int(self._cms.offsets[ctx + 1])
+            if lo != hi:
+                hit = stripe_from_buffer(self._cms_mm, lo, mid)
+                if hit is not None:
+                    self._count("cms_stripe_reads")
+                    # copy the (small) slices: cached views would pin the
+                    # mmap and make close() a BufferError
+                    prof, vals = hit[0].copy(), hit[1].copy()
+                    return (prof, vals), prof.nbytes + vals.nbytes
+            self._count("cms_stripe_skips")
+            return (np.empty(0, np.uint32), np.empty(0, np.float64)), 64
+
+        return self.cache.get_or_load(key, load)
+
     # -- routed queries ------------------------------------------------------
     def stripe(self, ctx: int, metric, *, inclusive: bool = False):
         """Metric ``m`` of context ``c`` across all profiles: one CMS stripe.
 
-        Returns ``(profile_ids, values)``.  Without a CMS store this
-        degrades to the strawman PMS scan (counted in
-        ``counters["pms_scan_fallbacks"]``) so PMS-only databases stay
-        queryable.
+        Returns ``(profile_ids, values)``.  A cached full plane is sliced
+        for free; otherwise the read is pushed down to the single metric
+        (:meth:`_stripe_pushdown`) instead of decoding the whole context
+        plane.  Without a CMS store this degrades to the strawman PMS scan
+        (counted in ``counters["pms_scan_fallbacks"]``) so PMS-only
+        databases stay queryable.
         """
         mid = self.resolve_metric(metric, inclusive=inclusive)
+        ctx = int(ctx)
         if self._cms is not None:
-            return stripe_from_plane(self.context_plane(ctx), mid)
-        self.counters["pms_scan_fallbacks"] += 1
+            if ("cms", ctx) in self.cache:
+                return stripe_from_plane(self.context_plane(ctx), mid)
+            return self._stripe_pushdown(ctx, mid)
+        self._count("pms_scan_fallbacks")
         pids, vs = [], []
         for pid in range(self.n_profiles):
             v = self.profile_metrics(pid).lookup(int(ctx), mid)
@@ -187,19 +228,17 @@ class Database:
     def value(self, pid: int, ctx: int, metric, *, inclusive: bool = False) -> float:
         """Point lookup routed to the cheaper store.
 
-        A cached plane always wins; on a double miss the store whose plane
-        is smaller on disk pays the decode (paper §3: both stores answer a
-        point query in O(log), so bytes moved decides).
+        A cached PMS plane always wins (slicing it is free).  Otherwise
+        the CMS side pays: since stripe reads push the metric predicate
+        down, the miss cost is one plane *header* plus one stripe — always
+        bounded above by (and usually far below) decoding the full profile
+        plane, so the old decode-the-smaller-plane comparison (paper §3's
+        "bytes moved decides") now degenerates to "prefer the stripe".
+        PMS-only databases fall back to the profile plane.
         """
         mid = self.resolve_metric(metric, inclusive=inclusive)
         pid, ctx = int(pid), int(ctx)
-        in_pms = ("pms", pid) in self.cache
-        in_cms = self._cms is not None and ("cms", ctx) in self.cache
-        if not in_pms and not in_cms and self._cms is not None:
-            pms_sz = int(self._pms.index[pid, 1])
-            cms_sz = int(self._cms.offsets[ctx + 1]) - int(self._cms.offsets[ctx])
-            in_cms = cms_sz <= pms_sz
-        if in_pms or not in_cms:
+        if ("pms", pid) in self.cache or self._cms is None:
             return self.profile_metrics(pid).lookup(ctx, mid)
         prof, vals = self.stripe(ctx, mid)
         k = int(np.searchsorted(prof, pid))

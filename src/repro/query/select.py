@@ -85,6 +85,48 @@ def threshold_contexts(db: Database, metric, *, min_value: float,
     return ctx_ids[order], vals[order]
 
 
+@dataclass(frozen=True)
+class StripeRow:
+    """One :func:`stripe_select` row: a selected context with its stripe."""
+
+    ctx: int
+    path: str
+    stat: float                # the summary stat the context was selected by
+    profiles: np.ndarray       # (p,) u32 profile ids carrying the metric
+    values: np.ndarray         # (p,) f64 per-profile values
+
+
+def stripe_select(db: Database, metric, *, min_value: float = 0.0,
+                  stat: str = "sum", inclusive: bool = False,
+                  kind: int | None = None, name: str | None = None,
+                  path_regex: str | None = None, predicate=None,
+                  limit: int | None = None) -> list[StripeRow]:
+    """Call-path + threshold select that returns per-profile stripes.
+
+    The filters are pushed all the way down: call-path predicates and the
+    summary-stat threshold run with zero store I/O (CCT + summary stats),
+    and each surviving context is read through the Database's stripe
+    pushdown — only the selected metric's slice is decoded, never the full
+    CMS plane.  Before the pushdown this shape materialized (and cached)
+    one whole plane per selected context just to keep one stripe of it.
+    """
+    within = None
+    if any(f is not None for f in (kind, name, path_regex, predicate)):
+        within = select_contexts(db, kind=kind, name=name,
+                                 path_regex=path_regex, predicate=predicate)
+    ctx_ids, vals = threshold_contexts(db, metric, min_value=min_value,
+                                       stat=stat, inclusive=inclusive,
+                                       within=within)
+    if limit is not None:
+        ctx_ids, vals = ctx_ids[:limit], vals[:limit]
+    out = []
+    for c, v in zip(ctx_ids, vals):
+        prof, pv = db.stripe(int(c), metric, inclusive=inclusive)
+        out.append(StripeRow(ctx=int(c), path=db.path_of(int(c)),
+                             stat=float(v), profiles=prof, values=pv))
+    return out
+
+
 # ---------------------------------------------------------------------------
 # top-k hot paths
 # ---------------------------------------------------------------------------

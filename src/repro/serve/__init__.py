@@ -1,3 +1,25 @@
-from repro.serve.engine import ServeEngine
+"""Serving subsystem: batched generation + the query service.
 
-__all__ = ["ServeEngine"]
+* :class:`ServeEngine` / :class:`QueryServer` — in-process batch engines
+  (:mod:`repro.serve.engine`);
+* :class:`BatchScheduler` — cross-request micro-batch windows with
+  admission control and deadlines (:mod:`repro.serve.scheduler`);
+* :class:`QueryHTTPServer` / :class:`QueryClient` — the stdlib HTTP
+  transport and its typed client (:mod:`repro.serve.http` / ``client``);
+* :func:`warm_cache` — stats-driven startup plane preloading
+  (:mod:`repro.serve.warm`).
+"""
+from repro.serve.client import QueryClient, RequestFailed, ServerOverloaded
+from repro.serve.engine import (QueryError, QueryRequest, QueryServer,
+                                Request, ServeEngine)
+from repro.serve.http import QueryHTTPServer
+from repro.serve.scheduler import BatchScheduler, Overloaded
+from repro.serve.warm import plan_warm, warm_cache
+
+__all__ = [
+    "ServeEngine", "Request",
+    "QueryServer", "QueryRequest", "QueryError",
+    "BatchScheduler", "Overloaded",
+    "QueryHTTPServer", "QueryClient", "ServerOverloaded", "RequestFailed",
+    "plan_warm", "warm_cache",
+]

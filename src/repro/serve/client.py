@@ -1,0 +1,138 @@
+"""Typed stdlib client for the query service HTTP transport.
+
+One :class:`QueryClient` wraps one keep-alive ``http.client`` connection
+(HTTP/1.1), decodes the :mod:`repro.serve.wire` payloads back into the
+same types :meth:`QueryServer.submit` returns locally (``SparseMetrics``,
+``(profiles, values)`` arrays, ``HotPath`` rows, ``Trace`` windows), and
+maps transport-level failures to typed exceptions:
+
+* :class:`ServerOverloaded` — admission control said 429; carries the
+  server's ``Retry-After`` hint;
+* :class:`RequestFailed` — a single-op convenience call resolved to a
+  structured :class:`~repro.serve.engine.QueryError` (batch calls return
+  the error objects inline instead, preserving slot alignment).
+
+Not thread-safe: it is one socket.  Give each load-generator client its
+own instance (they are cheap) — exactly what ``benchmarks/serve_load.py``
+does.
+"""
+from __future__ import annotations
+
+import http.client
+import json
+
+from repro.serve.engine import QueryError, QueryRequest
+from repro.serve.wire import request_to_wire, result_from_wire
+
+
+class ServerOverloaded(RuntimeError):
+    def __init__(self, retry_after_s: float):
+        super().__init__(f"server overloaded; retry after {retry_after_s:.2f}s")
+        self.retry_after_s = float(retry_after_s)
+
+
+class RequestFailed(RuntimeError):
+    def __init__(self, err: QueryError):
+        super().__init__(f"{err.error}: {err.message} (op={err.op})")
+        self.query_error = err
+
+
+class TransportError(RuntimeError):
+    """Non-2xx/429 responses: 400 envelopes, 500s, unreachable paths."""
+
+    def __init__(self, status: int, body: dict):
+        super().__init__(f"HTTP {status}: {body}")
+        self.status, self.body = status, body
+
+
+class QueryClient:
+    def __init__(self, host: str, port: int, *, timeout_s: float = 30.0):
+        self.host, self.port = host, int(port)
+        self.timeout_s = float(timeout_s)
+        self._conn: http.client.HTTPConnection | None = None
+
+    # -- transport ------------------------------------------------------------
+    def _connection(self) -> http.client.HTTPConnection:
+        if self._conn is None:
+            self._conn = http.client.HTTPConnection(
+                self.host, self.port, timeout=self.timeout_s)
+        return self._conn
+
+    def _roundtrip(self, method: str, path: str, body: dict | None = None):
+        payload = None if body is None else json.dumps(body).encode("utf-8")
+        headers = {"Content-Type": "application/json"} if payload else {}
+        for attempt in (0, 1):  # one transparent retry on a dropped keep-alive
+            conn = self._connection()
+            try:
+                conn.request(method, path, body=payload, headers=headers)
+                resp = conn.getresponse()
+                data = resp.read()
+                break
+            except (http.client.HTTPException, ConnectionError, OSError):
+                self.close()
+                if attempt:
+                    raise
+        obj = json.loads(data.decode("utf-8")) if data else {}
+        if resp.status == 429:
+            retry = float(obj.get("retry_after_s")
+                          or resp.headers.get("Retry-After") or 1.0)
+            raise ServerOverloaded(retry)
+        if resp.status != 200:
+            raise TransportError(resp.status, obj)
+        return obj
+
+    def close(self) -> None:
+        if self._conn is not None:
+            self._conn.close()
+            self._conn = None
+
+    def __enter__(self) -> "QueryClient":
+        return self
+
+    def __exit__(self, *a) -> None:
+        self.close()
+
+    # -- batched query surface -------------------------------------------------
+    def batch(self, requests: list[QueryRequest], *,
+              timeout_ms: float | None = None) -> list:
+        """Submit a batch; returns one decoded result per slot (failures as
+        inline :class:`QueryError` objects, never exceptions)."""
+        body: dict = {"requests": [request_to_wire(r) for r in requests]}
+        if timeout_ms is not None:
+            body["timeout_ms"] = timeout_ms
+        obj = self._roundtrip("POST", "/v1/query", body)
+        return [result_from_wire(r) for r in obj["results"]]
+
+    def _one(self, req: QueryRequest):
+        res = self.batch([req])[0]
+        if isinstance(res, QueryError):
+            raise RequestFailed(res)
+        return res
+
+    # -- typed convenience ops -------------------------------------------------
+    def profile(self, pid: int):
+        return self._one(QueryRequest(op="profile", pid=pid))
+
+    def stripe(self, ctx: int, metric, *, inclusive: bool = False):
+        return self._one(QueryRequest(op="stripe", ctx=ctx, metric=metric,
+                                      inclusive=inclusive))
+
+    def value(self, pid: int, ctx: int, metric, *,
+              inclusive: bool = False) -> float:
+        return self._one(QueryRequest(op="value", pid=pid, ctx=ctx,
+                                      metric=metric, inclusive=inclusive))
+
+    def topk(self, metric, *, k: int = 10, inclusive: bool = True,
+             **params):
+        return self._one(QueryRequest(op="topk", metric=metric, k=k,
+                                      inclusive=inclusive, params=params))
+
+    def window(self, pid: int, t0: float, t1: float):
+        return self._one(QueryRequest(op="window", pid=pid, t0=t0, t1=t1))
+
+    # -- service introspection --------------------------------------------------
+    def health(self) -> dict:
+        return self._roundtrip("GET", "/healthz")
+
+    def metrics(self) -> dict:
+        return self._roundtrip("GET", "/metrics")

@@ -97,6 +97,19 @@ class QueryRequest:
     params: dict = field(default_factory=dict)
 
 
+@dataclass(frozen=True)
+class QueryError:
+    """Structured per-request failure: one bad request in a batch resolves
+    to this instead of raising out of the batch and poisoning its peers."""
+
+    op: str
+    error: str            # exception class name, e.g. "ValueError"
+    message: str
+
+    def as_dict(self) -> dict:
+        return {"op": self.op, "error": self.error, "message": self.message}
+
+
 class QueryServer:
     """Serves :class:`QueryRequest` batches from one shared ``Database``.
 
@@ -132,18 +145,36 @@ class QueryServer:
     # -- batched serving ----------------------------------------------------
     def _locality_key(self, req: QueryRequest):
         """The plane a request will pull through the cache."""
-        if req.op == "profile" or req.op == "window":
-            return (0, int(req.pid or 0))
-        if req.op == "stripe":
-            return (1, int(req.ctx or 0))
-        if req.op == "value":
-            return (1, int(req.ctx or 0))  # point lookups route context-major
+        try:
+            if req.op == "profile" or req.op == "window":
+                return (0, int(req.pid or 0))
+            if req.op == "stripe":
+                return (1, int(req.ctx or 0))
+            if req.op == "value":
+                return (1, int(req.ctx or 0))  # point lookups route ctx-major
+        except (TypeError, ValueError):
+            pass  # malformed ids sort with the plane-less ops; submit reports
         return (2, 0)  # summary-only ops: no plane at all
 
+    def serve_one(self, req: QueryRequest):
+        """:meth:`submit` that never raises: failures (unknown op, bad ids,
+        missing stores) come back as a :class:`QueryError` result."""
+        try:
+            return self.submit(req)
+        except Exception as e:                          # noqa: BLE001
+            return QueryError(op=str(getattr(req, "op", "?")),
+                              error=type(e).__name__, message=str(e))
+
     def serve(self, requests: list[QueryRequest]) -> list:
+        """Serve a batch in plane-locality order.
+
+        Failures are isolated per request: one malformed request yields a
+        :class:`QueryError` in its slot and the rest of the batch is served
+        normally (a poisoned request must not kill its batch peers).
+        """
         order = sorted(range(len(requests)),
                        key=lambda i: self._locality_key(requests[i]))
         results: list = [None] * len(requests)
         for i in order:
-            results[i] = self.submit(requests[i])
+            results[i] = self.serve_one(requests[i])
         return results

@@ -1,0 +1,268 @@
+"""Stdlib HTTP transport for the query service.
+
+One ``ThreadingHTTPServer`` in front of one shared
+:class:`~repro.query.Database`; connection threads parse/serialize, the
+:class:`~repro.serve.scheduler.BatchScheduler` owns execution so requests
+from *different* connections coalesce into plane-locality windows.
+
+Endpoints::
+
+    POST /v1/query    {"requests": [{...}, ...], "timeout_ms": 5000}
+                      -> 200 {"results": [...]} (per-request errors inline)
+                      -> 429 + Retry-After when admission control rejects
+                      -> 400 on malformed JSON envelopes
+    GET  /healthz     liveness + database identity
+    GET  /metrics     cache hit/miss/eviction counters, queue depth,
+                      admission counters, per-op latency histograms
+
+Payload encoding is :mod:`repro.serve.wire`: a JSON envelope whose array
+fields are base64 of the binary on-disk layouts.  ``batching=False`` keeps
+the transport but serves each HTTP call directly on its connection thread
+— the one-request-at-a-time baseline the load benchmark compares against.
+"""
+from __future__ import annotations
+
+import json
+import math
+import threading
+import time
+from concurrent.futures import TimeoutError as FutureTimeout
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+from repro.query.database import Database
+from repro.serve.engine import QueryError, QueryServer
+from repro.serve.scheduler import BatchScheduler, Overloaded
+from repro.serve.warm import warm_cache
+from repro.serve.wire import request_from_wire, result_to_wire
+
+MAX_BODY_BYTES = 16 << 20
+MAX_REQUESTS_PER_CALL = 1024
+
+
+class QueryHTTPServer:
+    """The serve subsystem, assembled: warm cache, scheduler, transport.
+
+    ``QueryHTTPServer(db).start()`` binds (``port=0`` picks a free port),
+    optionally preloads the hottest planes (``warm_bytes``), and serves
+    until :meth:`stop`.  Also usable as a context manager.
+    """
+
+    def __init__(self, db: Database, *, host: str = "127.0.0.1",
+                 port: int = 0, batching: bool = True, max_batch: int = 16,
+                 max_wait_ms: float = 0.0, max_queue: int = 256,
+                 executor: str = "threads", n_workers: int = 4,
+                 default_timeout_s: float = 30.0,
+                 warm_bytes: int | None = 0):
+        self.db = db
+        self.engine = QueryServer(db)
+        self.host, self._port = host, int(port)
+        self.batching = bool(batching)
+        self.scheduler = BatchScheduler(
+            self.engine, max_batch=max_batch, max_wait_ms=max_wait_ms,
+            max_queue=max_queue, executor=executor, n_workers=n_workers,
+            default_timeout_s=default_timeout_s) if self.batching else None
+        self._warm_bytes = warm_bytes
+        self.warm_report: dict | None = None
+        self._httpd: ThreadingHTTPServer | None = None
+        self._thread: threading.Thread | None = None
+        self._started_t = 0.0
+        self._http_requests = 0
+
+    # -- lifecycle -----------------------------------------------------------
+    def start(self) -> "QueryHTTPServer":
+        if self._httpd is not None:
+            return self
+        if self._warm_bytes is None or self._warm_bytes > 0:
+            self.warm_report = warm_cache(self.db, self._warm_bytes or None)
+        if self.scheduler is not None:
+            self.scheduler.start()
+        service = self
+
+        class Handler(_QueryHandler):
+            pass
+
+        Handler.service = service
+        self._httpd = ThreadingHTTPServer((self.host, self._port), Handler)
+        self._httpd.daemon_threads = True
+        self._started_t = time.monotonic()
+        self._thread = threading.Thread(target=self._httpd.serve_forever,
+                                        kwargs={"poll_interval": 0.1},
+                                        daemon=True, name="serve-http")
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        if self._httpd is not None:
+            self._httpd.shutdown()
+            self._httpd.server_close()
+            self._httpd = None
+        if self._thread is not None:
+            self._thread.join(timeout=10.0)
+            self._thread = None
+        if self.scheduler is not None:
+            self.scheduler.stop()
+
+    @property
+    def address(self) -> tuple[str, int]:
+        assert self._httpd is not None, "server not started"
+        return self._httpd.server_address[:2]
+
+    @property
+    def url(self) -> str:
+        host, port = self.address
+        return f"http://{host}:{port}"
+
+    def __enter__(self) -> "QueryHTTPServer":
+        return self.start()
+
+    def __exit__(self, *a) -> None:
+        self.stop()
+
+    # -- endpoint bodies ------------------------------------------------------
+    def health(self) -> dict:
+        return {"status": "ok", "batching": self.batching,
+                "profiles": self.db.n_profiles,
+                "contexts": self.db.n_contexts,
+                "uptime_s": round(time.monotonic() - self._started_t, 3)}
+
+    def metrics(self) -> dict:
+        out = {"cache": self.db.cache_stats(),
+               "db_counters": dict(self.db.counters),
+               "http_requests": self._http_requests,
+               "warm": self.warm_report,
+               "uptime_s": round(time.monotonic() - self._started_t, 3)}
+        out["scheduler"] = (self.scheduler.metrics()
+                            if self.scheduler is not None else None)
+        return out
+
+    def serve_call(self, body: dict) -> dict:
+        """One ``/v1/query`` call: parse, admit, await, serialize."""
+        raw = body.get("requests")
+        if raw is None and "op" in body:
+            raw = [body]  # single-request sugar
+        if not isinstance(raw, list) or not raw:
+            raise _BadRequest("body needs a non-empty 'requests' list")
+        if len(raw) > MAX_REQUESTS_PER_CALL:
+            raise _CallTooLarge(
+                f"at most {MAX_REQUESTS_PER_CALL} requests per call")
+        if self.scheduler is not None and len(raw) > self.scheduler.max_queue:
+            # could never be admitted: a retrying client would loop forever
+            # on 429, so answer non-retryably
+            raise _CallTooLarge(
+                f"call of {len(raw)} requests exceeds the admission bound "
+                f"({self.scheduler.max_queue}); split it")
+        timeout_ms = body.get("timeout_ms")
+        try:
+            timeout_s = (float(timeout_ms) / 1e3 if timeout_ms is not None
+                         else None)
+        except (TypeError, ValueError):
+            raise _BadRequest(
+                f"timeout_ms must be a number, got {timeout_ms!r}") from None
+
+        reqs, parse_errors = [], {}
+        for i, obj in enumerate(raw):
+            try:
+                reqs.append(request_from_wire(obj))
+            except (ValueError, TypeError) as e:
+                parse_errors[i] = QueryError(
+                    op=str(obj.get("op", "?")) if isinstance(obj, dict)
+                    else "?", error="BadRequest", message=str(e))
+                reqs.append(None)
+
+        live = [r for r in reqs if r is not None]
+        if self.scheduler is not None:
+            futures = iter(self.scheduler.submit_many(live,
+                                                      timeout_s=timeout_s))
+            deadline = time.monotonic() + (timeout_s
+                                           or self.scheduler.default_timeout_s)
+            results = []
+            for r in reqs:
+                if r is None:
+                    results.append(None)
+                    continue
+                fut = next(futures)
+                try:
+                    results.append(fut.result(
+                        timeout=max(deadline - time.monotonic(), 0.0)))
+                except FutureTimeout:
+                    results.append(QueryError(op=r.op, error="DeadlineExceeded",
+                                              message="result wait timed out"))
+        else:
+            served = iter(self.engine.serve(live))
+            results = [None if r is None else next(served) for r in reqs]
+
+        wire = []
+        for i, res in enumerate(results):
+            wire.append(result_to_wire(parse_errors[i] if res is None
+                                       else res))
+        return {"results": wire}
+
+
+class _BadRequest(ValueError):
+    pass
+
+
+class _CallTooLarge(ValueError):
+    """Structurally oversized call: 413, never admissible, do not retry."""
+
+
+class _QueryHandler(BaseHTTPRequestHandler):
+    protocol_version = "HTTP/1.1"
+    server_version = "repro-serve/1.0"
+    service: QueryHTTPServer  # injected per server instance
+
+    def log_message(self, fmt, *args):  # noqa: A003 - stdlib signature
+        pass  # keep the serving path quiet; /metrics is the observer
+
+    def _send_json(self, code: int, obj: dict,
+                   extra_headers: dict | None = None) -> None:
+        payload = json.dumps(obj).encode("utf-8")
+        self.send_response(code)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(payload)))
+        for k, v in (extra_headers or {}).items():
+            self.send_header(k, v)
+        self.end_headers()
+        self.wfile.write(payload)
+
+    def do_GET(self):  # noqa: N802 - stdlib casing
+        svc = self.service
+        if self.path == "/healthz":
+            self._send_json(200, svc.health())
+        elif self.path == "/metrics":
+            self._send_json(200, svc.metrics())
+        else:
+            self._send_json(404, {"error": "NotFound", "path": self.path})
+
+    def do_POST(self):  # noqa: N802 - stdlib casing
+        svc = self.service
+        if self.path != "/v1/query":
+            self._send_json(404, {"error": "NotFound", "path": self.path})
+            return
+        svc._http_requests += 1
+        try:
+            try:
+                n = int(self.headers.get("Content-Length", 0))
+            except ValueError:
+                n = -1
+            if n <= 0 or n > MAX_BODY_BYTES:
+                # body never read: the stale bytes would desynchronize the
+                # keep-alive stream, so drop the connection with the 400
+                self.close_connection = True
+                raise _BadRequest(f"Content-Length must be in (0, "
+                                  f"{MAX_BODY_BYTES}]")
+            body = json.loads(self.rfile.read(n).decode("utf-8"))
+            if not isinstance(body, dict):
+                raise _BadRequest("body must be a JSON object")
+            self._send_json(200, svc.serve_call(body))
+        except _CallTooLarge as e:
+            self._send_json(413, {"error": "CallTooLarge", "message": str(e)})
+        except (_BadRequest, json.JSONDecodeError, UnicodeDecodeError) as e:
+            self._send_json(400, {"error": "BadRequest", "message": str(e)})
+        except Overloaded as e:
+            self._send_json(
+                429, {"error": "Overloaded",
+                      "retry_after_s": e.retry_after_s},
+                {"Retry-After": str(max(1, math.ceil(e.retry_after_s)))})
+        except Exception as e:  # noqa: BLE001 - last-resort 500
+            self._send_json(500, {"error": type(e).__name__, "message": str(e)})

@@ -1,0 +1,331 @@
+"""Cross-request micro-batch scheduler with admission control.
+
+The query engine's economics reward batching: a window of concurrent
+requests sorted by :meth:`QueryServer._locality_key` decodes every hot
+plane once (the rest are LRU hits), and one worker wake-up is amortized
+over the whole window instead of paid per request.  This module supplies
+the missing piece between "a Database that can batch" and "a service under
+open-loop load":
+
+* **admission control** — a bounded queue; when it is full, :meth:`submit`
+  raises :class:`Overloaded` *immediately* (the HTTP layer maps it to
+  ``429 Retry-After``), so overload degrades to fast rejections instead of
+  unbounded queueing and collapse;
+* **micro-batch windows** — workers collect up to ``max_batch`` requests,
+  waiting at most ``max_wait_ms`` after the first arrival, then serve the
+  window in plane-locality order through :meth:`QueryServer.serve_one`;
+* **deadlines** — every request carries one; a request that expires while
+  queued resolves to a ``QueryError("DeadlineExceeded")`` without touching
+  the stores (shedding stale work is the other half of backpressure);
+* **runtime executor** — the window-serving loops run on a
+  :mod:`repro.runtime` executor (``threads`` by default, ``serial`` for
+  deterministic debugging), the same substrate the aggregator uses.
+
+Results are delivered through ``concurrent.futures.Future``s; per-request
+failures resolve (not raise) as :class:`~repro.serve.engine.QueryError`,
+so one poisoned request never disturbs its window peers.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future, InvalidStateError
+from dataclasses import dataclass
+
+from repro.serve.engine import QueryError, QueryRequest, QueryServer
+
+_HIST_EDGES_US = (100.0, 300.0, 1e3, 3e3, 1e4, 3e4, 1e5, 3e5, 1e6, 3e6)
+
+
+class Overloaded(RuntimeError):
+    """Admission queue full; retry after ``retry_after_s`` seconds."""
+
+    def __init__(self, retry_after_s: float):
+        super().__init__(f"admission queue full; retry after "
+                         f"{retry_after_s:.2f}s")
+        self.retry_after_s = float(retry_after_s)
+
+
+class LatencyHistogram:
+    """Fixed log-spaced latency buckets (µs); lock-free under the GIL for
+    single increments, snapshotted under the scheduler lock."""
+
+    def __init__(self):
+        self.counts = [0] * (len(_HIST_EDGES_US) + 1)
+        self.total_s = 0.0
+        self.n = 0
+
+    def observe(self, seconds: float) -> None:
+        us = seconds * 1e6
+        i = 0
+        for edge in _HIST_EDGES_US:
+            if us < edge:
+                break
+            i += 1
+        self.counts[i] += 1
+        self.total_s += seconds
+        self.n += 1
+
+    def quantile(self, q: float) -> float:
+        """Upper-edge estimate of quantile ``q`` in seconds."""
+        if self.n == 0:
+            return 0.0
+        rank = q * self.n
+        seen = 0
+        for i, c in enumerate(self.counts):
+            seen += c
+            if seen >= rank and c:
+                return (_HIST_EDGES_US[i] if i < len(_HIST_EDGES_US)
+                        else _HIST_EDGES_US[-1] * 10) / 1e6
+        return _HIST_EDGES_US[-1] * 10 / 1e6
+
+    def as_dict(self) -> dict:
+        return {"buckets_us": list(_HIST_EDGES_US), "counts": list(self.counts),
+                "n": self.n,
+                "mean_ms": (self.total_s / self.n * 1e3) if self.n else 0.0,
+                "p50_ms_le": self.quantile(0.5) * 1e3,
+                "p99_ms_le": self.quantile(0.99) * 1e3}
+
+
+@dataclass
+class _Pending:
+    req: QueryRequest
+    future: Future
+    enq_t: float
+    deadline: float
+
+
+class BatchScheduler:
+    """Admission-controlled micro-batching front of one :class:`QueryServer`.
+
+    ``max_batch=1`` degrades to one-request-at-a-time serving (the
+    benchmark baseline).  ``max_wait_ms`` bounds how long a worker holds a
+    window open after its first request; ``0`` (the default) is
+    *opportunistic* batching — serve everything already queued, never
+    stall an idle worker.  A small positive wait trades first-request
+    latency for fuller windows (better plane dedup) when traffic is
+    sparse but bursty.
+    """
+
+    def __init__(self, server: QueryServer, *, max_batch: int = 16,
+                 max_wait_ms: float = 0.0, max_queue: int = 256,
+                 executor: str = "threads", n_workers: int = 4,
+                 default_timeout_s: float = 30.0):
+        self.server = server
+        self.max_batch = max(1, int(max_batch))
+        self.max_wait_s = max(0.0, float(max_wait_ms)) / 1e3
+        self.max_queue = max(1, int(max_queue))
+        self.default_timeout_s = float(default_timeout_s)
+        self._executor_name = executor
+        self.n_workers = 1 if executor == "serial" else max(1, int(n_workers))
+
+        self._q: deque[_Pending] = deque()
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._stopped = True
+        self._runner: threading.Thread | None = None
+        self._ewma_service_s = 1e-3  # per-request service time estimate
+
+        # observability (guarded by self._lock)
+        self.counters = {"submitted": 0, "completed": 0, "rejected": 0,
+                         "expired": 0, "errors": 0, "batches": 0,
+                         "batched_requests": 0}
+        self.latency = {}        # op -> LatencyHistogram (service time)
+        self.queue_wait = LatencyHistogram()
+
+    # -- lifecycle -----------------------------------------------------------
+    def start(self) -> "BatchScheduler":
+        """Spin up the window-serving loops on the runtime executor."""
+        from repro.runtime import get_executor
+        # resolve the executor BEFORE flipping state: a bad executor name
+        # must not leave a "running" scheduler with zero workers
+        ex = get_executor(self._executor_name, self.n_workers)
+        with self._lock:
+            if not self._stopped:
+                ex.close()
+                return self
+            self._stopped = False
+
+        def run():
+            try:
+                with ex:
+                    ex.parallel_for(self.n_workers, self._worker_loop)
+            except BaseException as e:  # worker crash: fail queued futures
+                self._fail_all(e)
+
+        self._runner = threading.Thread(target=run, daemon=True,
+                                        name="serve-scheduler")
+        self._runner.start()
+        return self
+
+    def stop(self) -> None:
+        with self._cond:
+            if self._stopped:
+                return
+            self._stopped = True
+            self._cond.notify_all()
+        if self._runner is not None:
+            self._runner.join(timeout=10.0)
+        self._fail_all(RuntimeError("scheduler stopped"))
+
+    @staticmethod
+    def _resolve(fut: Future, result=None, exc: BaseException | None = None
+                 ) -> None:
+        """set_result/set_exception that tolerates a caller-side cancel
+        racing in after our done-check — a lost cancel race must never
+        take down the worker loop."""
+        try:
+            if exc is not None:
+                fut.set_exception(exc)
+            else:
+                fut.set_result(result)
+        except InvalidStateError:
+            pass
+
+    def _fail_all(self, exc: BaseException) -> None:
+        with self._cond:
+            pending, self._q = list(self._q), deque()
+        for p in pending:
+            if not p.future.done():
+                self._resolve(p.future, exc=exc)
+
+    def __enter__(self) -> "BatchScheduler":
+        return self.start()
+
+    def __exit__(self, *a) -> None:
+        self.stop()
+
+    # -- submission (admission control) --------------------------------------
+    def depth(self) -> int:
+        with self._lock:
+            return len(self._q)
+
+    def _retry_after_locked(self) -> float:
+        est = len(self._q) * self._ewma_service_s / self.n_workers
+        return max(0.05, min(est, 30.0))
+
+    def retry_after_s(self) -> float:
+        """Rough time until the queue drains enough to admit again."""
+        with self._lock:
+            return self._retry_after_locked()
+
+    def submit(self, req: QueryRequest, *, timeout_s: float | None = None
+               ) -> Future:
+        return self.submit_many([req], timeout_s=timeout_s)[0]
+
+    def submit_many(self, reqs: list[QueryRequest], *,
+                    timeout_s: float | None = None) -> list[Future]:
+        """Admit a group atomically: all enqueued, or :class:`Overloaded`.
+
+        Atomic admission keeps multi-request HTTP calls coherent — a call
+        either gets every answer or a single 429, never a half-served body.
+        """
+        timeout_s = self.default_timeout_s if timeout_s is None else timeout_s
+        now = time.monotonic()
+        with self._cond:
+            if self._stopped:
+                raise RuntimeError("scheduler is not running")
+            if len(self._q) + len(reqs) > self.max_queue:
+                self.counters["rejected"] += len(reqs)
+                raise Overloaded(self._retry_after_locked())
+            out = []
+            for req in reqs:
+                p = _Pending(req, Future(), now, now + timeout_s)
+                self._q.append(p)
+                out.append(p.future)
+            self.counters["submitted"] += len(reqs)
+            # wake enough workers to spread a multi-request call; one
+            # notify would serve it as sequential windows on one worker
+            self._cond.notify(min(len(reqs), self.n_workers))
+        return out
+
+    # -- window serving -------------------------------------------------------
+    def _collect(self) -> list[_Pending] | None:
+        """Block for the next micro-batch window; ``None`` on shutdown."""
+        with self._cond:
+            while not self._q:
+                if self._stopped:
+                    return None
+                self._cond.wait()
+            batch = [self._q.popleft()]
+            window_end = time.monotonic() + self.max_wait_s
+            while len(batch) < self.max_batch:
+                if self._q:
+                    batch.append(self._q.popleft())
+                    continue
+                remaining = window_end - time.monotonic()
+                if remaining <= 0 or self._stopped:
+                    break
+                self._cond.wait(remaining)
+            return batch
+
+    def _execute(self, batch: list[_Pending]) -> None:
+        now = time.monotonic()
+        live: list[_Pending] = []
+        for p in batch:
+            if p.future.cancelled():
+                continue
+            if now > p.deadline:
+                with self._lock:
+                    self.counters["expired"] += 1
+                self._resolve(p.future, QueryError(
+                    op=str(getattr(p.req, "op", "?")),
+                    error="DeadlineExceeded",
+                    message=f"spent {now - p.enq_t:.3f}s queued"))
+                continue
+            live.append(p)
+        if not live:
+            return
+        with self._lock:
+            self.counters["batches"] += 1
+            self.counters["batched_requests"] += len(live)
+        # plane-locality order: every hot plane decodes once per window
+        order = sorted(range(len(live)),
+                       key=lambda i: self.server._locality_key(live[i].req))
+        observed: list[tuple[str, float, float, bool]] = []
+        for i in order:
+            p = live[i]
+            t0 = time.monotonic()
+            res = self.server.serve_one(p.req)
+            dt = time.monotonic() - t0
+            observed.append((str(getattr(p.req, "op", "?")), dt,
+                             t0 - p.enq_t, isinstance(res, QueryError)))
+            if not p.future.cancelled():
+                self._resolve(p.future, res)
+        # one bookkeeping pass per window, not per request — the lock is
+        # shared with submit(), so per-request acquisition would tax the
+        # serving loop exactly where batching should be amortizing it
+        with self._lock:
+            for op, dt, waited, failed in observed:
+                self.counters["completed"] += 1
+                if failed:
+                    self.counters["errors"] += 1
+                self.latency.setdefault(op, LatencyHistogram()).observe(dt)
+                self.queue_wait.observe(waited)
+                self._ewma_service_s += 0.05 * (dt - self._ewma_service_s)
+
+    def _worker_loop(self, w: int) -> None:
+        while True:
+            batch = self._collect()
+            if batch is None:
+                return
+            self._execute(batch)
+
+    # -- observability --------------------------------------------------------
+    def metrics(self) -> dict:
+        with self._lock:
+            out = dict(self.counters)
+            out["queue_depth"] = len(self._q)
+            out["max_queue"] = self.max_queue
+            out["max_batch"] = self.max_batch
+            out["max_wait_ms"] = self.max_wait_s * 1e3
+            out["workers"] = self.n_workers
+            out["executor"] = self._executor_name
+            out["ewma_service_ms"] = self._ewma_service_s * 1e3
+            out["mean_batch_size"] = (
+                self.counters["batched_requests"]
+                / max(self.counters["batches"], 1))
+            out["latency"] = {op: h.as_dict() for op, h in self.latency.items()}
+            out["queue_wait"] = self.queue_wait.as_dict()
+        return out

@@ -83,7 +83,9 @@ def test_context_major_routing_never_scans_pms(db, db_dir):
         assert [(int(p), pytest.approx(v)) for p, v in zip(prof, vals)] == exp
     assert db.counters["pms_plane_loads"] == 0
     assert db.counters["pms_scan_fallbacks"] == 0
-    assert db.counters["cms_plane_loads"] > 0
+    # stripes are pushdown reads: one metric slice each, zero full planes
+    assert db.counters["cms_stripe_reads"] > 0
+    assert db.counters["cms_plane_loads"] == 0
 
 
 def test_point_lookup_routes_to_cheaper_store(db):
@@ -102,20 +104,22 @@ def test_point_lookup_routes_to_cheaper_store(db):
     assert db.counters["cms_plane_loads"] >= loads_before["cms_plane_loads"]
 
 
-def test_point_lookup_decodes_the_smaller_plane(db_dir):
-    """On a double cache miss, the store with the smaller plane pays."""
+def test_point_lookup_double_miss_pays_only_a_stripe(db_dir):
+    """On a double cache miss the CMS stripe pushdown pays — bounded by
+    one stripe, never a full plane from either store."""
     with Database(db_dir) as fresh:
         ctx = int(fresh.stats["ctx"][1])
         mid = int(fresh.stats["mid"][1])
-        pms_sz = int(fresh._pms.index[0, 1])
-        cms_sz = int(fresh._cms.offsets[ctx + 1] - fresh._cms.offsets[ctx])
         fresh.value(0, ctx, mid)
-        if cms_sz <= pms_sz:
-            assert fresh.counters["cms_plane_loads"] == 1
-            assert fresh.counters["pms_plane_loads"] == 0
-        else:
-            assert fresh.counters["pms_plane_loads"] == 1
-            assert fresh.counters["cms_plane_loads"] == 0
+        assert fresh.counters["cms_stripe_reads"] \
+            + fresh.counters["cms_stripe_skips"] == 1
+        assert fresh.counters["pms_plane_loads"] == 0
+        assert fresh.counters["cms_plane_loads"] == 0
+        # ...but a cached profile plane still wins outright
+        fresh.profile_metrics(0)
+        before = dict(fresh.counters)
+        fresh.value(0, ctx, mid)
+        assert fresh.counters == before  # no new I/O of any kind
 
 
 def test_warm_cache_serves_repeats_without_loads(db_dir):
@@ -123,11 +127,13 @@ def test_warm_cache_serves_repeats_without_loads(db_dir):
         pairs = list(zip(fresh.stats["ctx"][:30], fresh.stats["mid"][:30]))
         for c, m in pairs:
             fresh.stripe(int(c), int(m))
-        loads = fresh.counters["cms_plane_loads"]
+        loads = (fresh.counters["cms_plane_loads"],
+                 fresh.counters["cms_stripe_reads"])
         hits0 = fresh.cache.hits
         for c, m in pairs:
             fresh.stripe(int(c), int(m))
-        assert fresh.counters["cms_plane_loads"] == loads  # no new I/O
+        assert (fresh.counters["cms_plane_loads"],
+                fresh.counters["cms_stripe_reads"]) == loads  # no new I/O
         assert fresh.cache.hits > hits0
 
 
@@ -145,6 +151,78 @@ def test_tiny_cache_evicts_but_stays_correct(db_dir):
 def test_missing_stripe_is_empty(db):
     prof, vals = db.stripe(0, 11)  # metric 11 never recorded
     assert prof.size == 0 and vals.size == 0
+    # the absent metric was discovered from the plane header alone
+    assert db.counters["cms_stripe_skips"] > 0
+    assert db.counters["cms_plane_loads"] == 0
+
+
+def test_stripe_pushdown_matches_full_plane(db_dir):
+    """Pushdown stripes equal full-plane slices, at zero plane reads."""
+    from repro.core.cms import stripe_from_plane
+    with Database(db_dir) as push, Database(db_dir) as full:
+        pairs = list(zip(full.stats["ctx"][:40], full.stats["mid"][:40]))
+        for c, m in pairs:
+            prof_a, vals_a = push.stripe(int(c), int(m))
+            prof_b, vals_b = stripe_from_plane(
+                full.context_plane(int(c)), int(m))
+            np.testing.assert_array_equal(prof_a, prof_b)
+            np.testing.assert_allclose(vals_a, vals_b)
+        # the pushdown handle decoded zero planes; the full-plane handle
+        # decoded one per distinct context — that is the shrink
+        assert push.counters["cms_plane_loads"] == 0
+        assert push.counters["cms_stripe_reads"] > 0
+        assert full.counters["cms_plane_loads"] > 0
+        # and the cached footprint is stripes, not planes
+        assert push.cache.nbytes < full.cache.nbytes
+
+
+def test_stripe_select_pushes_predicates_down(db_dir):
+    """Threshold/call-path selects read stripes, never whole planes."""
+    from repro.query import stripe_select
+    with Database(db_dir) as fresh:
+        rows = stripe_select(fresh, 0, min_value=0.0, inclusive=True,
+                             path_regex="n1", limit=12)
+        assert rows, "the fixture workload must match 'n1' somewhere"
+        for r in rows:
+            assert "n1" in r.path
+            prof, vals = fresh.stripe(r.ctx, 0, inclusive=True)
+            np.testing.assert_array_equal(r.profiles, prof)
+            np.testing.assert_allclose(r.values, vals)
+            assert fresh.summary(r.ctx, 0, inclusive=True) == \
+                pytest.approx(r.stat)
+        assert fresh.counters["cms_plane_loads"] == 0  # shrunk to zero
+        assert fresh.counters["pms_plane_loads"] == 0
+        assert fresh.counters["cms_stripe_reads"] > 0
+
+
+# ---------------------------------------------------------------------------
+# dataframe export
+# ---------------------------------------------------------------------------
+
+def test_to_dataframe_roundtrip(db_dir):
+    pd = pytest.importorskip("pandas")
+    from repro.query import to_dataframe
+    with Database(db_dir) as fresh:
+        frame = to_dataframe(fresh)
+        assert isinstance(frame, pd.DataFrame)
+        assert frame.index.name == "path"
+        assert {"ctx", "name", "depth"} <= set(frame.columns)
+        # spot-check values against the summary API across the frame
+        metric_cols = [c for c in frame.columns
+                       if c not in ("ctx", "name", "depth")]
+        assert metric_cols
+        for _, row in frame.iloc[:25].iterrows():
+            for col in metric_cols:
+                inclusive = col.endswith(":I")
+                metric = int(col[:-2] if inclusive else col)
+                assert row[col] == pytest.approx(fresh.summary(
+                    int(row["ctx"]), metric, inclusive=inclusive))
+        # root path indexes the root context
+        assert int(frame.loc["/", "ctx"]) == 0
+        # export never touches planes
+        assert fresh.counters["pms_plane_loads"] == 0
+        assert fresh.counters["cms_plane_loads"] == 0
+        assert fresh.counters["cms_stripe_reads"] == 0
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,482 @@
+"""Query service: scheduler batching, admission control, HTTP transport,
+cache warming, and per-request failure isolation."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.aggregate import AggregationConfig, StreamingAggregator
+from repro.query import Database, samples_in_window, topk_hot_paths
+from repro.serve.engine import QueryError, QueryRequest, QueryServer
+from repro.serve.scheduler import BatchScheduler, Overloaded
+from repro.serve.warm import plan_warm, warm_cache
+from tests.conftest import make_profile
+
+N_PROFILES = 6
+
+
+@pytest.fixture(scope="module")
+def db_dir(tmp_path_factory):
+    td = tmp_path_factory.mktemp("servedb")
+    rng = np.random.default_rng(11)
+    paths = []
+    for i in range(N_PROFILES):
+        prof = make_profile(rng, n_nodes=80, n_metrics=6, density=0.3,
+                            n_trace=24, identity={"rank": i})
+        p = td / f"prof{i:03d}.rprf"
+        prof.save(p)
+        paths.append(str(p))
+    StreamingAggregator(
+        td / "db", AggregationConfig(executor="threads", n_workers=3)
+    ).run(paths)
+    return td / "db"
+
+
+@pytest.fixture
+def db(db_dir):
+    with Database(db_dir) as handle:
+        yield handle
+
+
+def _mixed_requests(db, n, seed=0):
+    rng = np.random.default_rng(seed)
+    ctxs = db.stats["ctx"]
+    mids = db.stats["mid"]
+    reqs = []
+    for _ in range(n):
+        i = int(rng.integers(len(ctxs)))
+        pick = rng.random()
+        if pick < 0.4:
+            reqs.append(QueryRequest(op="stripe", ctx=int(ctxs[i]),
+                                     metric=int(mids[i])))
+        elif pick < 0.6:
+            reqs.append(QueryRequest(
+                op="profile", pid=int(rng.integers(db.n_profiles))))
+        elif pick < 0.8:
+            reqs.append(QueryRequest(op="value",
+                                     pid=int(rng.integers(db.n_profiles)),
+                                     ctx=int(ctxs[i]), metric=int(mids[i])))
+        elif pick < 0.9:
+            reqs.append(QueryRequest(op="topk", metric=0, inclusive=True,
+                                     k=5))
+        else:
+            reqs.append(QueryRequest(
+                op="window", pid=int(rng.integers(db.n_profiles)),
+                t0=0.0, t1=0.7))
+    return reqs
+
+
+def _assert_result_equal(got, ref):
+    if isinstance(ref, tuple):                      # stripe
+        np.testing.assert_array_equal(got[0], ref[0])
+        np.testing.assert_allclose(got[1], ref[1])
+    elif hasattr(ref, "val"):                        # SparseMetrics
+        np.testing.assert_array_equal(got.ctx, ref.ctx)
+        np.testing.assert_allclose(got.val, ref.val)
+    elif hasattr(ref, "time"):                       # Trace
+        np.testing.assert_allclose(got.time, ref.time)
+    else:
+        assert got == ref
+
+
+# ---------------------------------------------------------------------------
+# per-request failure isolation (the batch-poisoning fix)
+# ---------------------------------------------------------------------------
+
+def test_poisoned_request_does_not_kill_batch(db):
+    srv = QueryServer(db)
+    reqs = [QueryRequest(op="topk", metric=0, inclusive=True, k=3),
+            QueryRequest(op="nope"),                       # unknown op
+            QueryRequest(op="profile", pid=10**6),         # bad id
+            QueryRequest(op="profile", pid=None),          # missing id
+            QueryRequest(op="stripe", ctx=0, metric="no_registry_name"),
+            QueryRequest(op="profile", pid=1)]
+    results = srv.serve(reqs)
+    assert [h.ctx for h in results[0]] == \
+        [h.ctx for h in topk_hot_paths(db, 0, k=3)]
+    for bad in results[1:5]:
+        assert isinstance(bad, QueryError)
+        assert bad.error and bad.message
+    assert results[1].error == "ValueError"
+    assert results[5].n_values == db.profile_metrics(1).n_values
+    # submit (the single-request path) still raises for direct callers
+    with pytest.raises(ValueError, match="unknown query op"):
+        srv.submit(QueryRequest(op="nope"))
+
+
+# ---------------------------------------------------------------------------
+# scheduler: correctness under many-threaded hammering
+# ---------------------------------------------------------------------------
+
+def test_concurrent_clients_match_serial_submit(db_dir):
+    n_clients, per_client = 12, 25
+    with Database(db_dir) as ref_db:
+        reqs = _mixed_requests(ref_db, n_clients * per_client)
+        ref_srv = QueryServer(ref_db)
+        reference = [ref_srv.serve_one(r) for r in reqs]
+
+    with Database(db_dir, cache_bytes=1 << 20) as served:
+        with BatchScheduler(QueryServer(served), max_batch=32,
+                            max_queue=1024, n_workers=4) as sched:
+            results: list = [None] * len(reqs)
+
+            def client(k):
+                for j in range(per_client):
+                    i = k * per_client + j
+                    results[i] = sched.submit(reqs[i]).result(30)
+
+            threads = [threading.Thread(target=client, args=(k,))
+                       for k in range(n_clients)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            stats = sched.metrics()
+    for got, ref in zip(results, reference):
+        _assert_result_equal(got, ref)
+    assert stats["completed"] == len(reqs)
+    assert stats["batches"] <= len(reqs)
+
+
+def test_window_coalesces_misses_through_cache(db_dir):
+    """A burst on one hot plane decodes it once, not once per request."""
+    with Database(db_dir) as fresh:
+        ctx = int(fresh.stats["ctx"][0])
+        mid = int(fresh.stats["mid"][0])
+        with BatchScheduler(QueryServer(fresh), max_batch=64,
+                            n_workers=2) as sched:
+            futs = [sched.submit(QueryRequest(op="stripe", ctx=ctx,
+                                              metric=mid))
+                    for _ in range(32)]
+            outs = [f.result(30) for f in futs]
+        base_prof, base_vals = outs[0]
+        for prof, vals in outs[1:]:
+            np.testing.assert_array_equal(prof, base_prof)
+            np.testing.assert_allclose(vals, base_vals)
+        # one pushdown read served all 32 requests (sorted window + the
+        # cache's in-flight coalescing)
+        assert fresh.counters["cms_stripe_reads"] == 1
+        assert fresh.cache.hits >= 31
+
+
+class _StallServer(QueryServer):
+    """Test double: ``op="stall"`` blocks until released."""
+
+    def __init__(self, db):
+        super().__init__(db)
+        self.release = threading.Event()
+
+    def submit(self, req):
+        if req.op == "stall":
+            assert self.release.wait(30), "stall never released"
+            return 0.0
+        return super().submit(req)
+
+
+def test_admission_control_rejects_not_hangs(db):
+    srv = _StallServer(db)
+    sched = BatchScheduler(srv, max_batch=1, max_queue=4, n_workers=1)
+    with sched:
+        stalled = sched.submit(QueryRequest(op="stall"))
+        time.sleep(0.05)          # worker picks up the stalled window
+        admitted = [sched.submit(QueryRequest(op="topk", metric=0, k=2))
+                    for _ in range(4)]
+        t0 = time.perf_counter()
+        with pytest.raises(Overloaded) as exc:
+            sched.submit(QueryRequest(op="topk", metric=0, k=2))
+        assert time.perf_counter() - t0 < 1.0, "rejection must be immediate"
+        assert exc.value.retry_after_s > 0
+        assert sched.depth() <= 4
+        assert sched.metrics()["rejected"] == 1
+        srv.release.set()
+        assert stalled.result(30) == 0.0
+        for f in admitted:
+            assert not isinstance(f.result(30), QueryError)
+
+
+def test_expired_requests_are_shed(db):
+    srv = _StallServer(db)
+    with BatchScheduler(srv, max_batch=4, max_queue=64, n_workers=1) as sched:
+        stalled = sched.submit(QueryRequest(op="stall"))
+        time.sleep(0.05)
+        doomed = sched.submit(QueryRequest(op="topk", metric=0, k=2),
+                              timeout_s=0.01)
+        time.sleep(0.05)          # deadline passes while queued
+        srv.release.set()
+        res = doomed.result(30)
+        assert isinstance(res, QueryError) and res.error == "DeadlineExceeded"
+        assert stalled.result(30) == 0.0
+        assert sched.metrics()["expired"] == 1
+
+
+def test_scheduler_stop_drains_and_rejects_new_work(db):
+    srv = _StallServer(db)
+    sched = BatchScheduler(srv, max_batch=1, max_queue=64, n_workers=1)
+    sched.start()
+    stalled = sched.submit(QueryRequest(op="stall"))
+    time.sleep(0.05)
+    queued = sched.submit(QueryRequest(op="topk", metric=0, k=2))
+    threading.Timer(0.1, srv.release.set).start()
+    sched.stop()
+    # in-flight and already-admitted work drains before shutdown completes
+    assert stalled.result(1) == 0.0
+    assert not isinstance(queued.result(1), QueryError)
+    with pytest.raises(RuntimeError, match="not running"):
+        sched.submit(QueryRequest(op="topk", metric=0, k=2))
+
+
+def test_bad_executor_name_fails_start_cleanly(db):
+    """A bad executor errors out of start(); the scheduler must not be
+    left half-running, silently swallowing submissions forever."""
+    sched = BatchScheduler(QueryServer(db), executor="procesess")
+    with pytest.raises(ValueError, match="unknown executor"):
+        sched.start()
+    with pytest.raises(RuntimeError, match="not running"):
+        sched.submit(QueryRequest(op="topk", metric=0, k=1))
+
+
+def test_serial_executor_scheduler(db):
+    """The serving loops also run on the serial runtime backend."""
+    with BatchScheduler(QueryServer(db), executor="serial",
+                        max_batch=8) as sched:
+        got = sched.submit(QueryRequest(op="topk", metric=0, inclusive=True,
+                                        k=3)).result(30)
+        assert [h.ctx for h in got] == \
+            [h.ctx for h in topk_hot_paths(db, 0, k=3)]
+
+
+# ---------------------------------------------------------------------------
+# cache warming
+# ---------------------------------------------------------------------------
+
+def test_warm_plan_uses_summary_stats_only(db_dir):
+    with Database(db_dir) as fresh:
+        plan = plan_warm(fresh, 32 << 20)
+        assert plan, "fixture database must yield a warm plan"
+        assert fresh.counters["pms_plane_loads"] == 0
+        assert fresh.counters["cms_plane_loads"] == 0
+        assert fresh.counters["cms_stripe_reads"] == 0
+        stores = {s for s, _, _ in plan}
+        assert stores <= {"pms", "cms"}
+        sizes = [sz for _, _, sz in plan]
+        assert sum(sizes) <= 32 << 20
+
+
+def test_warm_cache_absorbs_first_touches(db_dir):
+    with Database(db_dir) as fresh:
+        report = warm_cache(fresh)
+        assert report["loaded"] > 0
+        assert fresh.cache.nbytes > 0
+        loads_after_warm = dict(fresh.counters)
+        # hot queries land on the warmed planes: zero new plane I/O
+        for i in range(20):
+            fresh.stripe(int(fresh.stats["ctx"][i]),
+                         int(fresh.stats["mid"][i]))
+        for pid in range(fresh.n_profiles):
+            fresh.profile_metrics(pid)
+        assert fresh.counters == loads_after_warm
+
+
+def test_warm_respects_byte_budget(db_dir):
+    with Database(db_dir, cache_bytes=1 << 20) as fresh:
+        budget = 16 << 10
+        report = warm_cache(fresh, budget)
+        assert report["budget_bytes"] == budget
+        assert fresh.cache.evictions == 0, \
+            "warming must never evict what it just loaded"
+
+
+def test_warm_budget_clamped_to_cache_capacity(db_dir):
+    """A budget above the LRU capacity must not churn the hottest planes
+    back out through eviction — it is clamped instead."""
+    with Database(db_dir, cache_bytes=48 << 10) as fresh:
+        report = warm_cache(fresh, 1 << 30)
+        assert report["budget_bytes"] <= 48 << 10
+        assert fresh.cache.evictions == 0
+
+
+# ---------------------------------------------------------------------------
+# HTTP transport end to end
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def http_server(db_dir):
+    from repro.serve.http import QueryHTTPServer
+    with Database(db_dir) as handle:
+        with QueryHTTPServer(handle, port=0, max_batch=16,
+                             warm_bytes=None) as srv:
+            yield srv, handle
+
+
+def test_http_roundtrip_matches_direct(http_server):
+    from repro.serve.client import QueryClient
+    srv, db = http_server
+    host, port = srv.address
+    with QueryClient(host, port) as cl:
+        assert cl.health()["status"] == "ok"
+        sm = cl.profile(1)
+        ref = db.profile_metrics(1)
+        np.testing.assert_array_equal(sm.ctx, ref.ctx)
+        np.testing.assert_allclose(sm.val, ref.val)
+
+        ctx = int(db.stats["ctx"][0])
+        mid = int(db.stats["mid"][0])
+        prof, vals = cl.stripe(ctx, mid)
+        rprof, rvals = db.stripe(ctx, mid)
+        np.testing.assert_array_equal(prof, rprof)
+        np.testing.assert_allclose(vals, rvals)
+
+        assert cl.value(0, ctx, mid) == pytest.approx(db.value(0, ctx, mid))
+        assert [h.ctx for h in cl.topk(0, k=4)] == \
+            [h.ctx for h in topk_hot_paths(db, 0, k=4)]
+        win = cl.window(0, 0.0, 0.5)
+        np.testing.assert_allclose(
+            win.time, samples_in_window(db, 0, 0.0, 0.5).time)
+
+
+def test_http_concurrent_clients(http_server):
+    from repro.serve.client import QueryClient
+    srv, db = http_server
+    host, port = srv.address
+    reqs = _mixed_requests(db, 60, seed=3)
+    ref_srv = QueryServer(db)
+    reference = [ref_srv.serve_one(r) for r in reqs]
+    results: list = [None] * len(reqs)
+
+    def client(k):
+        with QueryClient(host, port) as cl:
+            chunk = reqs[k * 15:(k + 1) * 15]
+            out = []
+            for lo in range(0, len(chunk), 5):
+                out.extend(cl.batch(chunk[lo:lo + 5]))
+            results[k * 15:(k + 1) * 15] = out
+
+    threads = [threading.Thread(target=client, args=(k,)) for k in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    for got, ref in zip(results, reference):
+        _assert_result_equal(got, ref)
+
+
+def test_http_error_surfaces(http_server):
+    from repro.serve.client import (QueryClient, RequestFailed,
+                                    TransportError)
+    srv, _ = http_server
+    host, port = srv.address
+    with QueryClient(host, port) as cl:
+        # unknown op -> structured per-request error in a batch
+        res = cl.batch([QueryRequest(op="nope"),
+                        QueryRequest(op="topk", metric=0, k=2)])
+        assert isinstance(res[0], QueryError)
+        assert res[0].error == "ValueError"
+        assert len(res[1]) == 2
+        # single-op convenience raises typed
+        with pytest.raises(RequestFailed):
+            cl.profile(10**6)
+        # malformed envelope -> 400, not a hang or a 500
+        import http.client as hc
+        import json as _json
+        conn = hc.HTTPConnection(host, port, timeout=10)
+        conn.request("POST", "/v1/query", body=b"{not json",
+                     headers={"Content-Type": "application/json"})
+        assert conn.getresponse().status == 400
+        conn.close()
+        # non-numeric timeout_ms is a 400 too (never a retryable 500)
+        conn = hc.HTTPConnection(host, port, timeout=10)
+        conn.request("POST", "/v1/query", headers={"Content-Type":
+                                                   "application/json"},
+                     body=_json.dumps({"requests": [{"op": "topk",
+                                                     "metric": 0}],
+                                       "timeout_ms": "fast"}).encode())
+        resp = conn.getresponse()
+        assert resp.status == 400
+        resp.read()
+        conn.close()
+        with pytest.raises(TransportError) as exc:
+            cl._roundtrip("GET", "/definitely/not/here")
+        assert exc.value.status == 404
+
+
+def test_http_413_on_oversized_call(db_dir):
+    """A call that can never be admitted is a client error (413), not a
+    retry-forever 429."""
+    from repro.serve.client import QueryClient, TransportError
+    from repro.serve.http import QueryHTTPServer
+    with Database(db_dir) as handle:
+        with QueryHTTPServer(handle, port=0, max_queue=4,
+                             warm_bytes=0) as srv:
+            host, port = srv.address
+            with QueryClient(host, port) as cl:
+                with pytest.raises(TransportError) as exc:
+                    cl.batch([QueryRequest(op="topk", metric=0, k=1)] * 8)
+                assert exc.value.status == 413
+                # the server keeps serving after rejecting
+                assert cl.health()["status"] == "ok"
+                assert len(cl.topk(0, k=2)) == 2
+
+
+def test_http_429_on_overflow(db_dir):
+    from repro.serve.client import QueryClient, ServerOverloaded
+    from repro.serve.http import QueryHTTPServer
+    with Database(db_dir) as handle:
+        with QueryHTTPServer(handle, port=0, max_queue=1, n_workers=1,
+                             warm_bytes=0) as srv:
+            stall_srv = _StallServer(handle)
+            srv.scheduler.server = stall_srv  # stallable engine double
+            host, port = srv.address
+
+            def post(op):
+                with QueryClient(host, port) as c:
+                    return c.batch([QueryRequest(op=op, metric=0, k=1)])
+
+            occupant = threading.Thread(target=post, args=("stall",))
+            occupant.start()
+            time.sleep(0.1)            # single worker now held by the stall
+            queued = threading.Thread(target=post, args=("topk",))
+            queued.start()
+            time.sleep(0.1)            # admission queue now at its bound
+            try:
+                with QueryClient(host, port) as cl:
+                    with pytest.raises(ServerOverloaded) as exc:
+                        cl.batch([QueryRequest(op="topk", metric=0, k=1)])
+                    assert exc.value.retry_after_s > 0
+            finally:
+                stall_srv.release.set()
+            occupant.join(10)
+            queued.join(10)
+
+
+def test_http_metrics_endpoint(http_server):
+    from repro.serve.client import QueryClient
+    srv, _ = http_server
+    host, port = srv.address
+    with QueryClient(host, port) as cl:
+        cl.topk(0, k=3)
+        cl.profile(0)
+        m = cl.metrics()
+    assert m["warm"] is not None and m["warm"]["loaded"] > 0
+    assert {"hits", "misses", "evictions"} <= set(m["cache"])
+    sched = m["scheduler"]
+    assert sched["completed"] >= 2 and sched["queue_depth"] == 0
+    assert "topk" in sched["latency"]
+    assert sched["latency"]["topk"]["n"] >= 1
+    assert m["db_counters"]["pms_plane_loads"] >= 0
+
+
+def test_unbatched_server_mode(db_dir):
+    """batching=False serves directly on connection threads (the baseline
+    mode of benchmarks/serve_load.py) with identical results."""
+    from repro.serve.client import QueryClient
+    from repro.serve.http import QueryHTTPServer
+    with Database(db_dir) as handle:
+        with QueryHTTPServer(handle, port=0, batching=False,
+                             warm_bytes=0) as srv:
+            host, port = srv.address
+            with QueryClient(host, port) as cl:
+                assert cl.health()["batching"] is False
+                assert [h.ctx for h in cl.topk(0, k=3)] == \
+                    [h.ctx for h in topk_hot_paths(handle, 0, k=3)]
+                assert cl.metrics()["scheduler"] is None
