@@ -9,7 +9,8 @@ Query service over a completed analysis database::
 
     PYTHONPATH=src python -m repro.launch.serve query-server runs/db \
         --port 8422 --max-batch 16 --max-wait-ms 2 --max-queue 256 \
-        --cache-mb 64 [--warm-mb 32 | --no-warm] [--no-batching]
+        --cache-mb 64 [--warm-mb 32 | --no-warm] [--no-batching] \
+        [--shards 4]
 
 The query server prints one JSON line with its URL and warming report,
 then blocks until SIGINT.
@@ -42,7 +43,18 @@ def _query_server_main(argv):
                          "worker; small positive values trade latency "
                          "for fuller windows under sparse bursty traffic)")
     ap.add_argument("--max-queue", type=int, default=256,
-                    help="admission queue bound; overflow answers 429")
+                    help="admission queue bound (per shard when sharded); "
+                         "overflow answers 429")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="N > 0 serves from N worker processes (one "
+                         "Database + plane cache each, consistent-hash "
+                         "routed by plane, supervisor respawns dead "
+                         "workers); 0 = single-process")
+    ap.add_argument("--shard-slab-mb", type=int, default=4,
+                    help="shm slab size for sharded plane payloads")
+    ap.add_argument("--no-adaptive-wait", action="store_true",
+                    help="always hold batch windows for --max-wait-ms "
+                         "instead of flushing when a worker idles")
     ap.add_argument("--workers", type=int, default=4,
                     help="window-serving workers on the runtime executor")
     ap.add_argument("--executor", default="threads",
@@ -70,8 +82,11 @@ def _query_server_main(argv):
                             max_queue=args.max_queue,
                             executor=args.executor, n_workers=args.workers,
                             default_timeout_s=args.timeout_s,
-                            warm_bytes=warm_bytes) as srv:
+                            adaptive_wait=not args.no_adaptive_wait,
+                            warm_bytes=warm_bytes, shards=args.shards,
+                            shard_slab_bytes=args.shard_slab_mb << 20) as srv:
         print(json.dumps({"url": srv.url, "batching": srv.batching,
+                          "shards": srv.shards,
                           "profiles": db.n_profiles,
                           "contexts": db.n_contexts,
                           "warm": srv.warm_report}), flush=True)

@@ -51,6 +51,7 @@ class Database:
 
     def __init__(self, db_dir=None, *, pms_path=None, cms_path=None,
                  trace_path=None, cache_bytes: int = 64 << 20):
+        self.db_dir = None if db_dir is None else str(db_dir)
         if db_dir is not None:
             db_dir = str(db_dir)
             pms_path = pms_path or os.path.join(db_dir, PMS_NAME)

@@ -65,6 +65,16 @@ def select_contexts(db: Database, *, kind: int | None = None,
     return np.flatnonzero(keep)
 
 
+def _within_mask(ctx_ids: np.ndarray, within) -> np.ndarray:
+    """Membership of ``ctx_ids`` in a ``within`` restriction, which is
+    either an array of context ids or a boolean ownership mask indexed by
+    context id (the shard fast path: O(n) gather instead of a sort)."""
+    w = np.asarray(within)
+    if w.dtype == np.bool_:
+        return w[ctx_ids.astype(np.int64)]
+    return np.isin(ctx_ids, w)
+
+
 def threshold_contexts(db: Database, metric, *, min_value: float,
                        stat: str = "sum", inclusive: bool = False,
                        within: np.ndarray | None = None
@@ -73,13 +83,14 @@ def threshold_contexts(db: Database, metric, *, min_value: float,
 
     Runs entirely on the summary-statistics section (paper §4.1.2); returns
     ``(ctx_ids, stat_values)`` sorted by descending value.  ``within``
-    optionally restricts to a prior :func:`select_contexts` result.
+    optionally restricts to a prior :func:`select_contexts` result (id
+    array or boolean mask over context ids).
     """
     ctx_ids, rows = db.metric_entries(metric, inclusive=inclusive)
     vals = db.stats[stat][rows]
     keep = vals >= min_value
     if within is not None:
-        keep &= np.isin(ctx_ids, within)
+        keep &= _within_mask(ctx_ids, within)
     ctx_ids, vals = ctx_ids[keep], vals[keep]
     order = np.lexsort((ctx_ids, -vals))  # value desc, ctx asc tiebreak
     return ctx_ids[order], vals[order]
@@ -133,17 +144,25 @@ def stripe_select(db: Database, metric, *, min_value: float = 0.0,
 
 def topk_hot_paths(db: Database, metric, k: int = 10, *,
                    inclusive: bool = True, stat: str = "sum",
-                   leaves_only: bool = False) -> list[HotPath]:
+                   leaves_only: bool = False,
+                   within: np.ndarray | None = None) -> list[HotPath]:
     """The k hottest call paths by inclusive (default) or exclusive cost.
 
     Ranking reads only summary statistics; the deterministic
     ``(-value, ctx)`` order makes results identical across executor
     backends for byte-identical databases.  ``leaves_only`` drops interior
     nodes (whose inclusive cost double-counts their subtrees) — useful for
-    flat profiles.
+    flat profiles.  ``within`` restricts ranking to a context subset — id
+    array or boolean mask over context ids (how a shard computes its
+    partial top-k over only the contexts it owns: the global top-k is a
+    merge of per-shard partials because ``within`` sets partition the
+    contexts).
     """
     ctx_ids, rows = db.metric_entries(metric, inclusive=inclusive)
     vals = db.stats[stat][rows]
+    if within is not None:
+        keep = _within_mask(ctx_ids, within)
+        ctx_ids, vals = ctx_ids[keep], vals[keep]
     if leaves_only and ctx_ids.size:
         parents = set(int(p) for p in db.tree.parent[1:])
         keep = np.array([int(c) not in parents for c in ctx_ids])

@@ -3,23 +3,33 @@
 * :class:`ServeEngine` / :class:`QueryServer` — in-process batch engines
   (:mod:`repro.serve.engine`);
 * :class:`BatchScheduler` — cross-request micro-batch windows with
-  admission control and deadlines (:mod:`repro.serve.scheduler`);
+  per-shard admission control, adaptive wait, and deadlines
+  (:mod:`repro.serve.scheduler`);
+* :class:`ShardedQueryServer` — multi-process sharded serving with
+  consistent-hash plane routing, shm payload transport, and a
+  respawn-and-replay supervisor (:mod:`repro.serve.shard`);
 * :class:`QueryHTTPServer` / :class:`QueryClient` — the stdlib HTTP
-  transport and its typed client (:mod:`repro.serve.http` / ``client``);
+  transport and its typed client (:mod:`repro.serve.http` / ``client``),
+  with :class:`RetryPolicy` for client-side backoff;
 * :func:`warm_cache` — stats-driven startup plane preloading
   (:mod:`repro.serve.warm`).
 """
-from repro.serve.client import QueryClient, RequestFailed, ServerOverloaded
+from repro.serve.client import (QueryClient, RequestFailed,
+                                RetryBudgetExceeded, RetryPolicy,
+                                ServerOverloaded, TransportError)
 from repro.serve.engine import (QueryError, QueryRequest, QueryServer,
                                 Request, ServeEngine)
 from repro.serve.http import QueryHTTPServer
 from repro.serve.scheduler import BatchScheduler, Overloaded
+from repro.serve.shard import ConsistentHashRing, ShardedQueryServer
 from repro.serve.warm import plan_warm, warm_cache
 
 __all__ = [
     "ServeEngine", "Request",
     "QueryServer", "QueryRequest", "QueryError",
     "BatchScheduler", "Overloaded",
+    "ShardedQueryServer", "ConsistentHashRing",
     "QueryHTTPServer", "QueryClient", "ServerOverloaded", "RequestFailed",
+    "TransportError", "RetryPolicy", "RetryBudgetExceeded",
     "plan_warm", "warm_cache",
 ]

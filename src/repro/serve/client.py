@@ -12,6 +12,12 @@ maps transport-level failures to typed exceptions:
   structured :class:`~repro.serve.engine.QueryError` (batch calls return
   the error objects inline instead, preserving slot alignment).
 
+:class:`RetryPolicy` (and :meth:`QueryClient.batch_with_retry`) adds
+client-side retry-with-backoff: 429s honor the server's ``Retry-After``
+hint, transient transport failures back off exponentially with full
+jitter, non-retryable 4xx fail fast, and a retry budget bounds the total
+time spent.
+
 Not thread-safe: it is one socket.  Give each load-generator client its
 own instance (they are cheap) — exactly what ``benchmarks/serve_load.py``
 does.
@@ -20,6 +26,9 @@ from __future__ import annotations
 
 import http.client
 import json
+import random
+import time
+from dataclasses import dataclass, field
 
 from repro.serve.engine import QueryError, QueryRequest
 from repro.serve.wire import request_to_wire, result_from_wire
@@ -43,6 +52,69 @@ class TransportError(RuntimeError):
     def __init__(self, status: int, body: dict):
         super().__init__(f"HTTP {status}: {body}")
         self.status, self.body = status, body
+
+
+class RetryBudgetExceeded(RuntimeError):
+    """The retry policy ran out of budget/attempts; carries the last
+    transport-level failure as ``__cause__``."""
+
+
+@dataclass
+class RetryPolicy:
+    """Retry-with-backoff for transient service failures.
+
+    * **what retries**: 429 (:class:`ServerOverloaded` — honoring the
+      server's ``Retry-After`` hint as a floor), 5xx responses, and socket
+      -level :class:`OSError`/``http.client`` failures (server restarting);
+    * **what fails fast**: every other 4xx (:class:`TransportError` with
+      ``400 <= status < 500``) — the request is structurally wrong and
+      will never succeed, so retrying would loop forever on e.g. a 413;
+    * **backoff**: exponential from ``base_s`` capped at ``max_backoff_s``
+      with full jitter (``uniform(0, wait)``) so a herd of clients bounced
+      by the same overload spike does not re-arrive in lockstep;
+    * **budget**: total time spent (including the next planned sleep) is
+      bounded by ``budget_s`` and attempts by ``max_attempts`` — whichever
+      runs out first raises :class:`RetryBudgetExceeded` from the last
+      failure.
+    """
+
+    max_attempts: int = 6
+    budget_s: float = 30.0
+    base_s: float = 0.05
+    max_backoff_s: float = 2.0
+    jitter: bool = True
+    rng: random.Random = field(default_factory=random.Random)
+
+    def backoff_s(self, attempt: int, retry_after_s: float = 0.0) -> float:
+        """Sleep before retry ``attempt`` (0-based), >= the server hint."""
+        wait = min(self.base_s * (2 ** attempt), self.max_backoff_s)
+        if self.jitter:
+            wait = self.rng.uniform(0.0, wait)
+        return max(wait, float(retry_after_s))
+
+    def call(self, fn, *, sleep=time.sleep):
+        """Run ``fn()`` under this policy; returns its result."""
+        t0 = time.monotonic()
+        last: Exception | None = None
+        for attempt in range(max(1, self.max_attempts)):
+            try:
+                return fn()
+            except ServerOverloaded as e:
+                last, hint = e, e.retry_after_s
+            except TransportError as e:
+                if 400 <= e.status < 500:
+                    raise  # non-retryable: the request itself is wrong
+                last, hint = e, 0.0
+            except (http.client.HTTPException, ConnectionError, OSError) as e:
+                last, hint = e, 0.0
+            wait = self.backoff_s(attempt, hint)
+            if (attempt + 1 >= self.max_attempts
+                    or time.monotonic() - t0 + wait > self.budget_s):
+                break
+            sleep(wait)
+        raise RetryBudgetExceeded(
+            f"gave up after {attempt + 1} attempt(s) / "
+            f"{time.monotonic() - t0:.2f}s") from last
 
 
 class QueryClient:
@@ -102,6 +174,17 @@ class QueryClient:
             body["timeout_ms"] = timeout_ms
         obj = self._roundtrip("POST", "/v1/query", body)
         return [result_from_wire(r) for r in obj["results"]]
+
+    def batch_with_retry(self, requests: list[QueryRequest], *,
+                         policy: RetryPolicy | None = None,
+                         timeout_ms: float | None = None,
+                         sleep=time.sleep) -> list:
+        """:meth:`batch` wrapped in a :class:`RetryPolicy` (default policy
+        when none given): transparently rides out 429 bursts and server
+        restarts, fails fast on non-retryable 4xx."""
+        policy = policy or RetryPolicy()
+        return policy.call(
+            lambda: self.batch(requests, timeout_ms=timeout_ms), sleep=sleep)
 
     def _one(self, req: QueryRequest):
         res = self.batch([req])[0]

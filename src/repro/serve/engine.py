@@ -82,7 +82,8 @@ class QueryRequest:
 
     ``op`` selects the shape: ``"profile"`` (all metrics of profile
     ``pid``), ``"stripe"`` (metric across profiles of context ``ctx``),
-    ``"value"`` (point lookup), ``"topk"`` (hot paths), ``"window"``
+    ``"value"`` (point lookup), ``"topk"`` (hot paths), ``"threshold"``
+    (contexts whose summary stat clears ``params["min_value"]``), ``"window"``
     (trace samples of ``pid`` in ``[t0, t1)``).
     """
 
@@ -126,7 +127,8 @@ class QueryServer:
 
     # -- single-request dispatch -------------------------------------------
     def submit(self, req: QueryRequest):
-        from repro.query import samples_in_window, topk_hot_paths
+        from repro.query import (samples_in_window, threshold_contexts,
+                                 topk_hot_paths)
         db = self.db
         if req.op == "profile":
             return db.profile_metrics(req.pid)
@@ -138,12 +140,18 @@ class QueryServer:
         if req.op == "topk":
             return topk_hot_paths(db, req.metric, k=req.k,
                                   inclusive=req.inclusive, **req.params)
+        if req.op == "threshold":
+            params = dict(req.params)
+            return threshold_contexts(
+                db, req.metric, min_value=float(params.pop("min_value", 0.0)),
+                inclusive=req.inclusive, **params)
         if req.op == "window":
             return samples_in_window(db, req.pid, req.t0, req.t1)
         raise ValueError(f"unknown query op {req.op!r}")
 
     # -- batched serving ----------------------------------------------------
-    def _locality_key(self, req: QueryRequest):
+    @staticmethod
+    def _locality_key(req: QueryRequest):
         """The plane a request will pull through the cache."""
         try:
             if req.op == "profile" or req.op == "window":

@@ -3,7 +3,11 @@
 One ``ThreadingHTTPServer`` in front of one shared
 :class:`~repro.query.Database`; connection threads parse/serialize, the
 :class:`~repro.serve.scheduler.BatchScheduler` owns execution so requests
-from *different* connections coalesce into plane-locality windows.
+from *different* connections coalesce into plane-locality windows.  With
+``shards=N`` the execution engine is a
+:class:`~repro.serve.shard.ShardedQueryServer` — N worker processes behind
+the same transport, consistent-hash routed by plane — which lifts the GIL
+ceiling on decode-heavy traffic.
 
 Endpoints::
 
@@ -32,6 +36,7 @@ from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from repro.query.database import Database
 from repro.serve.engine import QueryError, QueryServer
 from repro.serve.scheduler import BatchScheduler, Overloaded
+from repro.serve.shard import ShardedQueryServer
 from repro.serve.warm import warm_cache
 from repro.serve.wire import request_from_wire, result_to_wire
 
@@ -45,22 +50,42 @@ class QueryHTTPServer:
     ``QueryHTTPServer(db).start()`` binds (``port=0`` picks a free port),
     optionally preloads the hottest planes (``warm_bytes``), and serves
     until :meth:`stop`.  Also usable as a context manager.
+
+    ``shards=N`` (N >= 1) swaps the in-process engine for a
+    :class:`~repro.serve.shard.ShardedQueryServer`: N worker processes,
+    each with its own Database handle and plane cache, consistent-hash
+    routed by plane; the scheduler's admission queues and the warming
+    budget become per-shard.  ``shards=0`` (default) keeps single-process
+    serving.
     """
 
     def __init__(self, db: Database, *, host: str = "127.0.0.1",
                  port: int = 0, batching: bool = True, max_batch: int = 16,
                  max_wait_ms: float = 0.0, max_queue: int = 256,
                  executor: str = "threads", n_workers: int = 4,
-                 default_timeout_s: float = 30.0,
-                 warm_bytes: int | None = 0):
+                 default_timeout_s: float = 30.0, adaptive_wait: bool = True,
+                 warm_bytes: int | None = 0, shards: int = 0,
+                 shard_cache_bytes: int | None = None,
+                 shard_slab_bytes: int = 4 << 20, shard_slabs: int = 8):
         self.db = db
-        self.engine = QueryServer(db)
+        self.shards = max(0, int(shards))
+        self.sharded: ShardedQueryServer | None = None
+        if self.shards:
+            self.sharded = ShardedQueryServer(
+                db.db_dir, self.shards,
+                cache_bytes=shard_cache_bytes or db.cache.capacity_bytes,
+                warm_bytes=warm_bytes, n_slabs=shard_slabs,
+                slab_bytes=shard_slab_bytes)
+            self.engine = self.sharded
+        else:
+            self.engine = QueryServer(db)
         self.host, self._port = host, int(port)
         self.batching = bool(batching)
         self.scheduler = BatchScheduler(
             self.engine, max_batch=max_batch, max_wait_ms=max_wait_ms,
             max_queue=max_queue, executor=executor, n_workers=n_workers,
-            default_timeout_s=default_timeout_s) if self.batching else None
+            default_timeout_s=default_timeout_s,
+            adaptive_wait=adaptive_wait) if self.batching else None
         self._warm_bytes = warm_bytes
         self.warm_report: dict | None = None
         self._httpd: ThreadingHTTPServer | None = None
@@ -72,7 +97,11 @@ class QueryHTTPServer:
     def start(self) -> "QueryHTTPServer":
         if self._httpd is not None:
             return self
-        if self._warm_bytes is None or self._warm_bytes > 0:
+        if self.sharded is not None:
+            # workers warm their own caches for only the planes they own
+            self.sharded.start()
+            self.warm_report = {"sharded": self.sharded.warm_reports()}
+        elif self._warm_bytes is None or self._warm_bytes > 0:
             self.warm_report = warm_cache(self.db, self._warm_bytes or None)
         if self.scheduler is not None:
             self.scheduler.start()
@@ -101,6 +130,8 @@ class QueryHTTPServer:
             self._thread = None
         if self.scheduler is not None:
             self.scheduler.stop()
+        if self.sharded is not None:
+            self.sharded.close()
 
     @property
     def address(self) -> tuple[str, int]:
@@ -121,6 +152,7 @@ class QueryHTTPServer:
     # -- endpoint bodies ------------------------------------------------------
     def health(self) -> dict:
         return {"status": "ok", "batching": self.batching,
+                "shards": self.shards,
                 "profiles": self.db.n_profiles,
                 "contexts": self.db.n_contexts,
                 "uptime_s": round(time.monotonic() - self._started_t, 3)}
@@ -133,6 +165,8 @@ class QueryHTTPServer:
                "uptime_s": round(time.monotonic() - self._started_t, 3)}
         out["scheduler"] = (self.scheduler.metrics()
                             if self.scheduler is not None else None)
+        out["shards"] = (self.sharded.metrics()
+                         if self.sharded is not None else None)
         return out
 
     def serve_call(self, body: dict) -> dict:

@@ -14,12 +14,27 @@ open-loop load":
 * **micro-batch windows** — workers collect up to ``max_batch`` requests,
   waiting at most ``max_wait_ms`` after the first arrival, then serve the
   window in plane-locality order through :meth:`QueryServer.serve_one`;
+* **adaptive windows** — with ``adaptive_wait`` (the default), a worker
+  holds a window open for ``max_wait_ms`` only while every *other* worker
+  is busy serving: if a peer is idle-parked, new arrivals would be picked
+  up immediately anyway, so waiting buys no batching — the window flushes
+  at once and low-load p50 stays at service time, not service + window;
 * **deadlines** — every request carries one; a request that expires while
   queued resolves to a ``QueryError("DeadlineExceeded")`` without touching
   the stores (shedding stale work is the other half of backpressure);
 * **runtime executor** — the window-serving loops run on a
   :mod:`repro.runtime` executor (``threads`` by default, ``serial`` for
   deterministic debugging), the same substrate the aggregator uses.
+
+**Sharded backends** (:class:`~repro.serve.shard.ShardedQueryServer`)
+swap the execution model: parent-side windows would only re-serialize
+what the worker processes already parallelize, so :meth:`submit_many`
+dispatches straight from the submitting thread through the server's
+``serve_window_async`` (which dedupes the call and sends one batch
+message per shard) and chains the returned futures.  Admission control
+becomes a *per-shard* bound on dispatched-but-unanswered requests — one
+hot shard rejects while the others keep admitting — and batching across
+calls falls out of each worker's own plane cache.
 
 Results are delivered through ``concurrent.futures.Future``s; per-request
 failures resolve (not raise) as :class:`~repro.serve.engine.QueryError`,
@@ -105,25 +120,48 @@ class BatchScheduler:
     *opportunistic* batching — serve everything already queued, never
     stall an idle worker.  A small positive wait trades first-request
     latency for fuller windows (better plane dedup) when traffic is
-    sparse but bursty.
+    sparse but bursty; ``adaptive_wait`` (default) skips the wait
+    whenever an idle peer worker would make it pure latency.
+
+    With a sharded server, ``max_queue`` bounds each shard's
+    dispatched-but-unanswered depth instead of a parent queue, and the
+    executor/window knobs are inert (dispatch happens on the submitting
+    thread; the worker processes do the batching).
     """
 
     def __init__(self, server: QueryServer, *, max_batch: int = 16,
                  max_wait_ms: float = 0.0, max_queue: int = 256,
                  executor: str = "threads", n_workers: int = 4,
-                 default_timeout_s: float = 30.0):
+                 default_timeout_s: float = 30.0,
+                 adaptive_wait: bool = True):
         self.server = server
         self.max_batch = max(1, int(max_batch))
         self.max_wait_s = max(0.0, float(max_wait_ms)) / 1e3
         self.max_queue = max(1, int(max_queue))
         self.default_timeout_s = float(default_timeout_s)
+        self.adaptive_wait = bool(adaptive_wait)
         self._executor_name = executor
         self.n_workers = 1 if executor == "serial" else max(1, int(n_workers))
 
+        # sharded-backend hooks (absent on in-process QueryServers)
+        self.n_shards = max(1, int(getattr(server, "n_shards", 1)))
+        self._shard_of = getattr(server, "shard_of", None)
+        self._serve_window_async = getattr(server, "serve_window_async",
+                                           None)
+        self._direct = (self._serve_window_async is not None
+                        and self._shard_of is not None)
+
+        # direct-mode admission ledger: requests admitted per shard and
+        # not yet completed (exact under self._lock — the server-side
+        # inflight gauge lags dispatch, so bounding on it alone would let
+        # concurrent submitters overshoot the bound)
+        self._admitted = [0] * self.n_shards
         self._q: deque[_Pending] = deque()
         self._lock = threading.Lock()
         self._cond = threading.Condition(self._lock)
         self._stopped = True
+        self._idle = 0     # workers parked waiting for any work
+        self._holding = 0  # workers holding a window open on max_wait
         self._runner: threading.Thread | None = None
         self._ewma_service_s = 1e-3  # per-request service time estimate
 
@@ -137,6 +175,12 @@ class BatchScheduler:
     # -- lifecycle -----------------------------------------------------------
     def start(self) -> "BatchScheduler":
         """Spin up the window-serving loops on the runtime executor."""
+        if self._direct:
+            # sharded backend: no parent-side serving loops to start —
+            # dispatch happens inline on submitting threads
+            with self._lock:
+                self._stopped = False
+            return self
         from repro.runtime import get_executor
         # resolve the executor BEFORE flipping state: a bad executor name
         # must not leave a "running" scheduler with zero workers
@@ -199,10 +243,18 @@ class BatchScheduler:
     # -- submission (admission control) --------------------------------------
     def depth(self) -> int:
         with self._lock:
-            return len(self._q)
+            return len(self._q) + self._inflight_depth()
+
+    def _inflight_depth(self) -> int:
+        return sum(self._admitted) if self._direct else 0
 
     def _retry_after_locked(self) -> float:
-        est = len(self._q) * self._ewma_service_s / self.n_workers
+        if self._direct:
+            # a hot shard's backlog drains through its one worker
+            # process; the parent thread count is irrelevant to it
+            est = max(self._admitted) * self._ewma_service_s
+        else:
+            est = len(self._q) * self._ewma_service_s / self.n_workers
         return max(0.05, min(est, 30.0))
 
     def retry_after_s(self) -> float:
@@ -223,6 +275,8 @@ class BatchScheduler:
         """
         timeout_s = self.default_timeout_s if timeout_s is None else timeout_s
         now = time.monotonic()
+        if self._direct:
+            return self._submit_direct(list(reqs), now, timeout_s)
         with self._cond:
             if self._stopped:
                 raise RuntimeError("scheduler is not running")
@@ -240,14 +294,104 @@ class BatchScheduler:
             self._cond.notify(min(len(reqs), self.n_workers))
         return out
 
+    # -- sharded direct dispatch ---------------------------------------------
+    def _submit_direct(self, reqs: list[QueryRequest], now: float,
+                       timeout_s: float) -> list[Future]:
+        """Admission + inline async dispatch for a sharded backend.
+
+        The bound is per shard, on dispatched-but-unanswered depth: a call
+        is rejected only when a shard it targets is saturated, so a hot
+        shard cannot starve admission for traffic bound elsewhere.
+        Scatter requests count against every shard (they run on all).
+        """
+        targets = []
+        incoming: dict[int, int] = {}
+        for req in reqs:
+            s = self._shard_of(req)
+            shards = tuple(range(self.n_shards)) if s is None else (int(s),)
+            targets.append(shards)
+            for t in shards:
+                incoming[t] = incoming.get(t, 0) + 1
+        with self._lock:
+            if self._stopped:
+                raise RuntimeError("scheduler is not running")
+            if any(self._admitted[s] + k > self.max_queue
+                   for s, k in incoming.items()):
+                self.counters["rejected"] += len(reqs)
+                raise Overloaded(self._retry_after_locked())
+            for s, k in incoming.items():
+                self._admitted[s] += k  # released in _chain_cb
+            self.counters["submitted"] += len(reqs)
+            self.counters["batches"] += 1
+            self.counters["batched_requests"] += len(reqs)
+        try:
+            server_futs = self._serve_window_async(reqs)
+        except BaseException:
+            with self._lock:  # dispatch failed: release the admission
+                for s, k in incoming.items():
+                    self._admitted[s] -= k
+            raise
+        out = []
+        n = max(len(reqs), 1)
+        for req, sf, shards in zip(reqs, server_futs, targets):
+            p = _Pending(req, Future(), now, now + timeout_s)
+            sf.add_done_callback(self._chain_cb(p, now, n, shards))
+            out.append(p.future)
+        return out
+
+    def _chain_cb(self, p: _Pending, t0: float, window_n: int,
+                  shards: tuple[int, ...] = ()):
+        """Completion hook for one directly-dispatched request: forward
+        the shard result to the caller's future (on the shard pump
+        thread) and do the per-request bookkeeping."""
+
+        def done(f) -> None:
+            exc = f.exception()
+            res = (QueryError(op=str(getattr(p.req, "op", "?")),
+                              error=type(exc).__name__, message=str(exc))
+                   if exc is not None else f.result())
+            if not p.future.cancelled():
+                self._resolve(p.future, res)
+            dt = time.monotonic() - t0
+            with self._lock:
+                for s in shards:
+                    self._admitted[s] -= 1
+                self.counters["completed"] += 1
+                if isinstance(res, QueryError):
+                    self.counters["errors"] += 1
+                op = str(getattr(p.req, "op", "?"))
+                self.latency.setdefault(op, LatencyHistogram()).observe(dt)
+                self.queue_wait.observe(max(t0 - p.enq_t, 0.0))
+                # call completion time / call size approximates the
+                # per-request service time for the drain estimate
+                self._ewma_service_s += 0.05 * (dt / window_n
+                                                - self._ewma_service_s)
+
+        return done
+
     # -- window serving -------------------------------------------------------
     def _collect(self) -> list[_Pending] | None:
-        """Block for the next micro-batch window; ``None`` on shutdown."""
+        """Block for the next micro-batch window; ``None`` on shutdown.
+
+        The wait loop honors ``adaptive_wait``: holding a window open only
+        pays when every other worker is busy serving — an idle peer would
+        absorb new arrivals instantly, so the window flushes immediately.
+        """
         with self._cond:
             while not self._q:
                 if self._stopped:
                     return None
-                self._cond.wait()
+                self._idle += 1
+                if self._holding:
+                    # a newly idle peer invalidates any held-open window
+                    # (adaptive rule) — wake the holders to re-check;
+                    # gated on _holding so parked idle workers don't
+                    # wake each other in an endless ping-pong
+                    self._cond.notify_all()
+                try:
+                    self._cond.wait()
+                finally:
+                    self._idle -= 1
             batch = [self._q.popleft()]
             window_end = time.monotonic() + self.max_wait_s
             while len(batch) < self.max_batch:
@@ -257,7 +401,13 @@ class BatchScheduler:
                 remaining = window_end - time.monotonic()
                 if remaining <= 0 or self._stopped:
                     break
-                self._cond.wait(remaining)
+                if self.adaptive_wait and self._idle > 0:
+                    break  # an idle peer makes waiting pure latency
+                self._holding += 1
+                try:
+                    self._cond.wait(remaining)
+                finally:
+                    self._holding -= 1
             return batch
 
     def _execute(self, batch: list[_Pending]) -> None:
@@ -316,10 +466,15 @@ class BatchScheduler:
     def metrics(self) -> dict:
         with self._lock:
             out = dict(self.counters)
-            out["queue_depth"] = len(self._q)
+            out["queue_depth"] = len(self._q) + self._inflight_depth()
+            out["n_shards"] = self.n_shards
+            out["direct_dispatch"] = self._direct
+            if self._direct:
+                out["admitted_per_shard"] = list(self._admitted)
             out["max_queue"] = self.max_queue
             out["max_batch"] = self.max_batch
             out["max_wait_ms"] = self.max_wait_s * 1e3
+            out["adaptive_wait"] = self.adaptive_wait
             out["workers"] = self.n_workers
             out["executor"] = self._executor_name
             out["ewma_service_ms"] = self._ewma_service_s * 1e3

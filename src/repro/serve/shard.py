@@ -1,0 +1,841 @@
+"""Sharded multi-process query service: escape the GIL for decode-heavy load.
+
+The in-process :class:`~repro.serve.engine.QueryServer` serves every plane
+decode inside one Python process; past a few concurrent decode-heavy
+clients the GIL is the ceiling (the ROADMAP limiter this module removes).
+:class:`ShardedQueryServer` spawns ``n_shards`` worker *processes*, each
+owning a full :class:`repro.query.Database` handle (its own mmap + decoded
+-plane LRU), and routes every request with a consistent-hash ring keyed by
+:meth:`QueryServer._locality_key` — so each plane is decoded and cached by
+exactly one worker, and the per-worker LRU only ever holds planes the
+router can send it.
+
+Topology::
+
+    clients -> BatchScheduler (per-shard admission queues)
+                 |  serve_window(reqs): one batch message per shard
+                 v
+             ShardedQueryServer (parent)
+               ring: locality_key -> shard          supervisor: respawn +
+               payloads: shm slab arena per shard   replay on worker death
+                 |             |             |
+               worker 0      worker 1      worker N-1   (processes)
+               Database      Database      Database
+               own LRU       own LRU       own LRU
+
+* **routing** — ``profile``/``window`` requests hash on ``(0, pid)``,
+  ``stripe``/``value`` on ``(1, ctx)``; the ring is stable under shard-count
+  changes (only ~1/N of keys move, and every moved key moves to the *new*
+  shard — the classic consistent-hashing property, property-tested in
+  ``tests/test_shard.py``).
+* **scatter–gather** — summary-space queries (``topk``, ``threshold``)
+  fan out to every shard restricted to the contexts it owns
+  (``within=`` on the select functions) and the parent merges partials in
+  the same deterministic ``(-value, ctx)`` order, so results are identical
+  to single-process serving.
+* **payloads** — plane-sized results return through a parent-owned
+  :class:`~repro.runtime.shm.SlabArena` (the PR 3 slab transport): the
+  worker serializes straight into the slab and ships a tiny descriptor;
+  only results that outgrow their slab fall back to pickling through the
+  response queue.  Workers never *create* segments, so a SIGKILL'd worker
+  cannot leak ``/dev/shm``.
+* **fault tolerance** — a per-shard pump thread doubles as supervisor:
+  when a worker dies it drains the responses that did arrive, respawns the
+  worker (same ring position, fresh Database), and replays every
+  unanswered in-flight request to the replacement — a killed worker costs
+  latency, never wrong answers.  A request that outlives ``replay_limit``
+  respawns (it is probably what keeps killing workers) resolves to a
+  structured ``QueryError("WorkerLost")`` instead of looping forever.
+"""
+from __future__ import annotations
+
+import hashlib
+import itertools
+import multiprocessing as mp
+import os
+import queue as queue_mod
+import sys
+import threading
+import time
+from concurrent.futures import Future
+from concurrent.futures import TimeoutError as FutureTimeout
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.sparse import SparseMetrics, Trace
+from repro.runtime.shm import (SlabArena, read_section, sections_layout,
+                               worker_slab, write_section)
+from repro.serve.engine import QueryError, QueryRequest, QueryServer
+
+#: summary-space ops served by every shard over its owned contexts and
+#: merged in the parent (all other ops route to exactly one shard)
+SCATTER_OPS = ("topk", "threshold")
+
+#: worker replies per response-queue message (latency/throughput balance)
+_REPLY_CHUNK = 16
+
+#: ops whose results are plane/array-sized and worth a shm slab; the rest
+#: (point values, top-k rows, errors) ride the pickled response queue and
+#: must not starve the slab pool
+_SLAB_OPS = ("profile", "stripe", "window", "threshold")
+
+
+def _slab_eligible(req: QueryRequest, scatter: bool) -> bool:
+    return not scatter and getattr(req, "op", None) in _SLAB_OPS
+
+
+# ---------------------------------------------------------------------------
+# consistent-hash ring
+# ---------------------------------------------------------------------------
+
+def _hash64(data: bytes) -> int:
+    """Stable 64-bit point on the ring (blake2b: no PYTHONHASHSEED drift,
+    identical in parent and every worker)."""
+    return int.from_bytes(hashlib.blake2b(data, digest_size=8).digest(),
+                          "little")
+
+
+class ConsistentHashRing:
+    """Classic vnode hash ring over locality keys.
+
+    Each shard owns ``vnodes`` pseudo-random points; a key routes to the
+    first point clockwise from its own hash.  Growing the ring from N to
+    N+1 shards only adds points, so the *only* keys that change owner are
+    the ones the new shard's points capture — an expected 1/(N+1) of the
+    key space, and every moved key moves to the new shard.
+    """
+
+    def __init__(self, n_shards: int, *, vnodes: int = 96,
+                 salt: bytes = b"repro-serve-shard"):
+        self.n_shards = max(1, int(n_shards))
+        self.vnodes = max(1, int(vnodes))
+        self.salt = bytes(salt)
+        pts = sorted(
+            (_hash64(b"%s|vnode|%d:%d" % (self.salt, s, v)), s)
+            for s in range(self.n_shards) for v in range(self.vnodes))
+        self._points = np.array([h for h, _ in pts], dtype=np.uint64)
+        self._owner = np.array([s for _, s in pts], dtype=np.int64)
+
+    def route_key(self, key: tuple[int, int]) -> int:
+        """Locality key ``(group, id)`` -> owning shard."""
+        h = _hash64(b"%s|key|%d:%d" % (self.salt, int(key[0]), int(key[1])))
+        i = int(np.searchsorted(self._points, np.uint64(h), side="left"))
+        return int(self._owner[i % self._points.size])
+
+    def route(self, req: QueryRequest) -> int:
+        return self.route_key(QueryServer._locality_key(req))
+
+    def owned_contexts(self, n_contexts: int, shard: int) -> np.ndarray:
+        """Context ids whose ``(1, ctx)`` key routes to ``shard`` — the
+        ``within=`` set for scatter queries and CMS warm ownership."""
+        return np.array([c for c in range(int(n_contexts))
+                         if self.route_key((1, c)) == int(shard)],
+                        dtype=np.int64)
+
+    def owned_context_mask(self, n_contexts: int, shard: int) -> np.ndarray:
+        """Boolean ownership over context ids — the O(1)-lookup ``within=``
+        form the worker hands to the select functions per scatter query."""
+        mask = np.zeros(int(n_contexts), dtype=bool)
+        mask[self.owned_contexts(n_contexts, shard)] = True
+        return mask
+
+    def owns_plane(self, store: str, oid: int, shard: int) -> bool:
+        """Warm-plan ownership: PMS/trace planes follow the profile key,
+        CMS planes the context key."""
+        group = 1 if store == "cms" else 0
+        return self.route_key((group, int(oid))) == int(shard)
+
+
+# ---------------------------------------------------------------------------
+# result payload codec (worker -> parent)
+# ---------------------------------------------------------------------------
+# payload = (mode, kind, data):
+#   ("obj",    None,    result)  - small results (floats, topk rows, errors)
+#                                  pickled through the response queue
+#   ("slab",   "sm",    nbytes)  - SparseMetrics.encode_into the slab
+#   ("inline", "sm",    bytes)   - ... that outgrew the slab
+#   ("slab",   kind,    meta)    - array sections in the slab; meta is
+#                                  ((dtype, count, nbytes), ...) and offsets
+#                                  re-derive via sections_layout
+#   ("inline", kind,    arrays)  - ... that outgrew the slab
+# kind "pair" reassembles a (profiles, values)-style tuple, "trace" a Trace.
+
+def _encode_result(res, slab_buf, slab_bytes: int):
+    """Serialize one query result, preferring the shard's shm slab."""
+    if isinstance(res, SparseMetrics):
+        n = res.encoded_nbytes()
+        if slab_buf is not None and n <= slab_bytes:
+            res.encode_into(slab_buf, 0)
+            return ("slab", "sm", n)
+        return ("inline", "sm", res.encode())
+    if isinstance(res, Trace):
+        kind, arrays = "trace", (res.time, res.ctx)
+    elif (isinstance(res, tuple) and len(res) == 2
+          and all(isinstance(a, np.ndarray) for a in res)):
+        kind, arrays = "pair", res
+    else:
+        return ("obj", None, res)
+    arrays = tuple(np.ascontiguousarray(a) for a in arrays)
+    meta = tuple((a.dtype.str, int(a.size), int(a.nbytes)) for a in arrays)
+    offs, total = sections_layout([m[2] for m in meta])
+    if slab_buf is not None and total <= slab_bytes:
+        for a, off in zip(arrays, offs):
+            write_section(slab_buf, off, a)
+        return ("slab", kind, meta)
+    return ("inline", kind, arrays)
+
+
+def _decode_payload(payload, slab_view):
+    """Parent-side inverse of :func:`_encode_result`; always copies out of
+    the slab so it can be recycled immediately."""
+    mode, kind, data = payload
+    if mode == "obj":
+        return data
+    if kind == "sm":
+        buf = bytes(slab_view[:data]) if mode == "slab" else data
+        return SparseMetrics.decode(buf)[0]
+    if mode == "inline":
+        arrays = tuple(data)
+    else:
+        offs, _ = sections_layout([nb for _, _, nb in data])
+        arrays = tuple(read_section(slab_view, off, dt, n, copy=True)
+                       for (dt, n, _), off in zip(data, offs))
+    return Trace(*arrays) if kind == "trace" else arrays
+
+
+# ---------------------------------------------------------------------------
+# worker process
+# ---------------------------------------------------------------------------
+
+def _serve_scatter(db, owned_ctx: np.ndarray, req: QueryRequest):
+    """One shard's partial answer to a scatter query, restricted to the
+    contexts it owns; failures mirror ``QueryServer.serve_one`` exactly so
+    error results stay byte-identical to single-process serving."""
+    from repro.query import threshold_contexts, topk_hot_paths
+    try:
+        params = dict(req.params)
+        if req.op == "topk":
+            return topk_hot_paths(db, req.metric, k=req.k,
+                                  inclusive=req.inclusive, within=owned_ctx,
+                                  **params)
+        return threshold_contexts(
+            db, req.metric, min_value=float(params.pop("min_value", 0.0)),
+            inclusive=req.inclusive, within=owned_ctx, **params)
+    except Exception as e:                                  # noqa: BLE001
+        return QueryError(op=str(getattr(req, "op", "?")),
+                          error=type(e).__name__, message=str(e))
+
+
+def _merge_scatter(req: QueryRequest, parts: list):
+    """Parent-side merge of per-shard partials, in the exact deterministic
+    order the single-process select functions use."""
+    for p in parts:
+        if isinstance(p, QueryError):
+            return p
+    if req.op == "topk":
+        rows = [h for part in parts for h in part]
+        rows.sort(key=lambda h: (-h.value, h.ctx))
+        return rows[:max(int(req.k), 0)]
+    ctx = np.concatenate([p[0] for p in parts])
+    vals = np.concatenate([p[1] for p in parts])
+    order = np.lexsort((ctx, -vals))  # value desc, ctx asc tiebreak
+    return ctx[order], vals[order]
+
+
+def _shard_worker_main(shard: int, n_shards: int, vnodes: int, salt: bytes,
+                       db_dir: str, cache_bytes: int, warm_bytes,
+                       server_factory, slab_bytes: int, req_q, resp_q):
+    """Worker loop: own Database, own LRU, serve batches in locality order.
+
+    Module-level (and all-args-picklable) so it runs under any
+    multiprocessing start method.  The worker never creates shm segments —
+    oversize results fall back to the pickled response queue — so abrupt
+    death cannot leak ``/dev/shm``.
+    """
+    import signal
+
+    from repro.query import Database
+    from repro.serve.warm import warm_cache
+
+    signal.signal(signal.SIGINT, signal.SIG_IGN)  # parent owns shutdown
+    ring = ConsistentHashRing(n_shards, vnodes=vnodes, salt=salt)
+    db = Database(db_dir, cache_bytes=cache_bytes)
+    server = (server_factory or QueryServer)(db)
+    owned_ctx = (ring.owned_context_mask(db.n_contexts, shard)
+                 if n_shards > 1 else None)
+    warm_report = None
+    if warm_bytes is None or warm_bytes > 0:
+        owned = ((lambda store, oid: ring.owns_plane(store, oid, shard))
+                 if n_shards > 1 else None)
+        warm_report = warm_cache(db, warm_bytes, owned=owned)
+    resp_q.put(("ready", {"shard": shard, "pid": os.getpid(),
+                          "warm": warm_report}))
+    while True:
+        msg = req_q.get()
+        if msg is None:
+            break
+        items = msg  # [(key, QueryRequest, slab_name | None, scatter), ...]
+        # plane-less ops (group 2: top-k/threshold partials) first — they
+        # are barrier legs of scatter-gather merges, so answering them
+        # early keeps sibling shards' merges from waiting out this
+        # shard's plane work; then plane ops in locality order
+        order = sorted(range(len(items)),
+                       key=lambda i: (lambda k: (k[0] != 2, k))(
+                           QueryServer._locality_key(items[i][1])))
+        replies = []
+        for i in order:  # every hot plane decodes once per batch
+            key, req, slab_name, scatter = items[i]
+            try:
+                if scatter and req.op in SCATTER_OPS and owned_ctx is not None:
+                    res = _serve_scatter(db, owned_ctx, req)
+                else:
+                    res = server.serve_one(req)
+                slab_buf = (worker_slab(slab_name).buf
+                            if slab_name is not None else None)
+                payload = _encode_result(res, slab_buf, slab_bytes)
+            except Exception as e:                          # noqa: BLE001
+                payload = ("obj", None, QueryError(
+                    op=str(getattr(req, "op", "?")),
+                    error=type(e).__name__, message=str(e)))
+            replies.append((key, payload))
+            # chunked responses: the mp.Queue round trip amortizes over
+            # a chunk instead of being paid per request, while early
+            # results still stream back before the batch finishes (a
+            # whole-batch reply would stall closed-loop clients and
+            # drain the pipeline)
+            if len(replies) >= _REPLY_CHUNK:
+                resp_q.put(("res", replies))
+                replies = []
+        if replies:
+            resp_q.put(("res", replies))
+    db.close()
+
+
+# ---------------------------------------------------------------------------
+# parent: shard records, supervisor, scatter-gather
+# ---------------------------------------------------------------------------
+
+@dataclass
+class _Pending:
+    req: QueryRequest
+    future: Future
+    slab: str | None
+    scatter: bool
+    replays: int = 0
+
+
+@dataclass
+class _Shard:
+    index: int
+    arena: SlabArena
+    free_slabs: list[str]
+    lock: threading.Lock = field(default_factory=threading.Lock)
+    pending: dict[int, _Pending] = field(default_factory=dict)
+    proc: mp.process.BaseProcess | None = None
+    req_q: object = None
+    resp_q: object = None
+    ready: threading.Event = field(default_factory=threading.Event)
+    warm: dict | None = None
+    deaths: int = 0
+
+
+class ShardedQueryServer:
+    """Multi-process drop-in for :class:`QueryServer` over one database.
+
+    Exposes the same serving surface the scheduler and HTTP layer consume
+    (``serve_one`` / ``serve`` / ``_locality_key``) plus the shard-aware
+    hooks the :class:`~repro.serve.scheduler.BatchScheduler` uses when
+    present (``n_shards``, ``shard_of``, ``serve_window``).
+
+    ``cache_bytes``/``warm_bytes`` are *per worker*: sharding scales cache
+    capacity with compute, and the router guarantees the budgets never
+    hold overlapping planes.
+    """
+
+    def __init__(self, db_dir: str, n_shards: int, *,
+                 cache_bytes: int = 64 << 20, warm_bytes: int | None = 0,
+                 n_slabs: int = 32, slab_bytes: int = 4 << 20,
+                 vnodes: int = 96, server_factory=None,
+                 replay_limit: int = 3, dispatch_timeout_s: float = 60.0,
+                 start_timeout_s: float = 120.0, mp_context: str | None = None):
+        if db_dir is None:
+            raise ValueError("sharded serving needs a database directory "
+                             "(explicit pms_path handles cannot be re-opened "
+                             "by workers)")
+        self.db_dir = str(db_dir)
+        self.n_shards = max(1, int(n_shards))
+        self.cache_bytes = int(cache_bytes)
+        self.warm_bytes = warm_bytes
+        self.n_slabs = max(1, int(n_slabs))
+        self.slab_bytes = max(1 << 12, int(slab_bytes))
+        self.ring = ConsistentHashRing(self.n_shards, vnodes=vnodes)
+        self.server_factory = server_factory
+        self.replay_limit = int(replay_limit)
+        self.dispatch_timeout_s = float(dispatch_timeout_s)
+        self.start_timeout_s = float(start_timeout_s)
+
+        # value lookups are served from a CMS stripe when that store
+        # exists, so they route context-major like stripes; a PMS-only
+        # database answers them from the *profile* plane instead — route
+        # them profile-major there, or every shard would decode (and
+        # warm) the same PMS planes the ring assigned to one owner
+        from repro.query.database import CMS_NAME
+        self._has_cms = os.path.exists(os.path.join(self.db_dir, CMS_NAME))
+
+        if mp_context is None:
+            mp_context = os.environ.get("REPRO_MP_CONTEXT") or None
+        if mp_context is None:
+            # same tradeoff as runtime.processes: fork on Linux (spawn
+            # re-imports __main__), REPRO_MP_CONTEXT=forkserver opts out
+            methods = mp.get_all_start_methods()
+            mp_context = ("fork" if sys.platform == "linux"
+                          and "fork" in methods else "spawn")
+        self._ctx = mp.get_context(mp_context)
+
+        self._shards: list[_Shard] = []
+        self._pumps: list[threading.Thread] = []
+        self._seq = itertools.count()
+        self._started = False
+        self._closed = False
+        self._stats_lock = threading.Lock()
+        self._stats = {"dispatched": 0, "completed": 0, "respawns": 0,
+                       "worker_lost": 0, "replayed": 0, "scatter_queries": 0,
+                       "deduped": 0, "slab_payloads": 0,
+                       "inline_payloads": 0}
+
+    # make the scheduler's locality sort work unchanged
+    _locality_key = staticmethod(QueryServer._locality_key)
+
+    # -- lifecycle -----------------------------------------------------------
+    def start(self) -> "ShardedQueryServer":
+        if self._started:
+            return self
+        self._started = True
+        try:
+            for s in range(self.n_shards):
+                arena = SlabArena(self.n_slabs, self.slab_bytes)
+                shard = _Shard(index=s, arena=arena,
+                               free_slabs=list(arena._free))
+                self._shards.append(shard)
+                self._spawn_locked(shard)
+            for shard in self._shards:
+                pump = threading.Thread(target=self._pump_loop,
+                                        args=(shard.index,), daemon=True,
+                                        name=f"shard-pump-{shard.index}")
+                pump.start()
+                self._pumps.append(pump)
+            deadline = time.monotonic() + self.start_timeout_s
+            for shard in self._shards:
+                # re-read shard.ready each poll: a worker that crashes
+                # during startup is respawned by the supervisor with a
+                # FRESH Event, and waiting on the original object would
+                # miss the replacement's ready signal
+                while not shard.ready.wait(0.1):
+                    if time.monotonic() > deadline:
+                        raise RuntimeError(
+                            f"shard {shard.index} worker failed to become "
+                            f"ready within {self.start_timeout_s:.0f}s")
+        except BaseException:
+            self.close()
+            raise
+        return self
+
+    def _spawn_locked(self, shard: _Shard) -> None:
+        """(Re)create one worker; caller holds ``shard.lock`` on respawn."""
+        shard.req_q = self._ctx.Queue()
+        shard.resp_q = self._ctx.Queue()
+        shard.ready = threading.Event()
+        shard.proc = self._ctx.Process(
+            target=_shard_worker_main,
+            args=(shard.index, self.n_shards, self.ring.vnodes,
+                  self.ring.salt, self.db_dir, self.cache_bytes,
+                  self.warm_bytes, self.server_factory, self.slab_bytes,
+                  shard.req_q, shard.resp_q),
+            daemon=True, name=f"repro-shard-{shard.index}")
+        shard.proc.start()
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        for shard in self._shards:
+            with shard.lock:
+                if shard.req_q is not None:
+                    try:
+                        shard.req_q.put(None)
+                    except Exception:
+                        pass
+        for pump in self._pumps:
+            pump.join(timeout=10.0)
+        leftovers: list[_Pending] = []
+        for shard in self._shards:
+            with shard.lock:
+                leftovers.extend(shard.pending.values())
+                shard.pending.clear()
+            if shard.proc is not None:
+                shard.proc.join(timeout=5.0)
+                if shard.proc.is_alive():
+                    shard.proc.terminate()
+                    shard.proc.join(timeout=2.0)
+                if shard.proc.is_alive():
+                    shard.proc.kill()
+                    shard.proc.join(timeout=2.0)
+            for q in (shard.req_q, shard.resp_q):
+                if q is not None:
+                    try:
+                        q.close()
+                        q.cancel_join_thread()
+                    except Exception:
+                        pass
+            shard.arena.close()
+        for p in leftovers:
+            if not p.future.done():
+                try:
+                    p.future.set_exception(
+                        RuntimeError("sharded query server closed"))
+                except Exception:
+                    pass
+
+    def __enter__(self) -> "ShardedQueryServer":
+        return self.start()
+
+    def __exit__(self, *a) -> None:
+        self.close()
+
+    # -- routing -------------------------------------------------------------
+    def shard_of(self, req: QueryRequest) -> int | None:
+        """Owning shard for a request; ``None`` means scatter to all."""
+        op = getattr(req, "op", None)
+        if self.n_shards > 1 and op in SCATTER_OPS:
+            return None
+        if op == "value" and not self._has_cms:
+            # PMS-only database: the plane a value lookup touches is the
+            # profile plane, so route to its owner
+            try:
+                return self.ring.route_key((0, int(req.pid or 0)))
+            except (TypeError, ValueError):
+                pass
+        return self.ring.route(req)
+
+    def worker_pids(self) -> list[int]:
+        return [s.proc.pid for s in self._shards if s.proc is not None]
+
+    # -- dispatch ------------------------------------------------------------
+    def _dispatch(self, shard_idx: int,
+                  reqs: list[tuple[QueryRequest, bool]]) -> list[Future]:
+        """Send ``[(request, scatter), ...]`` to one worker as a single
+        batch message; returns one Future per entry."""
+        shard = self._shards[shard_idx]
+        items, futs = [], []
+        with shard.lock:
+            if self._closed:
+                raise RuntimeError("sharded query server is closed")
+            for req, scatter in reqs:
+                key = next(self._seq)
+                slab = (shard.free_slabs.pop()
+                        if shard.free_slabs and _slab_eligible(req, scatter)
+                        else None)
+                p = _Pending(req, Future(), slab, scatter)
+                shard.pending[key] = p
+                items.append((key, req, slab, scatter))
+                futs.append(p.future)
+            shard.req_q.put(items)
+        with self._stats_lock:
+            self._stats["dispatched"] += len(items)
+        return futs
+
+    def _await(self, fut: Future, req: QueryRequest):
+        try:
+            return fut.result(timeout=self.dispatch_timeout_s)
+        except FutureTimeout:
+            return QueryError(op=str(getattr(req, "op", "?")),
+                              error="ShardTimeout",
+                              message=f"no shard response within "
+                                      f"{self.dispatch_timeout_s:.0f}s")
+        except Exception as e:                              # noqa: BLE001
+            return QueryError(op=str(getattr(req, "op", "?")),
+                              error=type(e).__name__, message=str(e))
+
+    # -- serving surface ------------------------------------------------------
+    @staticmethod
+    def _dedupe_key(req: QueryRequest):
+        """Hashable identity of a request, or None if it has one-off
+        unhashable params (then it just doesn't coalesce)."""
+        try:
+            key = (req.op, req.pid, req.ctx, req.metric, req.inclusive,
+                   req.k, req.t0, req.t1,
+                   tuple(sorted(req.params.items())))
+            hash(key)  # params values may be unhashable (JSON lists)
+            return key
+        except TypeError:
+            return None
+
+    @staticmethod
+    def _merged_future(req: QueryRequest, parts: list[Future]) -> Future:
+        """A Future that resolves to the scatter-gather merge once every
+        per-shard partial has resolved (merge runs on the last pump
+        thread to deliver — never blocks a caller)."""
+        merged: Future = Future()
+        remaining = [len(parts)]
+        lock = threading.Lock()
+
+        def on_done(_f: Future) -> None:
+            with lock:
+                remaining[0] -= 1
+                if remaining[0]:
+                    return
+            try:
+                vals = []
+                for f in parts:
+                    exc = f.exception()
+                    if exc is not None:
+                        vals.append(QueryError(
+                            op=str(getattr(req, "op", "?")),
+                            error=type(exc).__name__, message=str(exc)))
+                    else:
+                        vals.append(f.result())
+                res = _merge_scatter(req, vals)
+            except Exception as e:                          # noqa: BLE001
+                res = QueryError(op=str(getattr(req, "op", "?")),
+                                 error=type(e).__name__, message=str(e))
+            if not merged.done():
+                merged.set_result(res)
+
+        for f in parts:
+            f.add_done_callback(on_done)
+        return merged
+
+    def serve_window_async(self, reqs: list[QueryRequest]) -> list[Future]:
+        """Dispatch a batch and return one Future per request slot.
+
+        One message per shard per window (the worker re-sorts its slice
+        in plane-locality order and streams replies back in chunks);
+        scatter ops ride along in every shard's message and resolve
+        through a merge future.  Identical requests in a window are
+        *coalesced* before dispatch — the cross-process analog of "the
+        cache does the batching": a burst of clients asking for the same
+        hot plane costs one worker response (and one shm payload), and
+        every duplicate slot shares the same Future, exactly like LRU
+        hits share a decoded plane in-process.
+        """
+        if not self._started:
+            raise RuntimeError("sharded query server is not started")
+        alias = list(range(len(reqs)))
+        reps: dict[object, int] = {}
+        for i, req in enumerate(reqs):
+            k = self._dedupe_key(req)
+            if k is not None:
+                alias[i] = reps.setdefault(k, i)
+        n_unique = len(set(alias))
+        per_shard: list[list[tuple[int, QueryRequest, bool]]] = \
+            [[] for _ in range(self.n_shards)]
+        n_scatter = 0
+        for i, req in enumerate(reqs):
+            if alias[i] != i:
+                continue  # a duplicate slot shares its representative
+            s = self.shard_of(req)
+            if s is None:
+                n_scatter += 1
+                for t in range(self.n_shards):
+                    per_shard[t].append((i, req, True))
+            else:
+                per_shard[s].append((i, req, False))
+        with self._stats_lock:
+            self._stats["scatter_queries"] += n_scatter
+            self._stats["deduped"] += len(reqs) - n_unique
+        futs: list[Future | None] = [None] * len(reqs)
+        scatter_parts: dict[int, list[Future]] = {}
+        for s, items in enumerate(per_shard):
+            if not items:
+                continue
+            for (i, req, scatter), fut in zip(
+                    items, self._dispatch(s, [(r, sc)
+                                              for _, r, sc in items])):
+                if scatter:
+                    scatter_parts.setdefault(i, []).append(fut)
+                else:
+                    futs[i] = fut
+        for i, parts in scatter_parts.items():
+            futs[i] = self._merged_future(reqs[i], parts)
+        for i, j in enumerate(alias):
+            if j != i:
+                futs[i] = futs[j]
+        return futs
+
+    def serve_window(self, reqs: list[QueryRequest]) -> list:
+        """Blocking :meth:`serve_window_async`: results in request order,
+        failures as inline :class:`QueryError` values."""
+        futs = self.serve_window_async(reqs)
+        return [self._await(f, r) for f, r in zip(futs, reqs)]
+
+    def serve(self, reqs: list[QueryRequest]) -> list:
+        return self.serve_window(reqs)
+
+    def serve_one(self, req: QueryRequest):
+        return self.serve_window([req])[0]
+
+    def submit(self, req: QueryRequest):
+        """Single-request convenience mirroring ``QueryServer.submit``:
+        raises structured failures instead of returning them."""
+        res = self.serve_one(req)
+        if isinstance(res, QueryError):
+            raise RuntimeError(f"{res.error}: {res.message} (op={res.op})")
+        return res
+
+    # -- supervisor -----------------------------------------------------------
+    def _pump_loop(self, shard_idx: int) -> None:
+        shard = self._shards[shard_idx]
+        while not self._closed:
+            resp_q, proc = shard.resp_q, shard.proc
+            try:
+                msg = resp_q.get(timeout=0.1)
+            except queue_mod.Empty:
+                if proc is not None and not proc.is_alive() \
+                        and not self._closed:
+                    self._handle_death(shard)
+                continue
+            except (EOFError, OSError):
+                if not self._closed:
+                    self._handle_death(shard)
+                continue
+            self._handle_msg(shard, msg)
+
+    def _handle_msg_locked(self, shard: _Shard, msg
+                           ) -> list[tuple[Future, object]]:
+        """Decode one worker message; caller holds ``shard.lock`` and
+        resolves the returned futures *after* releasing it."""
+        if msg[0] == "ready":
+            shard.warm = msg[1]
+            shard.ready.set()
+            return []
+        resolved: list[tuple[Future, object]] = []
+        slab_n = inline_n = 0
+        for key, payload in msg[1]:
+            p = shard.pending.pop(key, None)
+            if p is None:
+                continue  # already replayed or failed over
+            view = (shard.arena.view(p.slab) if p.slab is not None
+                    else None)
+            try:
+                res = _decode_payload(payload, view)
+            except Exception as e:                          # noqa: BLE001
+                res = QueryError(op=str(getattr(p.req, "op", "?")),
+                                 error=type(e).__name__,
+                                 message=f"payload decode failed: {e}")
+            if p.slab is not None:
+                shard.free_slabs.append(p.slab)
+            if payload[0] == "slab":
+                slab_n += 1
+            else:
+                inline_n += 1
+            resolved.append((p.future, res))
+        with self._stats_lock:
+            self._stats["completed"] += len(resolved)
+            self._stats["slab_payloads"] += slab_n
+            self._stats["inline_payloads"] += inline_n
+        return resolved
+
+    def _handle_msg(self, shard: _Shard, msg) -> None:
+        with shard.lock:
+            resolved = self._handle_msg_locked(shard, msg)
+        for fut, res in resolved:
+            if not fut.done():
+                fut.set_result(res)
+
+    def _handle_death(self, shard: _Shard) -> None:
+        """The supervisor path: drain, back off, respawn, replay.
+
+        The dead worker's queues stay open until the replacement is
+        installed (both swaps happen under ``shard.lock``), so a
+        concurrent :meth:`_dispatch` never touches a closed queue — at
+        worst its message lands in the orphaned queue and its pending
+        entries are picked up by the replay snapshot below.
+        """
+        resolved: list[tuple[Future, object]] = []
+        with shard.lock:
+            if self._closed or shard.proc is None or shard.proc.is_alive():
+                return
+            # responses the worker got out before dying still count
+            while True:
+                try:
+                    msg = shard.resp_q.get_nowait()
+                except (queue_mod.Empty, EOFError, OSError):
+                    break
+                resolved.extend(self._handle_msg_locked(shard, msg))
+            shard.proc.join(timeout=1.0)
+            shard.deaths += 1
+            deaths = shard.deaths
+        for fut, res in resolved:
+            if not fut.done():
+                fut.set_result(res)
+        # exponential backoff so a worker that dies deterministically at
+        # startup (corrupt database, OOM loop) cannot pin a CPU with a
+        # fork-per-100ms respawn storm; requests arriving meanwhile queue
+        # against the admission bound and are replayed below
+        time.sleep(min(0.05 * (2 ** min(deaths - 1, 6)), 2.0))
+        doomed: list[_Pending] = []
+        with shard.lock:
+            if self._closed:
+                return
+            old_qs = (shard.req_q, shard.resp_q)
+            survivors = sorted(shard.pending.items())  # dispatch order
+            shard.pending.clear()
+            replay: list[_Pending] = []
+            for _, p in survivors:
+                if p.slab is not None:  # slab content is garbage now
+                    shard.free_slabs.append(p.slab)
+                    p.slab = None
+                p.replays += 1
+                (doomed if p.replays > self.replay_limit else replay).append(p)
+            self._spawn_locked(shard)
+            for q in old_qs:
+                try:
+                    q.close()
+                    q.cancel_join_thread()
+                except Exception:
+                    pass
+            items = []
+            for p in replay:
+                key = next(self._seq)
+                p.slab = (shard.free_slabs.pop()
+                          if shard.free_slabs
+                          and _slab_eligible(p.req, p.scatter) else None)
+                shard.pending[key] = p
+                items.append((key, p.req, p.slab, p.scatter))
+            if items:
+                shard.req_q.put(items)
+        with self._stats_lock:
+            self._stats["respawns"] += 1
+            self._stats["replayed"] += len(replay)
+            self._stats["worker_lost"] += len(doomed)
+        for p in doomed:
+            if not p.future.done():
+                p.future.set_result(QueryError(
+                    op=str(getattr(p.req, "op", "?")), error="WorkerLost",
+                    message=f"request killed its worker "
+                            f"{p.replays - 1} time(s); giving up after "
+                            f"{self.replay_limit} replays"))
+
+    # -- observability --------------------------------------------------------
+    def warm_reports(self) -> list[dict | None]:
+        return [s.warm for s in self._shards]
+
+    def metrics(self) -> dict:
+        with self._stats_lock:
+            out = dict(self._stats)
+        out["n_shards"] = self.n_shards
+        out["slab_bytes"] = self.slab_bytes
+        per = []
+        for s in self._shards:
+            with s.lock:
+                per.append({"shard": s.index,
+                            "pid": s.proc.pid if s.proc is not None else None,
+                            "alive": bool(s.proc is not None
+                                          and s.proc.is_alive()),
+                            "pending": len(s.pending),
+                            "deaths": s.deaths,
+                            "free_slabs": len(s.free_slabs),
+                            "warm": s.warm})
+        out["shards"] = per
+        return out

@@ -7,7 +7,8 @@ import numpy as np
 import pytest
 
 from repro.core.aggregate import AggregationConfig, StreamingAggregator
-from repro.query import Database, samples_in_window, topk_hot_paths
+from repro.query import (Database, samples_in_window, threshold_contexts,
+                         topk_hot_paths)
 from repro.serve.engine import QueryError, QueryRequest, QueryServer
 from repro.serve.scheduler import BatchScheduler, Overloaded
 from repro.serve.warm import plan_warm, warm_cache
@@ -103,6 +104,23 @@ def test_poisoned_request_does_not_kill_batch(db):
     # submit (the single-request path) still raises for direct callers
     with pytest.raises(ValueError, match="unknown query op"):
         srv.submit(QueryRequest(op="nope"))
+
+
+def test_threshold_op(db):
+    """The threshold query op (new with the sharded service) matches the
+    select function and travels the wire."""
+    from repro.serve.wire import result_from_wire, result_to_wire
+    srv = QueryServer(db)
+    req = QueryRequest(op="threshold", metric=0, inclusive=True,
+                       params={"min_value": 1.0})
+    ctx_ids, vals = srv.submit(req)
+    ref_ids, ref_vals = threshold_contexts(db, 0, min_value=1.0,
+                                           inclusive=True)
+    np.testing.assert_array_equal(ctx_ids, ref_ids)
+    np.testing.assert_allclose(vals, ref_vals)
+    rt = result_from_wire(result_to_wire((ctx_ids, vals)))
+    np.testing.assert_array_equal(rt[0], ctx_ids)
+    np.testing.assert_allclose(rt[1], vals)
 
 
 # ---------------------------------------------------------------------------
@@ -257,8 +275,10 @@ def test_warm_plan_uses_summary_stats_only(db_dir):
         assert fresh.counters["pms_plane_loads"] == 0
         assert fresh.counters["cms_plane_loads"] == 0
         assert fresh.counters["cms_stripe_reads"] == 0
+        assert fresh.counters["trace_loads"] == 0
         stores = {s for s, _, _ in plan}
-        assert stores <= {"pms", "cms"}
+        assert stores <= {"pms", "cms", "trc"}
+        assert "trc" in stores, "trace planes must be planned from the toc"
         sizes = [sz for _, _, sz in plan]
         assert sum(sizes) <= 32 << 20
 
@@ -276,6 +296,38 @@ def test_warm_cache_absorbs_first_touches(db_dir):
         for pid in range(fresh.n_profiles):
             fresh.profile_metrics(pid)
         assert fresh.counters == loads_after_warm
+
+
+def test_warm_covers_trace_planes(db_dir):
+    """Trace planes are planned from the toc (satellite: trace-plane
+    warming): after a full warm, timeline-window queries do zero trace
+    I/O, and the cache-hit path is far faster than the cold first touch
+    (warm p50 must beat even the cold tail)."""
+    import time as _time
+
+    def first_touch_ms(warm: bool) -> list[float]:
+        with Database(db_dir) as fresh:
+            if warm:
+                report = warm_cache(fresh)
+                assert report["trc_planes"] > 0
+                before = fresh.counters["trace_loads"]
+            lat = []
+            for pid in range(fresh.n_profiles):
+                t0 = _time.perf_counter()
+                samples_in_window(fresh, pid, 0.0, 0.9)
+                lat.append((_time.perf_counter() - t0) * 1e3)
+            if warm:
+                # every window query was absorbed by the warmed planes
+                assert fresh.counters["trace_loads"] == before
+            else:
+                assert fresh.counters["trace_loads"] == fresh.n_profiles
+            return lat
+
+    cold = first_touch_ms(False)
+    warm = first_touch_ms(True)
+    warm_p50 = sorted(warm)[len(warm) // 2]
+    assert warm_p50 <= max(cold), \
+        f"warm p50 {warm_p50:.3f}ms !<= cold p99-ish {max(cold):.3f}ms"
 
 
 def test_warm_respects_byte_budget(db_dir):
@@ -464,6 +516,141 @@ def test_http_metrics_endpoint(http_server):
     assert "topk" in sched["latency"]
     assert sched["latency"]["topk"]["n"] >= 1
     assert m["db_counters"]["pms_plane_loads"] >= 0
+
+
+# ---------------------------------------------------------------------------
+# adaptive batch windows
+# ---------------------------------------------------------------------------
+
+def test_adaptive_wait_flushes_when_peer_idles(db):
+    """With a big max_wait and an idle peer worker, a lone request must
+    not wait out the window: adaptive flush keeps low-load p50 at service
+    time.  With adaptive off, the window is held."""
+    lone = QueryRequest(op="topk", metric=0, inclusive=True, k=3)
+    with BatchScheduler(QueryServer(db), max_batch=64, max_wait_ms=400.0,
+                        n_workers=2, adaptive_wait=True) as sched:
+        t0 = time.perf_counter()
+        sched.submit(lone).result(30)
+        adaptive_dt = time.perf_counter() - t0
+    with BatchScheduler(QueryServer(db), max_batch=64, max_wait_ms=400.0,
+                        n_workers=2, adaptive_wait=False) as sched:
+        t0 = time.perf_counter()
+        sched.submit(lone).result(30)
+        fixed_dt = time.perf_counter() - t0
+    assert adaptive_dt < 0.2, \
+        f"adaptive window held a lone request {adaptive_dt * 1e3:.0f}ms"
+    assert fixed_dt >= 0.35, \
+        f"fixed window flushed early ({fixed_dt * 1e3:.0f}ms < max_wait)"
+
+
+def test_adaptive_wait_keeps_batching_under_load(db_dir):
+    """At high offered load every worker stays busy, so adaptive flush
+    never triggers and windows still amortize: mean batch size stays well
+    above one and results stay correct."""
+    with Database(db_dir, cache_bytes=1 << 20) as served:
+        reqs = _mixed_requests(served, 300, seed=7)
+        ref_srv = QueryServer(served)
+        reference = [ref_srv.serve_one(r) for r in reqs]
+        with BatchScheduler(QueryServer(served), max_batch=64,
+                            max_wait_ms=5.0, max_queue=4096, n_workers=2,
+                            adaptive_wait=True) as sched:
+            futs = sched.submit_many(reqs)
+            results = [f.result(30) for f in futs]
+            stats = sched.metrics()
+    for got, ref in zip(results, reference):
+        _assert_result_equal(got, ref)
+    assert stats["mean_batch_size"] >= 4, stats["mean_batch_size"]
+
+
+# ---------------------------------------------------------------------------
+# client retry policy
+# ---------------------------------------------------------------------------
+
+def test_retry_policy_honors_retry_after_and_jitter():
+    from repro.serve.client import RetryPolicy, ServerOverloaded
+    import random as _random
+    pol = RetryPolicy(max_attempts=4, budget_s=60.0, base_s=0.1,
+                      max_backoff_s=1.0, rng=_random.Random(3))
+    # Retry-After is a floor on the backoff
+    assert pol.backoff_s(0, retry_after_s=0.75) >= 0.75
+    # jittered exponential stays within [0, cap]
+    for attempt in range(5):
+        w = pol.backoff_s(attempt)
+        assert 0.0 <= w <= 1.0
+    sleeps, calls = [], []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise ServerOverloaded(0.05)
+        return "ok"
+
+    assert pol.call(flaky, sleep=sleeps.append) == "ok"
+    assert len(calls) == 3 and len(sleeps) == 2
+    assert all(s >= 0.05 for s in sleeps)
+
+
+def test_retry_budget_exhaustion_carries_cause():
+    from repro.serve.client import (RetryBudgetExceeded, RetryPolicy,
+                                    ServerOverloaded)
+    pol = RetryPolicy(max_attempts=3, budget_s=60.0, base_s=0.001)
+    calls = []
+
+    def always_overloaded():
+        calls.append(1)
+        raise ServerOverloaded(0.001)
+
+    with pytest.raises(RetryBudgetExceeded) as exc:
+        pol.call(always_overloaded, sleep=lambda s: None)
+    assert len(calls) == 3
+    assert isinstance(exc.value.__cause__, ServerOverloaded)
+
+
+def test_retry_fails_fast_on_4xx():
+    from repro.serve.client import RetryPolicy, TransportError
+    pol = RetryPolicy(max_attempts=5, base_s=0.001)
+    calls, sleeps = [], []
+
+    def bad_request():
+        calls.append(1)
+        raise TransportError(413, {"error": "CallTooLarge"})
+
+    with pytest.raises(TransportError):
+        pol.call(bad_request, sleep=sleeps.append)
+    assert len(calls) == 1 and not sleeps, "4xx must not be retried"
+
+
+def test_retry_recovers_through_overload_then_drain(db_dir):
+    """End to end: a brim-full server 429s, the stall releases, and
+    batch_with_retry rides it out within its budget."""
+    from repro.serve.client import QueryClient, RetryPolicy
+    from repro.serve.http import QueryHTTPServer
+    with Database(db_dir) as handle:
+        with QueryHTTPServer(handle, port=0, max_queue=1, n_workers=1,
+                             warm_bytes=0) as srv:
+            stall_srv = _StallServer(handle)
+            srv.scheduler.server = stall_srv
+            host, port = srv.address
+
+            def post(op):
+                with QueryClient(host, port) as c:
+                    return c.batch([QueryRequest(op=op, metric=0, k=1)])
+
+            occupant = threading.Thread(target=post, args=("stall",))
+            occupant.start()
+            time.sleep(0.1)            # worker held by the stall
+            queued = threading.Thread(target=post, args=("topk",))
+            queued.start()
+            time.sleep(0.1)            # admission queue at its bound
+            threading.Timer(0.4, stall_srv.release.set).start()
+            with QueryClient(host, port) as cl:
+                res = cl.batch_with_retry(
+                    [QueryRequest(op="topk", metric=0, k=2)],
+                    policy=RetryPolicy(max_attempts=12, budget_s=20.0,
+                                       base_s=0.05))
+            assert len(res) == 1 and len(res[0]) == 2
+            occupant.join(10)
+            queued.join(10)
 
 
 def test_unbatched_server_mode(db_dir):
