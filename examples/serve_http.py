@@ -6,6 +6,11 @@ through the typed :class:`QueryClient` the way an analysis dashboard
 would: health check, a batched dashboard call, single-op conveniences,
 and a look at the /metrics counters.
 
+This serves one static database directory.  The same server can instead
+*follow* a live snapshot root (``QueryHTTPServer(root, follow=True)``),
+reopening on every published epoch — ``examples/ingest_stream.py`` runs
+that variant end to end against the ingest tier.
+
     PYTHONPATH=src python examples/serve_http.py
 """
 import os

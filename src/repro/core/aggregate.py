@@ -245,43 +245,9 @@ class StreamingAggregator:
         In-process only (the body closes over the shared tree); the
         ``processes`` backend goes through :func:`_phase1_shard_worker`.
         """
-        cfg = self.cfg
-        ex = executor or get_executor(cfg.executor, cfg.workers)
-        if not ex.in_process:
-            raise ValueError(
-                f"parse_contexts requires an in-process executor, got "
-                f"{ex.name!r}; use StreamingAggregator.run for the sharded "
-                f"path, or pass executor= explicitly")
-        unified = unified or ContextTree()
-        structures: dict[str, StructureInfo] = {}
-        struct_lock = threading.Lock()
-        uniq_lock = threading.Lock()
-        n = len(profile_paths)
-        # one fresh container per index — a shared `[{}] * n` alias would let
-        # any in-place mutation silently corrupt every profile's entry
-        remaps: list[np.ndarray | None] = [None] * n
-        routes: list[dict] = [{} for _ in range(n)]
-        identities: list[dict] = [{} for _ in range(n)]
-        trace_lens = np.zeros(n, dtype=np.int64)
-        registry_jsons: list[list] = [[] for _ in range(n)]
-
-        def body(i: int):
-            t0 = time.perf_counter()
-            prof = MeasurementProfile.load(profile_paths[i])
-            timer.add("io_read", time.perf_counter() - t0)
-            t1 = time.perf_counter()
-            own = _load_structures(prof, structures, struct_lock)
-            with uniq_lock:  # uniquing (U) — see module docstring on locking
-                remap, rts = expand_profile_tree(unified, prof.tree, own)
-            remaps[i] = remap
-            routes[i] = rts
-            identities[i] = prof.identity
-            trace_lens[i] = prof.trace.time.size
-            registry_jsons[i] = prof.environment.get("registry", [])
-            timer.add("compute", time.perf_counter() - t1)
-
-        ex.parallel_for(n, body)
-        return unified, remaps, routes, identities, trace_lens, registry_jsons
+        ex = executor or get_executor(self.cfg.executor, self.cfg.workers)
+        return phase1_unify_inprocess(profile_paths, timer, unified=unified,
+                                      executor=ex)
 
     # -- full run --------------------------------------------------------------
     def run(self, profile_paths: list[str]) -> AnalysisResult:
@@ -332,58 +298,34 @@ class StreamingAggregator:
         # stats fold inside the ordered sink: in profile order with a shape
         # that is a pure function of n, and only O(log n) accumulators live
         stats_reducer = StreamingReducer(_merge_stats)
-
-        def consume(i: int, item):
-            payload, p_ctx, p_vals, identity, acc = item
-            writer.append(i, payload, p_ctx, p_vals, identity)
-            stats_reducer.push(acc)
-
-        # bounded out-of-order buffer: producers for far-ahead profiles block
-        # instead of stacking encoded planes (safe in-process: the worker
-        # holding the next index is never blocked, and failures poison the
-        # sink so blocked peers wake — see body's except clause)
-        sink = OrderedSink(consume, window=cfg.effective_sink_window)
         trace_path = None
         trace_writer = None
         if cfg.write_traces and trace_lens.sum() > 0:
             trace_path = os.path.join(self.out_dir, "db.trc")
             trace_writer = TraceDBWriter(trace_path, [int(x) for x in trace_lens])
         nvals = np.zeros(n, dtype=np.int64)
-        end_arr = end  # by preorder id
         parent_pre = np.asarray(final_tree.parent, dtype=np.int64)
 
-        def body(i: int):
-            try:
-                t0 = time.perf_counter()
-                prof = MeasurementProfile.load(profile_paths[i])
-                timer.add("io_read", time.perf_counter() - t0)
-                t1 = time.perf_counter()
-                remap_final = pos[np.asarray(remaps[i], dtype=np.int64)]
-                rts = {int(pos[ph]): (pos[t_], w)
-                       for ph, (t_, w) in routes[i].items()}
-                sm = transform_plane(prof.metrics, remap_final, rts,
-                                     parent_pre, end_arr,
-                                     pipeline=cfg.pipeline,
-                                     keep_exclusive=cfg.keep_exclusive)
-                acc = StatsAccumulator()
-                acc.update(sm)
-                nvals[i] = sm.n_values
-                payload = sm.encode()
-                timer.add("compute", time.perf_counter() - t1)
-                # in-order append: pins region allocation to profile order
-                sink.put(i, (payload, sm.n_contexts, sm.n_values, identities[i], acc))
-                if trace_writer is not None and prof.trace.time.size:
-                    tr = prof.trace.remap_contexts(remap_final)
-                    t2 = time.perf_counter()
-                    trace_writer.write_trace(i, tr)
-                    timer.add("io_write", time.perf_counter() - t2)
-            except BaseException as e:
-                sink.fail(e)  # wake producers blocked on the bounded window
-                raise
+        def consume(i: int, payload, p_ctx: int, p_vals: int, acc) -> None:
+            # in-order append: pins region allocation to profile order
+            writer.append(i, payload, p_ctx, p_vals, identities[i])
+            stats_reducer.push(acc)
+            nvals[i] = p_vals
+
+        trace_sink = None
+        if trace_writer is not None:
+            def trace_sink(i: int, tr: Trace) -> None:
+                t2 = time.perf_counter()
+                trace_writer.write_trace(i, tr)
+                timer.add("io_write", time.perf_counter() - t2)
 
         try:
-            ex.parallel_for(n, body)
-            sink.close()
+            phase2_stream_inprocess(
+                profile_paths,
+                lambda i: pos[np.asarray(remaps[i], dtype=np.int64)],
+                lambda i: {int(pos[ph]): (pos[t_], w)
+                           for ph, (t_, w) in routes[i].items()},
+                cfg, ex, parent_pre, end, timer, consume, trace_sink)
             writer.close()
         except BaseException:
             pms.abort()
@@ -393,7 +335,6 @@ class StreamingAggregator:
         if trace_writer is not None:
             trace_writer.close()
         timer.add("phase2", time.perf_counter() - t0)
-        timer.add("sink_peak", float(sink.max_pending))
 
         return self._complete(pms, final_tree, stats_reducer.result(),
                               registries, trace_path, timer, t_start, n,
@@ -460,87 +401,31 @@ class StreamingAggregator:
         nvals = np.zeros(n, dtype=np.int64)
         parent_pre = np.asarray(final_tree.parent, dtype=np.int64)
 
-        # submission credits bound in-flight profiles (worker-resident or
-        # buffered out of order in the sink) to the sink window; with the
-        # shm transport the window doubles as the slab count, so slab
-        # recycling *is* the submission throttle and the single-producer
-        # feed below can never block on its own bounded sink (the next-
-        # expected profile is always already submitted).  An explicit
-        # sink_window=0 ("unbounded") stays unthrottled on the pickle
-        # transport, where no slab scarcity requires a bound.
-        window = cfg.effective_sink_window
-        n_slabs = window if window is not None else max(2 * cfg.workers, 2)
-        arena = None
-        transport = cfg.plane_transport
-        if transport == "shm" and n > 0:
-            try:
-                arena = shm_mod.SlabArena(n_slabs, cfg.shm_slab_bytes)
-            except Exception:
-                transport = "pickle"  # no usable /dev/shm: fall back
-        n_credits = (window if window is not None
-                     else n_slabs if arena is not None else None)
+        def consume(i: int, payload, p_ctx: int, p_vals: int, acc) -> None:
+            writer.append(i, payload, p_ctx, p_vals, identities[i])
+            stats_reducer.push(acc)
+            nvals[i] = p_vals
 
-        def consume(i: int, item):
-            try:
-                payload, p_ctx, p_vals, stat_arrays, ttime, tctx, cleanup = (
-                    _open_plane_result(item, arena))
-            except BaseException:
-                _discard_plane_result(item)
-                raise
-            try:
-                writer.append(i, payload, p_ctx, p_vals, identities[i])
-                stats_reducer.push(StatsAccumulator.from_arrays(stat_arrays))
-                nvals[i] = p_vals
-                if trace_writer is not None and len(ttime):
-                    t2 = time.perf_counter()
-                    trace_writer.write_trace(i, Trace(ttime, tctx))
-                    timer.add("io_write", time.perf_counter() - t2)
-            finally:
-                # on success *and* failure: release slab views, then
-                # recycle the slab / unlink the one-shot segment — a
-                # consume error must not strand its own descriptor (the
-                # sink popped it, so the abort sweep can't see it)
-                del payload, ttime, tctx
-                cleanup()
+        trace_sink = None
+        if trace_writer is not None:
+            def trace_sink(i: int, tr: Trace) -> None:
+                t2 = time.perf_counter()
+                trace_writer.write_trace(i, tr)
+                timer.add("io_write", time.perf_counter() - t2)
 
-        sink = OrderedSink(consume, window=window)
-        initargs = (end, parent_pre, cfg.keep_exclusive, cfg.write_traces,
-                    cfg.pipeline, cfg.shm_slab_bytes)
-
-        def task_source():
-            # pulled lazily by map_throttled, one task per credit: with the
-            # shm transport a free slab is guaranteed at every pull
-            for i in range(n):
-                slab = arena.acquire() if arena is not None else None
-                yield (profile_paths[i], remaps_final[i], routes_final[i],
-                       slab)
-
-        credits = ((lambda: sink.consumed + n_credits)
-                   if n_credits is not None else (lambda: float("inf")))
         try:
-            for i, result in ex.map_throttled(
-                    _phase2_profile_worker, task_source(), credits=credits,
-                    initializer=_phase2_init, initargs=initargs,
-                    on_discard=lambda res: _discard_plane_result(res[1])):
-                sink.put(i, result)
-            sink.close()
+            phase2_stream_sharded(profile_paths, remaps_final, routes_final,
+                                  cfg, ex, parent_pre, end, timer, consume,
+                                  trace_sink)
             writer.close()
         except BaseException:
             pms.abort()
             if trace_writer is not None:
                 trace_writer.close()
-            # unlink one-shot segments stranded in the sink's buffer (slabs
-            # themselves die with the arena below)
-            for item in sink.pending_items():
-                _discard_plane_result(item)
             raise
-        finally:
-            if arena is not None:
-                arena.close()
         if trace_writer is not None:
             trace_writer.close()
         timer.add("phase2", time.perf_counter() - t0)
-        timer.add("sink_peak", float(sink.max_pending))
 
         return self._complete(pms, final_tree, stats_reducer.result(),
                               registries, trace_path, timer, t_start, n,
@@ -580,6 +465,217 @@ class StreamingAggregator:
             n_profiles=n, n_contexts=n_ctx, n_values=n_values,
             timings=dict(timer.acc), sizes=sizes,
         )
+
+
+# ---------------------------------------------------------------------------
+# phase-1 / phase-2 streaming engines (shared by one-shot runs and live
+# ingest appends)
+# ---------------------------------------------------------------------------
+
+def phase1_unify_inprocess(profile_paths: list[str], timer: _PhaseTimer,
+                           unified: ContextTree | None = None, executor=None):
+    """Parallel parse + unify into ``unified`` (grown in place when given —
+    the live-ingest append path; a one-shot run starts from an empty tree).
+    Returns ``(unified, remaps, routes, identities, trace_lens,
+    registry_jsons)`` with remaps/routes in *creation-order* ids of the
+    unified tree: stable under later appends, renumbered to canonical
+    preorder only when a database is written.
+
+    In-process only (the body closes over the shared tree); the
+    ``processes`` backend goes through :func:`_phase1_shard_worker`.
+    """
+    ex = executor or get_executor("serial", 1)
+    if not ex.in_process:
+        raise ValueError(
+            f"phase1_unify_inprocess requires an in-process executor, got "
+            f"{ex.name!r}; use StreamingAggregator.run for the sharded "
+            f"path, or pass executor= explicitly")
+    unified = unified if unified is not None else ContextTree()
+    structures: dict[str, StructureInfo] = {}
+    struct_lock = threading.Lock()
+    uniq_lock = threading.Lock()
+    n = len(profile_paths)
+    # one fresh container per index — a shared `[{}] * n` alias would let
+    # any in-place mutation silently corrupt every profile's entry
+    remaps: list[np.ndarray | None] = [None] * n
+    routes: list[dict] = [{} for _ in range(n)]
+    identities: list[dict] = [{} for _ in range(n)]
+    trace_lens = np.zeros(n, dtype=np.int64)
+    registry_jsons: list[list] = [[] for _ in range(n)]
+
+    def body(i: int):
+        t0 = time.perf_counter()
+        prof = MeasurementProfile.load(profile_paths[i])
+        timer.add("io_read", time.perf_counter() - t0)
+        t1 = time.perf_counter()
+        own = _load_structures(prof, structures, struct_lock)
+        with uniq_lock:  # uniquing (U) — see module docstring on locking
+            remap, rts = expand_profile_tree(unified, prof.tree, own)
+        remaps[i] = remap
+        routes[i] = rts
+        identities[i] = prof.identity
+        trace_lens[i] = prof.trace.time.size
+        registry_jsons[i] = prof.environment.get("registry", [])
+        timer.add("compute", time.perf_counter() - t1)
+
+    ex.parallel_for(n, body)
+    return unified, remaps, routes, identities, trace_lens, registry_jsons
+
+def transform_profile(prof: MeasurementProfile, remap_final, routes_final,
+                      parent_pre: np.ndarray, end_arr: np.ndarray, *,
+                      pipeline: str, keep_exclusive: bool, want_trace: bool):
+    """Phase-2 compute for one loaded profile: remap + redistribute +
+    propagate (the paper's edit/redistribute/propagate chain) plus the
+    per-profile statistics leaf.  Returns ``(sm, acc, trace_or_None)``.
+
+    This is *the* unit of work both execution substrates run — in worker
+    threads for the in-process path, in pool processes for the sharded
+    path — so the byte-determinism contract only has to be argued once.
+    """
+    remap_arr = np.asarray(remap_final, dtype=np.int64)
+    sm = transform_plane(prof.metrics, remap_arr, routes_final, parent_pre,
+                         end_arr, pipeline=pipeline,
+                         keep_exclusive=keep_exclusive)
+    acc = StatsAccumulator()
+    acc.update(sm)
+    tr = (prof.trace.remap_contexts(remap_arr)
+          if want_trace and prof.trace.time.size else None)
+    return sm, acc, tr
+
+
+def phase2_stream_inprocess(profile_paths: list[str], remap_of, route_of,
+                            cfg: AggregationConfig, ex, parent_pre: np.ndarray,
+                            end_arr: np.ndarray, timer: _PhaseTimer, consume,
+                            trace_sink=None):
+    """Stream phase 2 through an in-process executor with pluggable output
+    hooks — the engine behind :meth:`StreamingAggregator._run_inprocess`
+    (hooks feed the PMS/trace writers) and the live ingest tier's
+    incremental append (hooks retain relabeled planes in memory).
+
+    ``remap_of(i)`` / ``route_of(i)`` produce profile ``i``'s final context
+    remap and route table (composed lazily, on the worker).  ``consume(i,
+    payload, n_ctx, n_vals, acc)`` runs in profile order under an
+    :class:`OrderedSink` — the determinism pin for region allocation and
+    the stats carry chain; a bounded window blocks producers of far-ahead
+    profiles instead of stacking encoded planes.  ``trace_sink(i, trace)``
+    runs on worker threads as soon as a profile's trace is remapped.
+    Returns the sink (``max_pending`` observability).
+    """
+    n = len(profile_paths)
+    sink = OrderedSink(lambda i, item: consume(i, *item),
+                       window=cfg.effective_sink_window)
+
+    def body(i: int):
+        try:
+            t0 = time.perf_counter()
+            prof = MeasurementProfile.load(profile_paths[i])
+            timer.add("io_read", time.perf_counter() - t0)
+            t1 = time.perf_counter()
+            sm, acc, tr = transform_profile(
+                prof, remap_of(i), route_of(i), parent_pre, end_arr,
+                pipeline=cfg.pipeline, keep_exclusive=cfg.keep_exclusive,
+                want_trace=trace_sink is not None)
+            payload = sm.encode()
+            timer.add("compute", time.perf_counter() - t1)
+            sink.put(i, (payload, sm.n_contexts, sm.n_values, acc))
+            if tr is not None:
+                trace_sink(i, tr)
+        except BaseException as e:
+            sink.fail(e)  # wake producers blocked on the bounded window
+            raise
+
+    ex.parallel_for(n, body)
+    sink.close()
+    timer.add("sink_peak", float(sink.max_pending))
+    return sink
+
+
+def phase2_stream_sharded(profile_paths: list[str], remaps_final,
+                          routes_final, cfg: AggregationConfig, ex,
+                          parent_pre: np.ndarray, end_arr: np.ndarray,
+                          timer: _PhaseTimer, consume, trace_sink=None):
+    """Phase-2 streaming over a ``processes`` executor with pluggable
+    output hooks: propagate/encode runs in pool workers (shm slab arena or
+    pickle transport), then ``consume(i, payload, n_ctx, n_vals, acc)``
+    and ``trace_sink(i, trace)`` run in profile order on the consuming
+    thread.  ``payload`` and the trace arrays may be views into a shm slab
+    that is recycled when the hook returns — hooks must copy anything they
+    retain (the PMS writer copies into its buffer; the ingest tier copies
+    into its resident planes).
+
+    Submission credits bound in-flight profiles (worker-resident or
+    buffered out of order in the sink) to the sink window; with the shm
+    transport the window doubles as the slab count, so slab recycling *is*
+    the submission throttle and the single-producer feed below can never
+    block on its own bounded sink (the next-expected profile is always
+    already submitted).  An explicit ``sink_window=0`` ("unbounded") stays
+    unthrottled on the pickle transport, where no slab scarcity requires a
+    bound.
+    """
+    n = len(profile_paths)
+    window = cfg.effective_sink_window
+    n_slabs = window if window is not None else max(2 * cfg.workers, 2)
+    arena = None
+    transport = cfg.plane_transport
+    if transport == "shm" and n > 0:
+        try:
+            arena = shm_mod.SlabArena(n_slabs, cfg.shm_slab_bytes)
+        except Exception:
+            transport = "pickle"  # no usable /dev/shm: fall back
+    n_credits = (window if window is not None
+                 else n_slabs if arena is not None else None)
+
+    def _consume(i: int, item):
+        try:
+            payload, p_ctx, p_vals, stat_arrays, ttime, tctx, cleanup = (
+                _open_plane_result(item, arena))
+        except BaseException:
+            _discard_plane_result(item)
+            raise
+        try:
+            consume(i, payload, p_ctx, p_vals,
+                    StatsAccumulator.from_arrays(stat_arrays))
+            if trace_sink is not None and len(ttime):
+                trace_sink(i, Trace(ttime, tctx))
+        finally:
+            # on success *and* failure: release slab views, then
+            # recycle the slab / unlink the one-shot segment — a
+            # consume error must not strand its own descriptor (the
+            # sink popped it, so the abort sweep can't see it)
+            del payload, ttime, tctx
+            cleanup()
+
+    sink = OrderedSink(_consume, window=window)
+    initargs = (end_arr, parent_pre, cfg.keep_exclusive, cfg.write_traces,
+                cfg.pipeline, cfg.shm_slab_bytes)
+
+    def task_source():
+        # pulled lazily by map_throttled, one task per credit: with the
+        # shm transport a free slab is guaranteed at every pull
+        for i in range(n):
+            slab = arena.acquire() if arena is not None else None
+            yield (profile_paths[i], remaps_final[i], routes_final[i], slab)
+
+    credits = ((lambda: sink.consumed + n_credits)
+               if n_credits is not None else (lambda: float("inf")))
+    try:
+        for i, result in ex.map_throttled(
+                _phase2_profile_worker, task_source(), credits=credits,
+                initializer=_phase2_init, initargs=initargs,
+                on_discard=lambda res: _discard_plane_result(res[1])):
+            sink.put(i, result)
+        sink.close()
+    except BaseException:
+        # unlink one-shot segments stranded in the sink's buffer (slabs
+        # themselves die with the arena below)
+        for item in sink.pending_items():
+            _discard_plane_result(item)
+        raise
+    finally:
+        if arena is not None:
+            arena.close()
+    timer.add("sink_peak", float(sink.max_pending))
+    return sink
 
 
 # ---------------------------------------------------------------------------
@@ -642,14 +738,12 @@ def _phase2_profile_worker(task) -> tuple:
     (end, parent, keep_exclusive, write_traces, pipeline,
      slab_bytes) = _PHASE2_STATE
     prof = MeasurementProfile.load(path)
-    remap_arr = np.asarray(remap_final, dtype=np.int64)
-    sm = transform_plane(prof.metrics, remap_arr, routes_final, parent, end,
-                         pipeline=pipeline, keep_exclusive=keep_exclusive)
-    acc = StatsAccumulator()
-    acc.update(sm)
-    if write_traces and prof.trace.time.size:
-        tr = prof.trace.remap_contexts(remap_arr)
-        ttime, tctx = prof.trace.time, tr.ctx
+    sm, acc, tr = transform_profile(prof, remap_final, routes_final, parent,
+                                    end, pipeline=pipeline,
+                                    keep_exclusive=keep_exclusive,
+                                    want_trace=write_traces)
+    if tr is not None:
+        ttime, tctx = tr.time, tr.ctx
     else:
         ttime, tctx = np.empty(0, np.float64), np.empty(0, np.uint32)
 

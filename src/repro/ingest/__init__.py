@@ -1,0 +1,24 @@
+"""Live ingest tier: continuous profile uploads -> incremental aggregation
+-> versioned database snapshots (ROADMAP item 1; paper §4's streaming
+premise taken online).
+
+* :class:`~repro.ingest.state.IngestState` — resident aggregation whose
+  phase boundary is an *append*;
+* :class:`~repro.ingest.snapshot.SnapshotStore` — epoch directories,
+  atomic ``CURRENT`` pointer, retention GC;
+* :class:`~repro.ingest.server.IngestHTTPServer` — the upload endpoint;
+* :class:`~repro.ingest.client.IngestClient` — typed client with retries.
+"""
+from repro.ingest.client import IngestClient
+from repro.ingest.server import IngestHTTPServer
+from repro.ingest.snapshot import (SnapshotGone, SnapshotStore,
+                                   epoch_dirname, read_current,
+                                   read_manifest)
+from repro.ingest.state import IngestState, relabel_plane
+
+__all__ = [
+    "IngestState", "relabel_plane",
+    "IngestHTTPServer", "IngestClient",
+    "SnapshotStore", "SnapshotGone", "epoch_dirname", "read_current",
+    "read_manifest",
+]

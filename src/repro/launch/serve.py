@@ -12,8 +12,20 @@ Query service over a completed analysis database::
         --cache-mb 64 [--warm-mb 32 | --no-warm] [--no-batching] \
         [--shards 4]
 
-The query server prints one JSON line with its URL and warming report,
-then blocks until SIGINT.
+Query service *following* a live snapshot root (``db`` is the ingest
+tier's output directory; the server picks up each published epoch without
+restart)::
+
+    PYTHONPATH=src python -m repro.launch.serve query-server runs/live \
+        --follow [--poll-ms 250] [--shards 4]
+
+Live ingest endpoint (continuous uploads -> incremental aggregation ->
+versioned snapshots under the root)::
+
+    PYTHONPATH=src python -m repro.launch.serve ingest runs/live \
+        --port 8423 [--publish-every 64] [--retain 2] [--max-pending 256]
+
+Each server prints one JSON line with its URL, then blocks until SIGINT.
 """
 from __future__ import annotations
 
@@ -70,26 +82,98 @@ def _query_server_main(argv):
                     help="serve each HTTP call directly (baseline mode)")
     ap.add_argument("--timeout-s", type=float, default=30.0,
                     help="default per-request deadline")
+    ap.add_argument("--follow", action="store_true",
+                    help="treat the db argument as a live snapshot ROOT "
+                         "(ingest output dir): open whatever CURRENT "
+                         "points at and pick up new epochs without "
+                         "restart")
+    ap.add_argument("--poll-ms", type=float, default=250.0,
+                    help="CURRENT-pointer poll interval under --follow")
+    ap.add_argument("--follow-wait-s", type=float, default=60.0,
+                    help="how long to wait for the first snapshot epoch "
+                         "under --follow before giving up")
     args = ap.parse_args(argv)
 
     warm_bytes = (0 if args.no_warm
                   else None if args.warm_mb is None else args.warm_mb << 20)
-    with Database(args.db, cache_bytes=args.cache_mb << 20) as db, \
-            QueryHTTPServer(db, host=args.host, port=args.port,
-                            batching=not args.no_batching,
-                            max_batch=args.max_batch,
-                            max_wait_ms=args.max_wait_ms,
-                            max_queue=args.max_queue,
-                            executor=args.executor, n_workers=args.workers,
-                            default_timeout_s=args.timeout_s,
-                            adaptive_wait=not args.no_adaptive_wait,
-                            warm_bytes=warm_bytes, shards=args.shards,
-                            shard_slab_bytes=args.shard_slab_mb << 20) as srv:
-        print(json.dumps({"url": srv.url, "batching": srv.batching,
-                          "shards": srv.shards,
-                          "profiles": db.n_profiles,
-                          "contexts": db.n_contexts,
-                          "warm": srv.warm_report}), flush=True)
+    kwargs = dict(host=args.host, port=args.port,
+                  batching=not args.no_batching,
+                  max_batch=args.max_batch, max_wait_ms=args.max_wait_ms,
+                  max_queue=args.max_queue,
+                  executor=args.executor, n_workers=args.workers,
+                  default_timeout_s=args.timeout_s,
+                  adaptive_wait=not args.no_adaptive_wait,
+                  warm_bytes=warm_bytes, shards=args.shards,
+                  shard_slab_bytes=args.shard_slab_mb << 20)
+
+    def _serve(srv, db):
+        info = {"url": srv.url, "batching": srv.batching,
+                "shards": srv.shards, "profiles": db.n_profiles,
+                "contexts": db.n_contexts, "warm": srv.warm_report}
+        if srv.switcher is not None:
+            info["epoch"] = srv.switcher.epoch
+        print(json.dumps(info), flush=True)
+        try:
+            while True:
+                time.sleep(3600)
+        except KeyboardInterrupt:
+            print("shutting down", file=sys.stderr)
+
+    if args.follow:
+        with QueryHTTPServer(args.db, follow=True, poll_ms=args.poll_ms,
+                             follow_wait_s=args.follow_wait_s,
+                             follow_cache_bytes=args.cache_mb << 20,
+                             **kwargs) as srv:
+            _serve(srv, srv.db)
+    else:
+        with Database(args.db, cache_bytes=args.cache_mb << 20) as db, \
+                QueryHTTPServer(db, **kwargs) as srv:
+            _serve(srv, db)
+
+
+def _ingest_main(argv):
+    from repro.core.aggregate import AggregationConfig
+    from repro.ingest import IngestHTTPServer
+
+    ap = argparse.ArgumentParser(prog="repro.launch.serve ingest")
+    ap.add_argument("root", help="snapshot root (spool/ + epoch dirs + "
+                                 "CURRENT live here)")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8423,
+                    help="0 picks a free port (printed on startup)")
+    ap.add_argument("--executor", default="threads",
+                    choices=["serial", "threads", "processes"],
+                    help="runtime backend for incremental aggregation")
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--max-pending", type=int, default=256,
+                    help="spool backlog bound; overflow answers 429")
+    ap.add_argument("--merge-batch", type=int, default=32,
+                    help="max profiles folded into the state per merge")
+    ap.add_argument("--publish-every", type=int, default=0,
+                    help="auto-publish a snapshot each time this many new "
+                         "profiles have merged (0 = only on /v1/publish)")
+    ap.add_argument("--retain", type=int, default=2,
+                    help="published epochs kept by GC (current and pinned "
+                         "epochs always survive)")
+    ap.add_argument("--max-body-mb", type=int, default=64,
+                    help="largest accepted upload body")
+    ap.add_argument("--no-traces", action="store_true",
+                    help="skip the trace database in published snapshots")
+    args = ap.parse_args(argv)
+
+    cfg = AggregationConfig(executor=args.executor, n_workers=args.workers,
+                            write_traces=not args.no_traces)
+    with IngestHTTPServer(args.root, host=args.host, port=args.port,
+                          config=cfg, max_pending=args.max_pending,
+                          merge_batch=args.merge_batch,
+                          publish_every=args.publish_every,
+                          retain=args.retain,
+                          max_body_bytes=args.max_body_mb << 20) as srv:
+        cur = srv.store.current()
+        print(json.dumps({"url": srv.url, "root": srv.root,
+                          "epoch": cur[0] if cur else None,
+                          "publish_every": srv.publish_every,
+                          "retain": srv.retain}), flush=True)
         try:
             while True:
                 time.sleep(3600)
@@ -139,6 +223,8 @@ def main(argv=None):
     argv = list(sys.argv[1:] if argv is None else argv)
     if argv and argv[0] == "query-server":
         _query_server_main(argv[1:])
+    elif argv and argv[0] == "ingest":
+        _ingest_main(argv[1:])
     else:
         _generate_main(argv)
 

@@ -22,6 +22,7 @@ Quick start::
 from repro.query.cache import LRUCache
 from repro.query.database import Database
 from repro.query.diff import DiffEntry, diff, total_delta
+from repro.query.epoch import EpochSwitcher, wait_for_epoch
 from repro.query.export import to_dataframe
 from repro.query.select import (HotPath, StripeRow, context_aggregate,
                                 profile_aggregate, select_contexts,
@@ -30,7 +31,7 @@ from repro.query.select import (HotPath, StripeRow, context_aggregate,
 from repro.query.timeline import activity, occupancy, samples_in_window
 
 __all__ = [
-    "Database", "LRUCache",
+    "Database", "LRUCache", "EpochSwitcher", "wait_for_epoch",
     "HotPath", "StripeRow", "select_contexts", "stripe_select",
     "threshold_contexts", "topk_hot_paths",
     "profile_aggregate", "context_aggregate",

@@ -83,6 +83,10 @@ class Database:
         self._stat_keys = (pack_keys(self.stats["ctx"], self.stats["mid"])
                            if self.stats else np.empty(0, np.uint64))
 
+        # snapshot epoch this handle serves, when opened from a versioned
+        # snapshot root (open_current / EpochSwitcher); None for plain dirs
+        self.epoch: int | None = None
+
         self.cache = LRUCache(cache_bytes)
         self.counters = {"pms_plane_loads": 0, "cms_plane_loads": 0,
                          "cms_stripe_reads": 0, "cms_stripe_skips": 0,
@@ -90,6 +94,30 @@ class Database:
         # `+=` on a dict slot is not atomic; the serving layer drives one
         # handle from many threads and the load benchmark sums these
         self._counter_lock = threading.Lock()
+
+    @classmethod
+    def open_current(cls, root, *, cache_bytes: int = 64 << 20) -> "Database":
+        """Open the epoch a snapshot root's ``CURRENT`` pointer names.
+
+        One-shot resolution (postmortem reads, tests); a serving process
+        that must *track* the pointer uses
+        :class:`repro.query.epoch.EpochSwitcher` instead.  Raises
+        :class:`~repro.ingest.snapshot.SnapshotGone` when the pointed-at
+        epoch directory lost a race with the publisher's GC — re-resolve
+        and retry.
+        """
+        from repro.ingest.snapshot import SnapshotGone, read_current
+        cur = read_current(root)
+        if cur is None:
+            raise FileNotFoundError(f"no CURRENT pointer under {root}")
+        epoch, db_dir = cur
+        try:
+            db = cls(db_dir, cache_bytes=cache_bytes)
+        except (FileNotFoundError, OSError) as e:
+            raise SnapshotGone(
+                f"epoch {epoch} dir vanished under {root}") from e
+        db.epoch = epoch
+        return db
 
     def _count(self, key: str) -> None:
         with self._counter_lock:

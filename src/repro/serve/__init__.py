@@ -14,7 +14,7 @@
 * :func:`warm_cache` — stats-driven startup plane preloading
   (:mod:`repro.serve.warm`).
 """
-from repro.serve.client import (QueryClient, RequestFailed,
+from repro.serve.client import (JSONClient, QueryClient, RequestFailed,
                                 RetryBudgetExceeded, RetryPolicy,
                                 ServerOverloaded, TransportError)
 from repro.serve.engine import (QueryError, QueryRequest, QueryServer,
@@ -29,7 +29,7 @@ __all__ = [
     "QueryServer", "QueryRequest", "QueryError",
     "BatchScheduler", "Overloaded",
     "ShardedQueryServer", "ConsistentHashRing",
-    "QueryHTTPServer", "QueryClient", "ServerOverloaded", "RequestFailed",
-    "TransportError", "RetryPolicy", "RetryBudgetExceeded",
+    "QueryHTTPServer", "QueryClient", "JSONClient", "ServerOverloaded",
+    "RequestFailed", "TransportError", "RetryPolicy", "RetryBudgetExceeded",
     "plan_warm", "warm_cache",
 ]

@@ -117,7 +117,16 @@ class RetryPolicy:
             f"{time.monotonic() - t0:.2f}s") from last
 
 
-class QueryClient:
+class JSONClient:
+    """One keep-alive HTTP/1.1 connection speaking JSON envelopes.
+
+    The shared transport under :class:`QueryClient` and the ingest tier's
+    :class:`~repro.ingest.client.IngestClient`: JSON (or raw-bytes) request
+    bodies, JSON responses, 429 -> :class:`ServerOverloaded` (so one
+    :class:`RetryPolicy` serves both services), everything else non-200 ->
+    :class:`TransportError`.
+    """
+
     def __init__(self, host: str, port: int, *, timeout_s: float = 30.0):
         self.host, self.port = host, int(port)
         self.timeout_s = float(timeout_s)
@@ -130,9 +139,15 @@ class QueryClient:
                 self.host, self.port, timeout=self.timeout_s)
         return self._conn
 
-    def _roundtrip(self, method: str, path: str, body: dict | None = None):
-        payload = None if body is None else json.dumps(body).encode("utf-8")
-        headers = {"Content-Type": "application/json"} if payload else {}
+    def _roundtrip(self, method: str, path: str, body: dict | None = None,
+                   *, raw: bytes | None = None,
+                   content_type: str = "application/json"):
+        if raw is not None:
+            payload: bytes | None = raw
+        else:
+            payload = (None if body is None
+                       else json.dumps(body).encode("utf-8"))
+        headers = {"Content-Type": content_type} if payload is not None else {}
         for attempt in (0, 1):  # one transparent retry on a dropped keep-alive
             conn = self._connection()
             try:
@@ -158,11 +173,14 @@ class QueryClient:
             self._conn.close()
             self._conn = None
 
-    def __enter__(self) -> "QueryClient":
+    def __enter__(self):
         return self
 
     def __exit__(self, *a) -> None:
         self.close()
+
+
+class QueryClient(JSONClient):
 
     # -- batched query surface -------------------------------------------------
     def batch(self, requests: list[QueryRequest], *,

@@ -126,10 +126,14 @@ class QueryServer:
         self.db = db
 
     # -- single-request dispatch -------------------------------------------
-    def submit(self, req: QueryRequest):
+    def submit(self, req: QueryRequest, db=None):
+        """Serve one request.  ``db`` overrides the server's database for
+        this call — the epoch-pinning hook: a follower serving a batch
+        passes the batch's pinned snapshot so a concurrent epoch switch
+        cannot make one reply straddle two databases."""
         from repro.query import (samples_in_window, threshold_contexts,
                                  topk_hot_paths)
-        db = self.db
+        db = self.db if db is None else db
         if req.op == "profile":
             return db.profile_metrics(req.pid)
         if req.op == "stripe":
@@ -164,25 +168,30 @@ class QueryServer:
             pass  # malformed ids sort with the plane-less ops; submit reports
         return (2, 0)  # summary-only ops: no plane at all
 
-    def serve_one(self, req: QueryRequest):
+    def serve_one(self, req: QueryRequest, db=None):
         """:meth:`submit` that never raises: failures (unknown op, bad ids,
-        missing stores) come back as a :class:`QueryError` result."""
+        missing stores) come back as a :class:`QueryError` result.
+        ``db`` is only forwarded when pinned, so ``submit`` overrides that
+        predate the epoch hook keep working."""
         try:
-            return self.submit(req)
+            return (self.submit(req) if db is None
+                    else self.submit(req, db=db))
         except Exception as e:                          # noqa: BLE001
             return QueryError(op=str(getattr(req, "op", "?")),
                               error=type(e).__name__, message=str(e))
 
-    def serve(self, requests: list[QueryRequest]) -> list:
+    def serve(self, requests: list[QueryRequest], db=None) -> list:
         """Serve a batch in plane-locality order.
 
         Failures are isolated per request: one malformed request yields a
         :class:`QueryError` in its slot and the rest of the batch is served
         normally (a poisoned request must not kill its batch peers).
+        ``db`` pins the whole batch to one database handle (epoch
+        consistency for followers).
         """
         order = sorted(range(len(requests)),
                        key=lambda i: self._locality_key(requests[i]))
         results: list = [None] * len(requests)
         for i in order:
-            results[i] = self.serve_one(requests[i])
+            results[i] = self.serve_one(requests[i], db=db)
         return results

@@ -34,8 +34,9 @@ from concurrent.futures import TimeoutError as FutureTimeout
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 
 from repro.query.database import Database
+from repro.query.epoch import EpochSwitcher, wait_for_epoch
 from repro.serve.engine import QueryError, QueryServer
-from repro.serve.scheduler import BatchScheduler, Overloaded
+from repro.serve.scheduler import BatchScheduler, LatencyHistogram, Overloaded
 from repro.serve.shard import ShardedQueryServer
 from repro.serve.warm import warm_cache
 from repro.serve.wire import request_from_wire, result_to_wire
@@ -59,15 +60,32 @@ class QueryHTTPServer:
     serving.
     """
 
-    def __init__(self, db: Database, *, host: str = "127.0.0.1",
+    def __init__(self, db, *, host: str = "127.0.0.1",
                  port: int = 0, batching: bool = True, max_batch: int = 16,
                  max_wait_ms: float = 0.0, max_queue: int = 256,
                  executor: str = "threads", n_workers: int = 4,
                  default_timeout_s: float = 30.0, adaptive_wait: bool = True,
                  warm_bytes: int | None = 0, shards: int = 0,
                  shard_cache_bytes: int | None = None,
-                 shard_slab_bytes: int = 4 << 20, shard_slabs: int = 8):
-        self.db = db
+                 shard_slab_bytes: int = 4 << 20, shard_slabs: int = 8,
+                 follow: bool = False, poll_ms: float = 250.0,
+                 follow_wait_s: float = 60.0,
+                 follow_cache_bytes: int = 64 << 20):
+        self.switcher: EpochSwitcher | None = None
+        self._poll_s = max(float(poll_ms), 1.0) / 1e3
+        if follow:
+            # ``db`` is the snapshot ROOT (the ingest tier's output dir),
+            # not a Database: open whatever CURRENT points at and track it
+            root = str(db)
+            wait_for_epoch(root, timeout_s=follow_wait_s)
+            self.switcher = EpochSwitcher(root, cache_bytes=follow_cache_bytes)
+            self._db = None
+        elif isinstance(db, (str, bytes)) or hasattr(db, "__fspath__"):
+            raise TypeError("pass an open Database (or follow=True with a "
+                            "snapshot root)")
+        else:
+            self._db = db
+        db = self.db  # current Database from here on, either source
         self.shards = max(0, int(shards))
         self.sharded: ShardedQueryServer | None = None
         if self.shards:
@@ -90,8 +108,42 @@ class QueryHTTPServer:
         self.warm_report: dict | None = None
         self._httpd: ThreadingHTTPServer | None = None
         self._thread: threading.Thread | None = None
+        self._follower: threading.Thread | None = None
+        self._follow_stop = threading.Event()
+        self._reopen_hist = LatencyHistogram()
+        self._follow_errors = 0
         self._started_t = 0.0
         self._http_requests = 0
+
+    @property
+    def db(self) -> Database:
+        """The database answering *new* calls right now.  Under
+        ``follow=True`` this moves when an epoch publishes; in-flight
+        batches keep serving their pinned epoch regardless."""
+        if self.switcher is not None:
+            return self.switcher.db
+        return self._db
+
+    # -- epoch following ------------------------------------------------------
+    def _follow_loop(self) -> None:
+        while not self._follow_stop.wait(self._poll_s):
+            try:
+                if not self.switcher.poll():
+                    continue
+                t0 = time.monotonic()
+                if self.sharded is not None:
+                    # all workers swing together; the window lock inside
+                    # reopen() keeps every dispatch single-epoch
+                    self.sharded.reopen(self.switcher.db.db_dir)
+                else:
+                    # in-process: future batches default to the new epoch;
+                    # in-flight ones hold pins on the old handle
+                    self.engine.db = self.switcher.db
+                self._reopen_hist.observe(time.monotonic() - t0)
+            except Exception:                               # noqa: BLE001
+                # a torn transition (e.g. SnapshotGone racing GC) is
+                # retried on the next poll; keep serving the old epoch
+                self._follow_errors += 1
 
     # -- lifecycle -----------------------------------------------------------
     def start(self) -> "QueryHTTPServer":
@@ -118,9 +170,19 @@ class QueryHTTPServer:
                                         kwargs={"poll_interval": 0.1},
                                         daemon=True, name="serve-http")
         self._thread.start()
+        if self.switcher is not None:
+            self._follow_stop.clear()
+            self._follower = threading.Thread(target=self._follow_loop,
+                                              daemon=True,
+                                              name="serve-epoch-follower")
+            self._follower.start()
         return self
 
     def stop(self) -> None:
+        self._follow_stop.set()
+        if self._follower is not None:
+            self._follower.join(timeout=10.0)
+            self._follower = None
         if self._httpd is not None:
             self._httpd.shutdown()
             self._httpd.server_close()
@@ -132,6 +194,8 @@ class QueryHTTPServer:
             self.scheduler.stop()
         if self.sharded is not None:
             self.sharded.close()
+        if self.switcher is not None:
+            self.switcher.close()
 
     @property
     def address(self) -> tuple[str, int]:
@@ -151,11 +215,14 @@ class QueryHTTPServer:
 
     # -- endpoint bodies ------------------------------------------------------
     def health(self) -> dict:
-        return {"status": "ok", "batching": self.batching,
-                "shards": self.shards,
-                "profiles": self.db.n_profiles,
-                "contexts": self.db.n_contexts,
-                "uptime_s": round(time.monotonic() - self._started_t, 3)}
+        out = {"status": "ok", "batching": self.batching,
+               "shards": self.shards,
+               "profiles": self.db.n_profiles,
+               "contexts": self.db.n_contexts,
+               "uptime_s": round(time.monotonic() - self._started_t, 3)}
+        if self.switcher is not None:
+            out["epoch"] = self.switcher.epoch
+        return out
 
     def metrics(self) -> dict:
         out = {"cache": self.db.cache_stats(),
@@ -167,6 +234,11 @@ class QueryHTTPServer:
                             if self.scheduler is not None else None)
         out["shards"] = (self.sharded.metrics()
                          if self.sharded is not None else None)
+        if self.switcher is not None:
+            out["epoch"] = {"current": self.switcher.epoch,
+                            "transitions": self.switcher.transitions,
+                            "follow_errors": self._follow_errors,
+                            "reopen": self._reopen_hist.as_dict()}
         return out
 
     def serve_call(self, body: dict) -> dict:
@@ -204,26 +276,39 @@ class QueryHTTPServer:
                 reqs.append(None)
 
         live = [r for r in reqs if r is not None]
-        if self.scheduler is not None:
-            futures = iter(self.scheduler.submit_many(live,
-                                                      timeout_s=timeout_s))
-            deadline = time.monotonic() + (timeout_s
-                                           or self.scheduler.default_timeout_s)
-            results = []
-            for r in reqs:
-                if r is None:
-                    results.append(None)
-                    continue
-                fut = next(futures)
-                try:
-                    results.append(fut.result(
-                        timeout=max(deadline - time.monotonic(), 0.0)))
-                except FutureTimeout:
-                    results.append(QueryError(op=r.op, error="DeadlineExceeded",
-                                              message="result wait timed out"))
-        else:
-            served = iter(self.engine.serve(live))
-            results = [None if r is None else next(served) for r in reqs]
+        # under follow=True, in-process serving pins this call's whole
+        # batch to one epoch handle: a concurrent epoch switch retires the
+        # old database but these requests keep reading it (the sharded
+        # backend instead pins whole dispatch windows inside reopen())
+        pin = (self.switcher.acquire()
+               if self.switcher is not None and self.sharded is None else None)
+        try:
+            if self.scheduler is not None:
+                futures = iter(self.scheduler.submit_many(
+                    live, timeout_s=timeout_s, pin=pin))
+                deadline = time.monotonic() + (
+                    timeout_s or self.scheduler.default_timeout_s)
+                results = []
+                for r in reqs:
+                    if r is None:
+                        results.append(None)
+                        continue
+                    fut = next(futures)
+                    try:
+                        results.append(fut.result(
+                            timeout=max(deadline - time.monotonic(), 0.0)))
+                    except FutureTimeout:
+                        results.append(QueryError(
+                            op=r.op, error="DeadlineExceeded",
+                            message="result wait timed out"))
+            else:
+                served = iter(self.engine.serve(live, db=pin.db)
+                              if pin is not None
+                              else self.engine.serve(live))
+                results = [None if r is None else next(served) for r in reqs]
+        finally:
+            if pin is not None:
+                pin.release()
 
         wire = []
         for i, res in enumerate(results):

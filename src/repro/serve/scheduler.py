@@ -109,6 +109,10 @@ class _Pending:
     future: Future
     enq_t: float
     deadline: float
+    # epoch pin: a retained EpochSwitcher handle; the worker serves this
+    # request against pin.db and releases the pin at every terminal path,
+    # so an epoch switch mid-queue cannot split one call across snapshots
+    pin: object | None = None
 
 
 class BatchScheduler:
@@ -233,6 +237,8 @@ class BatchScheduler:
         for p in pending:
             if not p.future.done():
                 self._resolve(p.future, exc=exc)
+            if p.pin is not None:
+                p.pin.release()
 
     def __enter__(self) -> "BatchScheduler":
         return self.start()
@@ -262,20 +268,31 @@ class BatchScheduler:
         with self._lock:
             return self._retry_after_locked()
 
-    def submit(self, req: QueryRequest, *, timeout_s: float | None = None
-               ) -> Future:
-        return self.submit_many([req], timeout_s=timeout_s)[0]
+    def submit(self, req: QueryRequest, *, timeout_s: float | None = None,
+               pin=None) -> Future:
+        return self.submit_many([req], timeout_s=timeout_s, pin=pin)[0]
 
     def submit_many(self, reqs: list[QueryRequest], *,
-                    timeout_s: float | None = None) -> list[Future]:
+                    timeout_s: float | None = None, pin=None) -> list[Future]:
         """Admit a group atomically: all enqueued, or :class:`Overloaded`.
 
         Atomic admission keeps multi-request HTTP calls coherent — a call
         either gets every answer or a single 429, never a half-served body.
+
+        ``pin`` (an epoch handle with ``retain``/``release``/``db``) pins
+        every admitted request to one database snapshot: retained once per
+        request here, served against ``pin.db``, and released at every
+        terminal path (served, expired, cancelled, failed) — in-process
+        backends only; a sharded backend gets call-level epoch consistency
+        from its own single-dispatch reopen lock.
         """
         timeout_s = self.default_timeout_s if timeout_s is None else timeout_s
         now = time.monotonic()
         if self._direct:
+            if pin is not None:
+                raise ValueError(
+                    "epoch pins apply to in-process serving; a sharded "
+                    "backend pins whole dispatches via reopen()")
             return self._submit_direct(list(reqs), now, timeout_s)
         with self._cond:
             if self._stopped:
@@ -285,7 +302,8 @@ class BatchScheduler:
                 raise Overloaded(self._retry_after_locked())
             out = []
             for req in reqs:
-                p = _Pending(req, Future(), now, now + timeout_s)
+                p = _Pending(req, Future(), now, now + timeout_s,
+                             pin.retain() if pin is not None else None)
                 self._q.append(p)
                 out.append(p.future)
             self.counters["submitted"] += len(reqs)
@@ -411,6 +429,17 @@ class BatchScheduler:
             return batch
 
     def _execute(self, batch: list[_Pending]) -> None:
+        try:
+            self._execute_inner(batch)
+        finally:
+            # every pending passes through here exactly once (served,
+            # expired, or cancelled) — the single release point that
+            # balances submit_many's per-request retain
+            for p in batch:
+                if p.pin is not None:
+                    p.pin.release()
+
+    def _execute_inner(self, batch: list[_Pending]) -> None:
         now = time.monotonic()
         live: list[_Pending] = []
         for p in batch:
@@ -437,7 +466,8 @@ class BatchScheduler:
         for i in order:
             p = live[i]
             t0 = time.monotonic()
-            res = self.server.serve_one(p.req)
+            res = (self.server.serve_one(p.req, db=p.pin.db)
+                   if p.pin is not None else self.server.serve_one(p.req))
             dt = time.monotonic() - t0
             observed.append((str(getattr(p.req, "op", "?")), dt,
                              t0 - p.enq_t, isinstance(res, QueryError)))

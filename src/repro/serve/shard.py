@@ -86,6 +86,55 @@ def _slab_eligible(req: QueryRequest, scatter: bool) -> bool:
 
 
 # ---------------------------------------------------------------------------
+# epoch transitions: many dispatch windows XOR one reopen
+# ---------------------------------------------------------------------------
+
+class _RWLock:
+    """Reader/writer lock with writer preference.
+
+    Dispatch windows are readers (arbitrarily many in flight); an epoch
+    :meth:`ShardedQueryServer.reopen` is the writer.  Writer preference —
+    a waiting reopen blocks *new* windows — so a steady query stream can
+    never starve an epoch switch, and every window that does run is
+    entirely before or entirely after the switch: no batched reply ever
+    mixes epochs.
+    """
+
+    def __init__(self):
+        self._cond = threading.Condition()
+        self._readers = 0
+        self._writer = False
+        self._writers_waiting = 0
+
+    def acquire_read(self) -> None:
+        with self._cond:
+            while self._writer or self._writers_waiting:
+                self._cond.wait()
+            self._readers += 1
+
+    def release_read(self) -> None:
+        with self._cond:
+            self._readers -= 1
+            if not self._readers:
+                self._cond.notify_all()
+
+    def acquire_write(self) -> None:
+        with self._cond:
+            self._writers_waiting += 1
+            try:
+                while self._writer or self._readers:
+                    self._cond.wait()
+            finally:
+                self._writers_waiting -= 1
+            self._writer = True
+
+    def release_write(self) -> None:
+        with self._cond:
+            self._writer = False
+            self._cond.notify_all()
+
+
+# ---------------------------------------------------------------------------
 # consistent-hash ring
 # ---------------------------------------------------------------------------
 
@@ -260,21 +309,39 @@ def _shard_worker_main(shard: int, n_shards: int, vnodes: int, salt: bytes,
 
     signal.signal(signal.SIGINT, signal.SIG_IGN)  # parent owns shutdown
     ring = ConsistentHashRing(n_shards, vnodes=vnodes, salt=salt)
-    db = Database(db_dir, cache_bytes=cache_bytes)
-    server = (server_factory or QueryServer)(db)
-    owned_ctx = (ring.owned_context_mask(db.n_contexts, shard)
-                 if n_shards > 1 else None)
-    warm_report = None
-    if warm_bytes is None or warm_bytes > 0:
-        owned = ((lambda store, oid: ring.owns_plane(store, oid, shard))
-                 if n_shards > 1 else None)
-        warm_report = warm_cache(db, warm_bytes, owned=owned)
+    owned = ((lambda store, oid: ring.owns_plane(store, oid, shard))
+             if n_shards > 1 else None)
+
+    def _open(path):
+        d = Database(path, cache_bytes=cache_bytes)
+        srv = (server_factory or QueryServer)(d)
+        octx = (ring.owned_context_mask(d.n_contexts, shard)
+                if n_shards > 1 else None)
+        report = None
+        if warm_bytes is None or warm_bytes > 0:
+            report = warm_cache(d, warm_bytes, owned=owned)
+        return d, srv, octx, report
+
+    db, server, owned_ctx, warm_report = _open(db_dir)
     resp_q.put(("ready", {"shard": shard, "pid": os.getpid(),
                           "warm": warm_report}))
     while True:
         msg = req_q.get()
         if msg is None:
             break
+        if isinstance(msg, tuple) and msg and msg[0] == "reopen":
+            # epoch switch: messages are processed serially, so every
+            # batch queued before this one was answered from the old
+            # epoch — closing here is safe because every result path
+            # copies out of the mmap before replying.  A fresh Database
+            # means a fresh (empty) plane LRU: cache invalidation is
+            # structural, not key-by-key.
+            new_dir = msg[1]
+            db.close()
+            db, server, owned_ctx, warm_report = _open(new_dir)
+            resp_q.put(("reopened", {"shard": shard, "pid": os.getpid(),
+                                     "dir": new_dir, "warm": warm_report}))
+            continue
         items = msg  # [(key, QueryRequest, slab_name | None, scatter), ...]
         # plane-less ops (group 2: top-k/threshold partials) first — they
         # are barrier legs of scatter-gather merges, so answering them
@@ -336,6 +403,7 @@ class _Shard:
     req_q: object = None
     resp_q: object = None
     ready: threading.Event = field(default_factory=threading.Event)
+    reopen_ack: threading.Event = field(default_factory=threading.Event)
     warm: dict | None = None
     deaths: int = 0
 
@@ -402,7 +470,9 @@ class ShardedQueryServer:
         self._stats = {"dispatched": 0, "completed": 0, "respawns": 0,
                        "worker_lost": 0, "replayed": 0, "scatter_queries": 0,
                        "deduped": 0, "slab_payloads": 0,
-                       "inline_payloads": 0}
+                       "inline_payloads": 0, "reopens": 0,
+                       "reopen_last_s": 0.0}
+        self._rw = _RWLock()  # windows are readers, reopen() the writer
 
     # make the scheduler's locality sort work unchanged
     _locality_key = staticmethod(QueryServer._locality_key)
@@ -502,6 +572,64 @@ class ShardedQueryServer:
 
     def __exit__(self, *a) -> None:
         self.close()
+
+    # -- epoch transitions ----------------------------------------------------
+    def reopen(self, db_dir: str) -> dict:
+        """Move every worker to a new database directory without restart.
+
+        Takes the window lock exclusively (writer preference — a query
+        stream cannot starve the switch), sends each worker a ``reopen``
+        control message, and waits for all acks.  Worker queues are FIFO
+        and processed serially, so every batch dispatched before this
+        call is answered from the *old* epoch and every batch after it
+        from the new one — the window lock makes that boundary cover
+        whole dispatch windows, so no batched reply mixes epochs.
+
+        A worker that dies mid-switch is respawned by the supervisor on
+        the previous directory (replays land on the old epoch — the
+        documented recovery limit) and the reopen message is re-sent, so
+        the switch still converges.
+        """
+        if not self._started:
+            raise RuntimeError("sharded query server is not started")
+        if self._closed:
+            raise RuntimeError("sharded query server is closed")
+        from repro.query.database import CMS_NAME
+        new_dir = str(db_dir)
+        t0 = time.monotonic()
+        self._rw.acquire_write()
+        try:
+            for shard in self._shards:
+                with shard.lock:
+                    shard.reopen_ack = threading.Event()
+                    shard.req_q.put(("reopen", new_dir))
+            deadline = time.monotonic() + self.start_timeout_s
+            for shard in self._shards:
+                seen = shard.deaths
+                while not shard.reopen_ack.wait(0.1):
+                    if self._closed:
+                        raise RuntimeError("sharded query server closed "
+                                           "during reopen")
+                    with shard.lock:
+                        if shard.deaths != seen:
+                            # the worker died mid-switch; its replacement
+                            # came up on the old directory — re-send
+                            seen = shard.deaths
+                            shard.req_q.put(("reopen", new_dir))
+                    if time.monotonic() > deadline:
+                        raise RuntimeError(
+                            f"shard {shard.index} did not ack reopen "
+                            f"within {self.start_timeout_s:.0f}s")
+            # respawns-after-death from here on land on the new epoch
+            self.db_dir = new_dir
+            self._has_cms = os.path.exists(os.path.join(new_dir, CMS_NAME))
+            dt = time.monotonic() - t0
+            with self._stats_lock:
+                self._stats["reopens"] += 1
+                self._stats["reopen_last_s"] = dt
+            return {"dir": new_dir, "seconds": dt}
+        finally:
+            self._rw.release_write()
 
     # -- routing -------------------------------------------------------------
     def shard_of(self, req: QueryRequest) -> int | None:
@@ -621,6 +749,14 @@ class ShardedQueryServer:
         """
         if not self._started:
             raise RuntimeError("sharded query server is not started")
+        self._rw.acquire_read()
+        try:
+            return self._serve_window_async_locked(reqs)
+        finally:
+            self._rw.release_read()
+
+    def _serve_window_async_locked(self,
+                                   reqs: list[QueryRequest]) -> list[Future]:
         alias = list(range(len(reqs)))
         reps: dict[object, int] = {}
         for i, req in enumerate(reqs):
@@ -708,6 +844,10 @@ class ShardedQueryServer:
         if msg[0] == "ready":
             shard.warm = msg[1]
             shard.ready.set()
+            return []
+        if msg[0] == "reopened":
+            shard.warm = msg[1].get("warm")
+            shard.reopen_ack.set()
             return []
         resolved: list[tuple[Future, object]] = []
         slab_n = inline_n = 0

@@ -1,0 +1,99 @@
+"""Markdown link checker for the docs site (stdlib only).
+
+Walks the given markdown files (default: README.md + docs/**.md),
+extracts inline links and images, and fails if a *relative* link points
+at a file that does not exist, or a ``#fragment`` names a heading the
+target markdown file does not define.  External (http/https/mailto)
+links are counted but not fetched — CI must not flake on someone else's
+server.
+
+    python tools/check_links.py [FILES...]
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+# inline links/images: [text](target) — code spans stripped first so
+# `foo(bar)` examples don't parse as links
+_LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+_CODE_SPAN_RE = re.compile(r"`[^`]*`")
+_FENCE_RE = re.compile(r"^(```|~~~)")
+_HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$")
+
+
+def _anchor(heading: str) -> str:
+    """GitHub's heading -> fragment rule: lowercase, drop punctuation,
+    spaces to dashes."""
+    h = _CODE_SPAN_RE.sub(lambda m: m.group(0).strip("`"), heading.strip())
+    h = re.sub(r"[^\w\- ]", "", h.lower())
+    return h.replace(" ", "-")
+
+
+def _parse(path: str):
+    """Yield (lineno, target) links; collect the file's own anchors."""
+    links, anchors = [], set()
+    in_fence = False
+    with open(path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            if _FENCE_RE.match(line.strip()):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            m = _HEADING_RE.match(line)
+            if m:
+                anchors.add(_anchor(m.group(1)))
+            for lm in _LINK_RE.finditer(_CODE_SPAN_RE.sub("", line)):
+                links.append((lineno, lm.group(1)))
+    return links, anchors
+
+
+def check(files: list[str]) -> int:
+    parsed = {os.path.abspath(p): _parse(p) for p in files}
+    errors, external, internal = [], 0, 0
+    for path, (links, _) in parsed.items():
+        base = os.path.dirname(path)
+        for lineno, target in links:
+            if target.startswith(("http://", "https://", "mailto:")):
+                external += 1
+                continue
+            internal += 1
+            dest, _, frag = target.partition("#")
+            dest_path = os.path.abspath(os.path.join(base, dest)) \
+                if dest else path
+            rel = os.path.relpath(path)
+            if not os.path.exists(dest_path):
+                errors.append(f"{rel}:{lineno}: broken link -> {target}")
+                continue
+            if frag and dest_path.endswith(".md"):
+                if dest_path not in parsed:
+                    parsed[dest_path] = _parse(dest_path)
+                if _anchor(frag) not in parsed[dest_path][1]:
+                    errors.append(
+                        f"{rel}:{lineno}: missing anchor -> {target}")
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked {len(files)} files: {internal} internal links ok, "
+          f"{external} external skipped, {len(errors)} broken")
+    return 1 if errors else 0
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    files = argv or (
+        [os.path.join(root, "README.md")]
+        + sorted(glob.glob(os.path.join(root, "docs", "**", "*.md"),
+                           recursive=True)))
+    missing = [f for f in files if not os.path.exists(f)]
+    if missing:
+        print(f"no such file(s): {missing}", file=sys.stderr)
+        return 2
+    return check(files)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
