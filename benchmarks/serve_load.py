@@ -227,13 +227,15 @@ def run_scheduled(db_dir: str, shards, *, max_batch: int,
 
 
 def run_sharded(db_dir: str, client_shards, *, n_shards: int, max_batch: int,
-                cache_bytes: int, slab_bytes: int = 4 << 20) -> dict:
+                cache_bytes: int, slab_bytes: int = 4 << 20,
+                trace_ring: int | None = None) -> dict:
     """The same closed-loop pool against a ShardedQueryServer: plane
     decodes happen in ``n_shards`` worker processes (each with a
     ``cache_bytes`` LRU over only the planes it owns)."""
     from repro.serve.shard import ShardedQueryServer
     with ShardedQueryServer(db_dir, n_shards, cache_bytes=cache_bytes,
-                            slab_bytes=slab_bytes) as server:
+                            slab_bytes=slab_bytes,
+                            trace_ring=trace_ring) as server:
         with BatchScheduler(server, max_batch=max_batch, max_wait_ms=0.0,
                             max_queue=8192,
                             n_workers=max(4, n_shards)) as sched:
@@ -477,6 +479,58 @@ def phase_sharded(sharded_db: str, *, tiny: bool, shard_counts: list[int],
             "cpus": os.cpu_count()}
 
 
+def phase_trace_overhead(sharded_db: str, *, tiny: bool, out) -> dict:
+    """Traced vs untraced serving on the standard sharded regime.
+
+    Both legs drive the exact decode-heavy pool of :func:`phase_sharded`
+    at 2 shards; the only difference is the flight-recorder capacity
+    (``0`` makes every ``record()`` a guarded no-op, the default ring
+    records every span).  Legs interleave off/on twice and keep each
+    leg's best run, so a noisy-neighbor burst cannot charge its slowdown
+    to tracing.  Emits BENCH_obs.json via ``--obs-out``; ``--check``
+    holds the traced leg within 5% of the untraced one.
+    """
+    from repro.obs import configure, recorder
+    n_shards = 2
+    n_clients, call_size = 8, 32
+    n_calls = 4 if tiny else 8
+    with Database(sharded_db) as db:
+        plane_bytes = int(db._pms.index[:, 1].max())
+        reqs = shard_mix(db, n_clients * n_calls * call_size, seed=11)
+    pool = _pool_calls(reqs, n_clients, n_calls, call_size)
+    cache_bytes = int(plane_bytes * 1.3)
+    slab_bytes = max(plane_bytes * 2, 1 << 20)
+
+    best: dict[str, dict] = {}
+    spans_recorded = 0
+    for _ in range(2):
+        for name, ring in (("off", 0), ("on", 2048)):
+            configure(ring)
+            rep = run_sharded(sharded_db, pool, n_shards=n_shards,
+                              max_batch=128, cache_bytes=cache_bytes,
+                              slab_bytes=slab_bytes, trace_ring=ring)
+            rep.pop("results")
+            if name == "on":
+                spans_recorded = max(spans_recorded, recorder().recorded)
+            if (name not in best
+                    or rep["throughput_rps"] > best[name]["throughput_rps"]):
+                best[name] = rep
+    configure(0)  # leave no hot ring behind for later phases
+
+    off_rps = best["off"]["throughput_rps"]
+    on_rps = best["on"]["throughput_rps"]
+    overhead = max(0.0, 1.0 - on_rps / max(off_rps, 1e-9))
+    rep = {"off": best["off"], "on": best["on"],
+           "overhead_frac": round(overhead, 4),
+           "spans_recorded": spans_recorded,
+           "shards": n_shards, "clients": n_clients,
+           "requests": len(reqs), "cpus": os.cpu_count()}
+    out(f"serve.trace_off_rps,{off_rps:.1f},untraced baseline")
+    out(f"serve.trace_on_rps,{on_rps:.1f},"
+        f"overhead={overhead * 100:.1f}% spans={spans_recorded}")
+    return rep
+
+
 def request_mix_db(db_dir: str, n: int) -> list[QueryRequest]:
     with Database(db_dir) as db:
         return request_mix(db, n)
@@ -666,34 +720,50 @@ def phase_http(db_dir: str, *, tiny: bool, out) -> dict:
 
 def run(out=print, tiny: bool = False, check: bool = False,
         http: bool = False, shard_counts: list[int] | None = None,
-        out_path: str | None = None) -> dict:
+        out_path: str | None = None, trace: str = "off",
+        trace_only: bool = False, obs_out: str | None = None) -> dict:
     report: dict = {"workload": "tiny" if tiny else "standard"}
     with tempfile.TemporaryDirectory() as td:
-        heavy_db = build_heavy_database(td, tiny)
-        report["batching"] = phase_batched_vs_unbatched(heavy_db, tiny=tiny,
-                                                        out=out)
-        if shard_counts:
-            sharded_db = build_sharded_database(td, tiny)
-            report["sharded"] = phase_sharded(sharded_db, tiny=tiny,
-                                              shard_counts=shard_counts,
-                                              out=out)
-        db_dir = build_database(td, tiny)
-        report["warm"] = phase_warm_vs_cold(db_dir, tiny=tiny, out=out)
-        report["overload"] = phase_overload(db_dir, out=out)
-        if http:
-            report["http"] = phase_http(db_dir, tiny=tiny, out=out)
+        sharded_db = None
+        if not trace_only:
+            heavy_db = build_heavy_database(td, tiny)
+            report["batching"] = phase_batched_vs_unbatched(
+                heavy_db, tiny=tiny, out=out)
+            if shard_counts:
+                sharded_db = build_sharded_database(td, tiny)
+                report["sharded"] = phase_sharded(sharded_db, tiny=tiny,
+                                                  shard_counts=shard_counts,
+                                                  out=out)
+            db_dir = build_database(td, tiny)
+            report["warm"] = phase_warm_vs_cold(db_dir, tiny=tiny, out=out)
+            report["overload"] = phase_overload(db_dir, out=out)
+            if http:
+                report["http"] = phase_http(db_dir, tiny=tiny, out=out)
+        if trace == "both":
+            if sharded_db is None:
+                sharded_db = build_sharded_database(td, tiny)
+            report["trace_overhead"] = phase_trace_overhead(
+                sharded_db, tiny=tiny, out=out)
 
     if out_path:
         with open(out_path, "w") as f:
             json.dump(report, f, indent=2)
         out(f"serve.report,0,{out_path}")
+    if obs_out and "trace_overhead" in report:
+        with open(obs_out, "w") as f:
+            json.dump({"workload": report["workload"],
+                       "trace_overhead": report["trace_overhead"]},
+                      f, indent=2)
+        out(f"serve.obs_report,0,{obs_out}")
 
     if check:
-        b = report["batching"]
-        assert b["correct"], "batched/unbatched results diverged from serial"
-        assert b["speedup"] >= 1.5, \
-            f"batching speedup {b['speedup']:.2f} < 1.5x"
-        if shard_counts:
+        if "batching" in report:
+            b = report["batching"]
+            assert b["correct"], \
+                "batched/unbatched results diverged from serial"
+            assert b["speedup"] >= 1.5, \
+                f"batching speedup {b['speedup']:.2f} < 1.5x"
+        if shard_counts and "sharded" in report:
             s = report["sharded"]
             assert s["correct"], "sharded results diverged from serial"
             n_max = max(shard_counts)
@@ -704,14 +774,26 @@ def run(out=print, tiny: bool = False, check: bool = False,
                 assert best >= bar, \
                     f"sharded speedup {best:.2f} (counts {shard_counts}) " \
                     f"< {bar}x"
-        w = report["warm"]
-        assert w["warm_p99_ms"] < w["cold_p99_ms"], \
-            f"warm p99 {w['warm_p99_ms']} !< cold {w['cold_p99_ms']}"
-        o = report["overload"]
-        assert o["rejected"] > 0, "burst was never rejected"
-        assert o["max_depth_seen"] <= o["max_queue"], "queue grew past bound"
-        if http:
+        if "warm" in report:
+            w = report["warm"]
+            assert w["warm_p99_ms"] < w["cold_p99_ms"], \
+                f"warm p99 {w['warm_p99_ms']} !< cold {w['cold_p99_ms']}"
+        if "overload" in report:
+            o = report["overload"]
+            assert o["rejected"] > 0, "burst was never rejected"
+            assert o["max_depth_seen"] <= o["max_queue"], \
+                "queue grew past bound"
+        if http and "http" in report:
             assert report["http"]["saw_429"], "HTTP 429 probe failed"
+        if "trace_overhead" in report:
+            t = report["trace_overhead"]
+            assert t["spans_recorded"] > 0, \
+                "traced leg recorded no spans — is the ring wired through?"
+            # the overhead bar only binds where the cores exist to keep
+            # both legs compute-bound (same gate as the sharded speedup)
+            if (os.cpu_count() or 1) >= 2 * t["shards"]:
+                assert t["overhead_frac"] <= 0.05, \
+                    f"tracing overhead {t['overhead_frac'] * 100:.1f}% > 5%"
         out("serve.check,0,all acceptance bars hold")
     return report
 
@@ -737,11 +819,22 @@ def main():
     ap.add_argument("--check", action="store_true",
                     help="assert the acceptance bars")
     ap.add_argument("--out", default=None, help="write BENCH_serve.json here")
+    ap.add_argument("--trace", default="off", choices=["off", "both"],
+                    help="'both' adds the traced-vs-untraced overhead leg "
+                         "(flight recorder on/off on the sharded regime)")
+    ap.add_argument("--trace-only", action="store_true",
+                    help="run only the trace-overhead leg (implies "
+                         "--trace both)")
+    ap.add_argument("--obs-out", default=None,
+                    help="write BENCH_obs.json (the trace-overhead report) "
+                         "here")
     args = ap.parse_args()
     tiny = args.tiny or args.smoke
     run(tiny=tiny, check=args.check or args.smoke,
         http=args.http or args.smoke,
-        shard_counts=_parse_shards(args.shards, tiny), out_path=args.out)
+        shard_counts=_parse_shards(args.shards, tiny), out_path=args.out,
+        trace="both" if args.trace_only else args.trace,
+        trace_only=args.trace_only, obs_out=args.obs_out)
 
 
 if __name__ == "__main__":

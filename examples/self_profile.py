@@ -1,0 +1,115 @@
+"""The profiler profiles itself: serve under load, export spans, analyze.
+
+Round trip of the self-hosted observability stack (``repro.obs``):
+
+1. build a fixture database and serve it over HTTP with a **sharded**
+   backend (2 worker processes) and the flight recorder on;
+2. drive a batch of traced dashboard calls through ``QueryClient`` —
+   trace ids minted at the edge ride through the scheduler, across the
+   shm/pickle transport into shard workers, and come back with the
+   workers' spans piggybacked on replies;
+3. scrape ``/metrics?format=prom`` (validated with tools/check_prom.py)
+   and ``/debug/spans``;
+4. export the recorder's ring through :mod:`repro.obs.export` into the
+   repo's own trace-plane format, and analyze the server's execution
+   with the *same* query ops it was just serving: ``topk`` over
+   ``obs.time`` ranks the serve phases, ``samples_in_window`` /
+   ``occupancy`` lay the fleet's spans on one timeline.
+
+    PYTHONPATH=src python examples/self_profile.py
+"""
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.workloads import generate_timing_workload
+from repro.core.aggregate import AggregationConfig, StreamingAggregator
+from repro.obs import configure, mint_trace_id
+from repro.obs.export import export_spans
+from repro.query import Database, occupancy, samples_in_window, topk_hot_paths
+from repro.serve import QueryClient, QueryHTTPServer, QueryRequest
+
+from tools.check_prom import check_exposition
+
+
+def main():
+    with tempfile.TemporaryDirectory() as td:
+        paths, _, _ = generate_timing_workload(td + "/in", n_profiles=12,
+                                               n_private=60)
+        StreamingAggregator(
+            td + "/db", AggregationConfig(executor="threads", n_workers=4)
+        ).run(paths)
+
+        with Database(td + "/db", cache_bytes=32 << 20) as db, \
+                QueryHTTPServer(db, port=0, shards=2, warm_bytes=0,
+                                trace_ring=4096) as srv:
+            host, port = srv.address
+            print(f"serving {db.n_profiles} profiles at {srv.url} "
+                  f"(2 shard workers, trace ring on)")
+
+            ctx = int(db.stats["ctx"][0])
+            mid = int(db.stats["mid"][0])
+            tid = mint_trace_id()
+            with QueryClient(host, port) as cl:
+                for _ in range(20):
+                    cl.batch([
+                        QueryRequest(op="profile", pid=0),
+                        QueryRequest(op="stripe", ctx=ctx, metric=mid),
+                        QueryRequest(op="value", pid=1, ctx=ctx, metric=mid),
+                        QueryRequest(op="topk", metric=0, inclusive=True,
+                                     k=5),
+                    ], trace_id=tid)
+                assert cl.last_trace_id == tid, "server must echo our id"
+
+                print("\n== GET /metrics?format=prom")
+                import http.client
+                conn = http.client.HTTPConnection(host, port, timeout=30)
+                conn.request("GET", "/metrics?format=prom")
+                text = conn.getresponse().read().decode("utf-8")
+                conn.close()
+                errors, stats = check_exposition(text)
+                assert not errors, errors
+                print(f"  valid exposition: {stats['samples']} samples, "
+                      f"{stats['families']} families")
+
+                spans_body = cl._roundtrip("GET", "/debug/spans?limit=64")
+                print(f"== GET /debug/spans: {spans_body['recorded']} "
+                      f"recorded, showing {spans_body['n']}")
+                shards_seen = {s["shard"] for s in spans_body["spans"]}
+                assert any(sh >= 0 for sh in shards_seen), \
+                    "no worker spans shipped back"
+
+            # freeze the ring before stop() tears the fleet down
+            from repro.obs import recorder
+            spans = recorder().snapshot()
+            traced = sum(1 for s in spans if s.trace_id == tid)
+            print(f"\n{len(spans)} spans in the ring, {traced} carrying "
+                  f"our trace id {tid}")
+            assert traced > 0
+
+        summary = export_spans(spans, td + "/obs")
+        print(f"\n== exported to our own trace-plane format: {summary}")
+
+        # ... and analyze the server's own execution with the standard ops
+        with Database(summary["db_dir"]) as obs_db:
+            print("\n== top-5 serve phases by time (topk over obs.time)")
+            for hp in topk_hot_paths(obs_db, "obs.time", k=5):
+                print(f"  {hp.value * 1e3:10.3f} ms  {hp.path}")
+
+            t1 = summary["t_span_s"] + 1.0
+            win = samples_in_window(obs_db, 0, 0.0, t1)
+            ctx_ids, counts = occupancy(obs_db, 0.0, t1)
+            print(f"\n== timeline: profile 0 has {win.time.size} span "
+                  f"samples; occupancy covers {ctx_ids.size} contexts "
+                  f"/ {int(counts.sum())} samples")
+            assert win.time.size > 0 and counts.sum() > 0
+
+    configure(0)
+    print("\nself_profile OK")
+
+
+if __name__ == "__main__":
+    main()

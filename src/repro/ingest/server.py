@@ -44,11 +44,13 @@ import queue as queue_mod
 import threading
 import time
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from urllib.parse import parse_qs, urlsplit
 
 from repro.core.sparse import PROFILE_MAGIC
 from repro.ingest.snapshot import SnapshotStore
 from repro.ingest.state import IngestState
-from repro.serve.scheduler import LatencyHistogram, Overloaded
+from repro.obs import MetricsRegistry, monotime, recorder, valid_trace_id
+from repro.serve.scheduler import Overloaded
 
 MAX_BODY_BYTES = 64 << 20
 SPOOL_DIR = "spool"
@@ -104,13 +106,26 @@ class IngestHTTPServer:
         self._thread: threading.Thread | None = None
         self._started_t = 0.0
         self._last_pub_profiles = 0
-        self._merge_hist = LatencyHistogram()
-        self._publish_hist = LatencyHistogram()
-        self._counters = {"http_requests": 0, "profiles_ingested": 0,
-                          "bytes_ingested": 0, "profiles_merged": 0,
-                          "merges": 0, "merge_failures": 0,
-                          "epochs_published": 0, "gc_removed": 0,
-                          "rejected_overload": 0, "rejected_bad": 0}
+        # counters + histograms on one obs registry: the JSON /metrics view
+        # reads them as before, GET /metrics?format=prom renders the same
+        # instruments as Prometheus text exposition
+        self.obs = MetricsRegistry()
+        self._merge_hist = self.obs.histogram("ingest.merge_latency")
+        self._publish_hist = self.obs.histogram("ingest.publish_latency")
+        self._counters = self.obs.group(
+            "ingest", {"http_requests": 0, "profiles_ingested": 0,
+                       "bytes_ingested": 0, "profiles_merged": 0,
+                       "merges": 0, "merge_failures": 0,
+                       "epochs_published": 0, "gc_removed": 0,
+                       "rejected_overload": 0, "rejected_bad": 0})
+        self.obs.gauge("ingest.pending", lambda: self._pending)
+        self.obs.gauge("ingest.paused", lambda: self._paused.is_set())
+        self.obs.gauge("ingest.resident_profiles",
+                       lambda: self.state.n_profiles)
+        self.obs.gauge("ingest.resident_contexts",
+                       lambda: len(self.state.tree.parent))
+        self.obs.gauge("ingest.uptime_s",
+                       lambda: monotime() - self._started_t)
         self._last_merge_error: str | None = None
 
         # recover a spool left behind by a crash: re-enqueue in seq order
@@ -136,7 +151,7 @@ class IngestHTTPServer:
         Handler.service = service
         self._httpd = ThreadingHTTPServer((self.host, self._port), Handler)
         self._httpd.daemon_threads = True
-        self._started_t = time.monotonic()
+        self._started_t = monotime()
         self._thread = threading.Thread(target=self._httpd.serve_forever,
                                         kwargs={"poll_interval": 0.1},
                                         daemon=True, name="ingest-http")
@@ -234,10 +249,10 @@ class IngestHTTPServer:
             with self._lock:
                 self._merging = True
             try:
-                t0 = time.monotonic()
+                t0 = monotime()
                 with self._state_lock:
                     self.state.append(batch)
-                self._merge_hist.observe(time.monotonic() - t0)
+                self._merge_hist.observe(monotime() - t0)
                 for path in batch:
                     try:
                         os.unlink(path)
@@ -271,7 +286,7 @@ class IngestHTTPServer:
                         f"auto-publish: {type(e).__name__}: {e}")
 
     def _drain(self, timeout_s: float) -> None:
-        deadline = time.monotonic() + float(timeout_s)
+        deadline = monotime() + float(timeout_s)
         while True:
             with self._lock:
                 if self._pending == 0 and not self._merging:
@@ -280,7 +295,7 @@ class IngestHTTPServer:
             if stuck:
                 raise RuntimeError("merger is paused with uploads pending; "
                                    "resume() before publishing")
-            if time.monotonic() > deadline:
+            if monotime() > deadline:
                 raise TimeoutError(
                     f"spool did not drain within {timeout_s:.0f}s")
             time.sleep(0.01)
@@ -290,7 +305,7 @@ class IngestHTTPServer:
         with self._state_lock:
             if self.state.n_profiles == 0:
                 raise ValueError("nothing to publish: no profiles ingested")
-            t0 = time.monotonic()
+            t0 = monotime()
             stats_box = {}
 
             def write(stage: str) -> None:
@@ -300,7 +315,7 @@ class IngestHTTPServer:
                 write, extra_meta={"n_profiles": self.state.n_profiles})
             self._last_pub_profiles = self.state.n_profiles
         removed = self.store.gc(retain=self.retain)
-        dt = time.monotonic() - t0
+        dt = monotime() - t0
         self._publish_hist.observe(dt)
         with self._lock:
             self._counters["epochs_published"] += 1
@@ -323,7 +338,7 @@ class IngestHTTPServer:
                 "pending": self._pending,
                 "paused": self._paused.is_set(),
                 "epoch": cur[0] if cur else None,
-                "uptime_s": round(time.monotonic() - self._started_t, 3)}
+                "uptime_s": round(monotime() - self._started_t, 3)}
 
     def epochs(self) -> dict:
         cur = self.store.current()
@@ -342,11 +357,21 @@ class IngestHTTPServer:
                     "publish_latency": self._publish_hist.as_dict(),
                     "last_merge_error": self._last_merge_error,
                     "epochs": self.store.epochs(),
-                    "uptime_s": round(time.monotonic() - self._started_t, 3)})
+                    "uptime_s": round(monotime() - self._started_t, 3)})
         return out
 
+    def prometheus(self) -> str:
+        """Prometheus text exposition of every ingest instrument."""
+        return MetricsRegistry.render([self.obs])
+
     # -- request bodies -------------------------------------------------------
-    def ingest_call(self, body: bytes, content_type: str) -> dict:
+    def ingest_call(self, body: bytes, content_type: str,
+                    trace_id: str | None = None) -> dict:
+        """Decode one upload body and spool it.  A JSON envelope may carry
+        a ``trace_id`` (same contract as the query transport's
+        ``X-Trace-Id`` header, which also lands here) — the accept path
+        records an ``ingest`` span under that id."""
+        tid = trace_id if trace_id and valid_trace_id(trace_id) else ""
         if content_type.startswith("application/json"):
             try:
                 obj = json.loads(body.decode("utf-8"))
@@ -355,13 +380,24 @@ class IngestHTTPServer:
             raw = obj.get("profiles") if isinstance(obj, dict) else None
             if not isinstance(raw, list) or not raw:
                 raise _BadUpload("body needs a non-empty 'profiles' list")
+            env_tid = obj.get("trace_id")
+            if not tid and isinstance(env_tid, str) and valid_trace_id(env_tid):
+                tid = env_tid
             try:
                 blobs = [base64.b64decode(s) for s in raw]
             except (TypeError, ValueError) as e:
                 raise _BadUpload(f"profiles must be base64: {e}") from None
         else:
             blobs = [body]
-        return self.enqueue(blobs)
+        rec = recorder()
+        t0 = monotime() if rec.enabled else 0.0
+        out = self.enqueue(blobs)
+        if rec.enabled:
+            rec.record("ingest", "upload", t0, monotime() - t0,
+                       trace_id=tid, attrs={"profiles": len(blobs)})
+        if tid:
+            out["trace_id"] = tid
+        return out
 
 
 class _IngestHandler(BaseHTTPRequestHandler):
@@ -385,11 +421,22 @@ class _IngestHandler(BaseHTTPRequestHandler):
 
     def do_GET(self):  # noqa: N802 - stdlib casing
         svc = self.service
-        if self.path == "/healthz":
+        parts = urlsplit(self.path)
+        if parts.path == "/healthz":
             self._send_json(200, svc.health())
-        elif self.path == "/metrics":
-            self._send_json(200, svc.metrics())
-        elif self.path == "/v1/epochs":
+        elif parts.path == "/metrics":
+            q = parse_qs(parts.query)
+            if q.get("format", [""])[0] == "prom":
+                payload = svc.prometheus().encode("utf-8")
+                self.send_response(200)
+                self.send_header("Content-Type",
+                                 "text/plain; version=0.0.4; charset=utf-8")
+                self.send_header("Content-Length", str(len(payload)))
+                self.end_headers()
+                self.wfile.write(payload)
+            else:
+                self._send_json(200, svc.metrics())
+        elif parts.path == "/v1/epochs":
             self._send_json(200, svc.epochs())
         else:
             self._send_json(404, {"error": "NotFound", "path": self.path})
@@ -415,7 +462,8 @@ class _IngestHandler(BaseHTTPRequestHandler):
                 body = self.rfile.read(n)
                 ctype = self.headers.get("Content-Type",
                                          "application/octet-stream")
-                self._send_json(200, svc.ingest_call(body, ctype))
+                self._send_json(200, svc.ingest_call(
+                    body, ctype, trace_id=self.headers.get("X-Trace-Id")))
             elif self.path == "/v1/publish":
                 # drain any (small) body so the keep-alive stream stays
                 # aligned for the next request on this connection

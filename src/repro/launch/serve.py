@@ -92,6 +92,14 @@ def _query_server_main(argv):
     ap.add_argument("--follow-wait-s", type=float, default=60.0,
                     help="how long to wait for the first snapshot epoch "
                          "under --follow before giving up")
+    ap.add_argument("--trace-ring", type=int, default=None,
+                    help="flight-recorder ring capacity per process "
+                         "(spans); 0 disables tracing, default: "
+                         "REPRO_TRACE_RING or 2048")
+    ap.add_argument("--obs-export", default=None, metavar="DIR",
+                    help="on shutdown, export the recorded spans as a "
+                         "trace-plane database under DIR (self-profiling: "
+                         "analyze it with repro.launch.analyze query)")
     args = ap.parse_args(argv)
 
     warm_bytes = (0 if args.no_warm
@@ -104,7 +112,8 @@ def _query_server_main(argv):
                   default_timeout_s=args.timeout_s,
                   adaptive_wait=not args.no_adaptive_wait,
                   warm_bytes=warm_bytes, shards=args.shards,
-                  shard_slab_bytes=args.shard_slab_mb << 20)
+                  shard_slab_bytes=args.shard_slab_mb << 20,
+                  trace_ring=args.trace_ring)
 
     def _serve(srv, db):
         info = {"url": srv.url, "batching": srv.batching,
@@ -118,6 +127,16 @@ def _query_server_main(argv):
                 time.sleep(3600)
         except KeyboardInterrupt:
             print("shutting down", file=sys.stderr)
+            if args.obs_export:
+                from repro.obs import recorder
+                from repro.obs.export import export_spans
+                spans = recorder().snapshot()
+                if spans:
+                    summary = export_spans(spans, args.obs_export)
+                    print(json.dumps({"obs_export": summary}),
+                          file=sys.stderr, flush=True)
+                else:
+                    print("obs-export: no spans recorded", file=sys.stderr)
 
     if args.follow:
         with QueryHTTPServer(args.db, follow=True, poll_ms=args.poll_ms,

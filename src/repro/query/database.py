@@ -24,7 +24,6 @@ from __future__ import annotations
 
 import mmap
 import os
-import threading
 
 import numpy as np
 
@@ -35,6 +34,7 @@ from repro.core.pms import PMSReader
 from repro.core.sparse import SparseMetrics, Trace
 from repro.core.stats import pack_keys
 from repro.core.traces import TraceDBReader
+from repro.obs import MetricsRegistry
 from repro.query.cache import LRUCache
 
 PMS_NAME, CMS_NAME, TRC_NAME = "db.pms", "db.cms", "db.trc"
@@ -88,12 +88,23 @@ class Database:
         self.epoch: int | None = None
 
         self.cache = LRUCache(cache_bytes)
-        self.counters = {"pms_plane_loads": 0, "cms_plane_loads": 0,
-                         "cms_stripe_reads": 0, "cms_stripe_skips": 0,
-                         "trace_loads": 0, "pms_scan_fallbacks": 0}
-        # `+=` on a dict slot is not atomic; the serving layer drives one
-        # handle from many threads and the load benchmark sums these
-        self._counter_lock = threading.Lock()
+        # counters live on an obs registry so the serving layer can render
+        # them over Prometheus; CounterGroup keeps the dict surface every
+        # caller (tests, benchmarks) already uses, with a lock inside —
+        # `+=` on a bare dict slot is not atomic and the serving layer
+        # drives one handle from many threads
+        self.obs = MetricsRegistry()
+        self.counters = self.obs.group(
+            "db", {"pms_plane_loads": 0, "cms_plane_loads": 0,
+                   "cms_stripe_reads": 0, "cms_stripe_skips": 0,
+                   "trace_loads": 0, "pms_scan_fallbacks": 0})
+        for name, fn in (("db.cache_hits", lambda: self.cache.hits),
+                         ("db.cache_misses", lambda: self.cache.misses),
+                         ("db.cache_evictions", lambda: self.cache.evictions),
+                         ("db.cache_bytes", lambda: self.cache.nbytes),
+                         ("db.cache_capacity_bytes",
+                          lambda: self.cache.capacity_bytes)):
+            self.obs.gauge(name, fn)
 
     @classmethod
     def open_current(cls, root, *, cache_bytes: int = 64 << 20) -> "Database":
@@ -120,8 +131,7 @@ class Database:
         return db
 
     def _count(self, key: str) -> None:
-        with self._counter_lock:
-            self.counters[key] += 1
+        self.counters.inc(key)
 
     # -- identity / naming ---------------------------------------------------
     @property

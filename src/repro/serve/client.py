@@ -141,13 +141,17 @@ class JSONClient:
 
     def _roundtrip(self, method: str, path: str, body: dict | None = None,
                    *, raw: bytes | None = None,
-                   content_type: str = "application/json"):
+                   content_type: str = "application/json",
+                   headers: dict | None = None):
         if raw is not None:
             payload: bytes | None = raw
         else:
             payload = (None if body is None
                        else json.dumps(body).encode("utf-8"))
-        headers = {"Content-Type": content_type} if payload is not None else {}
+        hdrs = {"Content-Type": content_type} if payload is not None else {}
+        if headers:
+            hdrs.update(headers)
+        headers = hdrs
         for attempt in (0, 1):  # one transparent retry on a dropped keep-alive
             conn = self._connection()
             try:
@@ -184,25 +188,32 @@ class QueryClient(JSONClient):
 
     # -- batched query surface -------------------------------------------------
     def batch(self, requests: list[QueryRequest], *,
-              timeout_ms: float | None = None) -> list:
+              timeout_ms: float | None = None,
+              trace_id: str | None = None) -> list:
         """Submit a batch; returns one decoded result per slot (failures as
-        inline :class:`QueryError` objects, never exceptions)."""
+        inline :class:`QueryError` objects, never exceptions).  ``trace_id``
+        is sent as ``X-Trace-Id`` so the server stamps the caller's id on
+        every span instead of minting its own."""
         body: dict = {"requests": [request_to_wire(r) for r in requests]}
         if timeout_ms is not None:
             body["timeout_ms"] = timeout_ms
-        obj = self._roundtrip("POST", "/v1/query", body)
+        hdrs = {"X-Trace-Id": trace_id} if trace_id else None
+        obj = self._roundtrip("POST", "/v1/query", body, headers=hdrs)
+        self.last_trace_id = obj.get("trace_id")
         return [result_from_wire(r) for r in obj["results"]]
 
     def batch_with_retry(self, requests: list[QueryRequest], *,
                          policy: RetryPolicy | None = None,
                          timeout_ms: float | None = None,
+                         trace_id: str | None = None,
                          sleep=time.sleep) -> list:
         """:meth:`batch` wrapped in a :class:`RetryPolicy` (default policy
         when none given): transparently rides out 429 bursts and server
         restarts, fails fast on non-retryable 4xx."""
         policy = policy or RetryPolicy()
         return policy.call(
-            lambda: self.batch(requests, timeout_ms=timeout_ms), sleep=sleep)
+            lambda: self.batch(requests, timeout_ms=timeout_ms,
+                               trace_id=trace_id), sleep=sleep)
 
     def _one(self, req: QueryRequest):
         res = self.batch([req])[0]

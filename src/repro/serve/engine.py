@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import monotime, recorder
+
 
 @dataclass
 class Request:
@@ -96,6 +98,10 @@ class QueryRequest:
     t0: float = 0.0
     t1: float = float("inf")
     params: dict = field(default_factory=dict)
+    # distributed tracing: minted at the HTTP edge (or accepted from
+    # X-Trace-Id), rides the wire into shard workers and through replay
+    # so every recorded span of this request's life shares one id
+    trace_id: str | None = None
 
 
 @dataclass(frozen=True)
@@ -172,13 +178,26 @@ class QueryServer:
         """:meth:`submit` that never raises: failures (unknown op, bad ids,
         missing stores) come back as a :class:`QueryError` result.
         ``db`` is only forwarded when pinned, so ``submit`` overrides that
-        predate the epoch hook keep working."""
+        predate the epoch hook keep working.
+
+        This is the one place request *execution* happens — in-process
+        scheduler windows and shard workers both come through here — so
+        it is where the ``decode`` span is recorded (the store/plane
+        work the request paid for, whichever process paid it).
+        """
+        rec = recorder()
+        t0 = monotime() if rec.enabled else 0.0
         try:
-            return (self.submit(req) if db is None
-                    else self.submit(req, db=db))
+            res = (self.submit(req) if db is None
+                   else self.submit(req, db=db))
         except Exception as e:                          # noqa: BLE001
-            return QueryError(op=str(getattr(req, "op", "?")),
-                              error=type(e).__name__, message=str(e))
+            res = QueryError(op=str(getattr(req, "op", "?")),
+                             error=type(e).__name__, message=str(e))
+        if rec.enabled:
+            rec.record("decode", str(getattr(req, "op", "?")), t0,
+                       monotime() - t0,
+                       trace_id=getattr(req, "trace_id", None) or "")
+        return res
 
     def serve(self, requests: list[QueryRequest], db=None) -> list:
         """Serve a batch in plane-locality order.

@@ -12,12 +12,22 @@ ceiling on decode-heavy traffic.
 Endpoints::
 
     POST /v1/query    {"requests": [{...}, ...], "timeout_ms": 5000}
-                      -> 200 {"results": [...]} (per-request errors inline)
+                      -> 200 {"results": [...], "trace_id": "..."}
                       -> 429 + Retry-After when admission control rejects
                       -> 400 on malformed JSON envelopes
     GET  /healthz     liveness + database identity
     GET  /metrics     cache hit/miss/eviction counters, queue depth,
-                      admission counters, per-op latency histograms
+                      admission counters, per-op latency histograms (JSON);
+                      ?format=prom renders the same instruments as
+                      Prometheus text exposition
+    GET  /debug/spans the process flight recorder: recent spans across the
+                      whole fleet (workers ship theirs back on replies)
+                      plus any frozen worker-death/error dumps
+
+Every call carries a trace id — accepted from an ``X-Trace-Id`` request
+header (or a ``trace_id`` envelope field), minted otherwise — stamped on
+each request so its spans correlate across scheduler, shard workers, and
+replay; the reply echoes it in both body and header.
 
 Payload encoding is :mod:`repro.serve.wire`: a JSON envelope whose array
 fields are base64 of the binary on-disk layouts.  ``batching=False`` keeps
@@ -29,14 +39,16 @@ from __future__ import annotations
 import json
 import math
 import threading
-import time
 from concurrent.futures import TimeoutError as FutureTimeout
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from urllib.parse import parse_qs, urlsplit
 
+from repro.obs import (MetricsRegistry, configure, mint_trace_id, monotime,
+                       recorder, valid_trace_id)
 from repro.query.database import Database
 from repro.query.epoch import EpochSwitcher, wait_for_epoch
 from repro.serve.engine import QueryError, QueryServer
-from repro.serve.scheduler import BatchScheduler, LatencyHistogram, Overloaded
+from repro.serve.scheduler import BatchScheduler, Overloaded
 from repro.serve.shard import ShardedQueryServer
 from repro.serve.warm import warm_cache
 from repro.serve.wire import request_from_wire, result_to_wire
@@ -70,7 +82,13 @@ class QueryHTTPServer:
                  shard_slab_bytes: int = 4 << 20, shard_slabs: int = 8,
                  follow: bool = False, poll_ms: float = 250.0,
                  follow_wait_s: float = 60.0,
-                 follow_cache_bytes: int = 64 << 20):
+                 follow_cache_bytes: int = 64 << 20,
+                 trace_ring: int | None = None):
+        if trace_ring is not None:
+            # size (or disable, with 0) this process's flight recorder;
+            # the sharded engine below inherits the same capacity for
+            # its workers
+            configure(trace_ring)
         self.switcher: EpochSwitcher | None = None
         self._poll_s = max(float(poll_ms), 1.0) / 1e3
         if follow:
@@ -110,10 +128,15 @@ class QueryHTTPServer:
         self._thread: threading.Thread | None = None
         self._follower: threading.Thread | None = None
         self._follow_stop = threading.Event()
-        self._reopen_hist = LatencyHistogram()
+        self.obs = MetricsRegistry()
+        self._reopen_hist = self.obs.histogram("http.epoch_reopen")
+        self._http = self.obs.group("http", {"requests": 0})
+        self.obs.gauge("http.uptime_s",
+                       lambda: max(monotime() - self._started_t, 0.0))
+        self.obs.gauge("http.trace_ring_spans",
+                       lambda: recorder().recorded)
         self._follow_errors = 0
         self._started_t = 0.0
-        self._http_requests = 0
 
     @property
     def db(self) -> Database:
@@ -130,7 +153,7 @@ class QueryHTTPServer:
             try:
                 if not self.switcher.poll():
                     continue
-                t0 = time.monotonic()
+                t0 = monotime()
                 if self.sharded is not None:
                     # all workers swing together; the window lock inside
                     # reopen() keeps every dispatch single-epoch
@@ -139,7 +162,7 @@ class QueryHTTPServer:
                     # in-process: future batches default to the new epoch;
                     # in-flight ones hold pins on the old handle
                     self.engine.db = self.switcher.db
-                self._reopen_hist.observe(time.monotonic() - t0)
+                self._reopen_hist.observe(monotime() - t0)
             except Exception:                               # noqa: BLE001
                 # a torn transition (e.g. SnapshotGone racing GC) is
                 # retried on the next poll; keep serving the old epoch
@@ -165,7 +188,7 @@ class QueryHTTPServer:
         Handler.service = service
         self._httpd = ThreadingHTTPServer((self.host, self._port), Handler)
         self._httpd.daemon_threads = True
-        self._started_t = time.monotonic()
+        self._started_t = monotime()
         self._thread = threading.Thread(target=self._httpd.serve_forever,
                                         kwargs={"poll_interval": 0.1},
                                         daemon=True, name="serve-http")
@@ -219,7 +242,7 @@ class QueryHTTPServer:
                "shards": self.shards,
                "profiles": self.db.n_profiles,
                "contexts": self.db.n_contexts,
-               "uptime_s": round(time.monotonic() - self._started_t, 3)}
+               "uptime_s": round(monotime() - self._started_t, 3)}
         if self.switcher is not None:
             out["epoch"] = self.switcher.epoch
         return out
@@ -227,9 +250,9 @@ class QueryHTTPServer:
     def metrics(self) -> dict:
         out = {"cache": self.db.cache_stats(),
                "db_counters": dict(self.db.counters),
-               "http_requests": self._http_requests,
+               "http_requests": self._http["requests"],
                "warm": self.warm_report,
-               "uptime_s": round(time.monotonic() - self._started_t, 3)}
+               "uptime_s": round(monotime() - self._started_t, 3)}
         out["scheduler"] = (self.scheduler.metrics()
                             if self.scheduler is not None else None)
         out["shards"] = (self.sharded.metrics()
@@ -241,8 +264,35 @@ class QueryHTTPServer:
                             "reopen": self._reopen_hist.as_dict()}
         return out
 
-    def serve_call(self, body: dict) -> dict:
-        """One ``/v1/query`` call: parse, admit, await, serialize."""
+    def prometheus(self) -> str:
+        """Every subsystem's registry, concatenated as one exposition —
+        distinct name prefixes (http/db/scheduler/shard) keep the merged
+        output collision-free."""
+        return MetricsRegistry.render([
+            self.obs,
+            getattr(self.db, "obs", None),
+            self.scheduler.obs if self.scheduler is not None else None,
+            self.sharded.obs if self.sharded is not None else None,
+        ])
+
+    def debug_spans(self, limit: int = 256) -> dict:
+        """The ``GET /debug/spans`` body: this process's flight recorder
+        (which includes worker spans shipped back on replies)."""
+        return recorder().as_dict(limit=limit)
+
+    def serve_call(self, body: dict, trace_id: str | None = None) -> dict:
+        """One ``/v1/query`` call: parse, admit, await, serialize.
+
+        ``trace_id`` (the ``X-Trace-Id`` header) or a ``trace_id``
+        envelope field is propagated; anything missing or malformed is
+        replaced by a freshly minted id.  Requests that already carry
+        their own valid ``trace_id`` keep it.
+        """
+        call_t0 = monotime()
+        tid = trace_id if valid_trace_id(trace_id) else None
+        if tid is None:
+            env_tid = body.get("trace_id")
+            tid = env_tid if valid_trace_id(env_tid) else mint_trace_id()
         raw = body.get("requests")
         if raw is None and "op" in body:
             raw = [body]  # single-request sugar
@@ -268,7 +318,10 @@ class QueryHTTPServer:
         reqs, parse_errors = [], {}
         for i, obj in enumerate(raw):
             try:
-                reqs.append(request_from_wire(obj))
+                req = request_from_wire(obj)
+                if not valid_trace_id(req.trace_id):
+                    req.trace_id = tid  # mutable dataclass: stamp in place
+                reqs.append(req)
             except (ValueError, TypeError) as e:
                 parse_errors[i] = QueryError(
                     op=str(obj.get("op", "?")) if isinstance(obj, dict)
@@ -286,7 +339,7 @@ class QueryHTTPServer:
             if self.scheduler is not None:
                 futures = iter(self.scheduler.submit_many(
                     live, timeout_s=timeout_s, pin=pin))
-                deadline = time.monotonic() + (
+                deadline = monotime() + (
                     timeout_s or self.scheduler.default_timeout_s)
                 results = []
                 for r in reqs:
@@ -296,7 +349,7 @@ class QueryHTTPServer:
                     fut = next(futures)
                     try:
                         results.append(fut.result(
-                            timeout=max(deadline - time.monotonic(), 0.0)))
+                            timeout=max(deadline - monotime(), 0.0)))
                     except FutureTimeout:
                         results.append(QueryError(
                             op=r.op, error="DeadlineExceeded",
@@ -310,11 +363,19 @@ class QueryHTTPServer:
             if pin is not None:
                 pin.release()
 
+        rec = recorder()
+        enc_t0 = monotime() if rec.enabled else 0.0
         wire = []
         for i, res in enumerate(results):
             wire.append(result_to_wire(parse_errors[i] if res is None
                                        else res))
-        return {"results": wire}
+        if rec.enabled:
+            now = monotime()
+            rec.record("encode", "call", enc_t0, now - enc_t0, trace_id=tid,
+                       attrs={"n": len(wire)})
+            rec.record("request", "call", call_t0, now - call_t0,
+                       trace_id=tid, attrs={"n": len(wire)})
+        return {"results": wire, "trace_id": tid}
 
 
 class _BadRequest(ValueError):
@@ -344,12 +405,33 @@ class _QueryHandler(BaseHTTPRequestHandler):
         self.end_headers()
         self.wfile.write(payload)
 
+    def _send_text(self, code: int, text: str, content_type: str) -> None:
+        payload = text.encode("utf-8")
+        self.send_response(code)
+        self.send_header("Content-Type", content_type)
+        self.send_header("Content-Length", str(len(payload)))
+        self.end_headers()
+        self.wfile.write(payload)
+
     def do_GET(self):  # noqa: N802 - stdlib casing
         svc = self.service
-        if self.path == "/healthz":
+        parts = urlsplit(self.path)
+        query = parse_qs(parts.query)
+        if parts.path == "/healthz":
             self._send_json(200, svc.health())
-        elif self.path == "/metrics":
-            self._send_json(200, svc.metrics())
+        elif parts.path == "/metrics":
+            if query.get("format", ["json"])[0] == "prom":
+                self._send_text(
+                    200, svc.prometheus(),
+                    "text/plain; version=0.0.4; charset=utf-8")
+            else:
+                self._send_json(200, svc.metrics())
+        elif parts.path == "/debug/spans":
+            try:
+                limit = int(query.get("limit", ["256"])[0])
+            except ValueError:
+                limit = 256
+            self._send_json(200, svc.debug_spans(limit=max(1, limit)))
         else:
             self._send_json(404, {"error": "NotFound", "path": self.path})
 
@@ -358,7 +440,7 @@ class _QueryHandler(BaseHTTPRequestHandler):
         if self.path != "/v1/query":
             self._send_json(404, {"error": "NotFound", "path": self.path})
             return
-        svc._http_requests += 1
+        svc._http.inc("requests")
         try:
             try:
                 n = int(self.headers.get("Content-Length", 0))
@@ -373,7 +455,10 @@ class _QueryHandler(BaseHTTPRequestHandler):
             body = json.loads(self.rfile.read(n).decode("utf-8"))
             if not isinstance(body, dict):
                 raise _BadRequest("body must be a JSON object")
-            self._send_json(200, svc.serve_call(body))
+            out = svc.serve_call(body,
+                                 trace_id=self.headers.get("X-Trace-Id"))
+            self._send_json(200, out,
+                            {"X-Trace-Id": out.get("trace_id", "-")})
         except _CallTooLarge as e:
             self._send_json(413, {"error": "CallTooLarge", "message": str(e)})
         except (_BadRequest, json.JSONDecodeError, UnicodeDecodeError) as e:

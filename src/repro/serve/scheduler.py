@@ -43,14 +43,18 @@ so one poisoned request never disturbs its window peers.
 from __future__ import annotations
 
 import threading
-import time
 from collections import deque
 from concurrent.futures import Future, InvalidStateError
 from dataclasses import dataclass
 
+from repro.obs import HIST_EDGES_US, Histogram, MetricsRegistry, monotime, recorder
 from repro.serve.engine import QueryError, QueryRequest, QueryServer
 
-_HIST_EDGES_US = (100.0, 300.0, 1e3, 3e3, 1e4, 3e4, 1e5, 3e5, 1e6, 3e6)
+# Both names predate repro.obs and are re-exported for compatibility:
+# the histogram now lives in the registry (`serve/http.py` and
+# `ingest/server.py` used to re-import this module's private copy).
+_HIST_EDGES_US = HIST_EDGES_US
+LatencyHistogram = Histogram
 
 
 class Overloaded(RuntimeError):
@@ -60,47 +64,6 @@ class Overloaded(RuntimeError):
         super().__init__(f"admission queue full; retry after "
                          f"{retry_after_s:.2f}s")
         self.retry_after_s = float(retry_after_s)
-
-
-class LatencyHistogram:
-    """Fixed log-spaced latency buckets (µs); lock-free under the GIL for
-    single increments, snapshotted under the scheduler lock."""
-
-    def __init__(self):
-        self.counts = [0] * (len(_HIST_EDGES_US) + 1)
-        self.total_s = 0.0
-        self.n = 0
-
-    def observe(self, seconds: float) -> None:
-        us = seconds * 1e6
-        i = 0
-        for edge in _HIST_EDGES_US:
-            if us < edge:
-                break
-            i += 1
-        self.counts[i] += 1
-        self.total_s += seconds
-        self.n += 1
-
-    def quantile(self, q: float) -> float:
-        """Upper-edge estimate of quantile ``q`` in seconds."""
-        if self.n == 0:
-            return 0.0
-        rank = q * self.n
-        seen = 0
-        for i, c in enumerate(self.counts):
-            seen += c
-            if seen >= rank and c:
-                return (_HIST_EDGES_US[i] if i < len(_HIST_EDGES_US)
-                        else _HIST_EDGES_US[-1] * 10) / 1e6
-        return _HIST_EDGES_US[-1] * 10 / 1e6
-
-    def as_dict(self) -> dict:
-        return {"buckets_us": list(_HIST_EDGES_US), "counts": list(self.counts),
-                "n": self.n,
-                "mean_ms": (self.total_s / self.n * 1e3) if self.n else 0.0,
-                "p50_ms_le": self.quantile(0.5) * 1e3,
-                "p99_ms_le": self.quantile(0.99) * 1e3}
 
 
 @dataclass
@@ -169,12 +132,18 @@ class BatchScheduler:
         self._runner: threading.Thread | None = None
         self._ewma_service_s = 1e-3  # per-request service time estimate
 
-        # observability (guarded by self._lock)
-        self.counters = {"submitted": 0, "completed": 0, "rejected": 0,
-                         "expired": 0, "errors": 0, "batches": 0,
-                         "batched_requests": 0}
-        self.latency = {}        # op -> LatencyHistogram (service time)
-        self.queue_wait = LatencyHistogram()
+        # observability: registry-backed instruments with the historical
+        # shapes (counters guarded by self._lock exactly as before; the
+        # group's own lock only matters for out-of-band readers)
+        self.obs = MetricsRegistry()
+        self.counters = self.obs.group(
+            "scheduler", {"submitted": 0, "completed": 0, "rejected": 0,
+                          "expired": 0, "errors": 0, "batches": 0,
+                          "batched_requests": 0})
+        # op -> Histogram (service time)
+        self.latency = self.obs.histogram_family("scheduler.latency", "op")
+        self.queue_wait = self.obs.histogram("scheduler.queue_wait")
+        self.obs.gauge("scheduler.queue_depth", self.depth)
 
     # -- lifecycle -----------------------------------------------------------
     def start(self) -> "BatchScheduler":
@@ -287,7 +256,7 @@ class BatchScheduler:
         from its own single-dispatch reopen lock.
         """
         timeout_s = self.default_timeout_s if timeout_s is None else timeout_s
-        now = time.monotonic()
+        now = monotime()
         if self._direct:
             if pin is not None:
                 raise ValueError(
@@ -370,15 +339,24 @@ class BatchScheduler:
                    if exc is not None else f.result())
             if not p.future.cancelled():
                 self._resolve(p.future, res)
-            dt = time.monotonic() - t0
+            dt = monotime() - t0
+            op = str(getattr(p.req, "op", "?"))
+            rec = recorder()
+            if rec.enabled:
+                # one span per admitted slot: coalesced duplicates each
+                # keep their own _Pending (and their own trace id), so
+                # every caller's trace shows its dispatch
+                rec.record("dispatch", op, t0, dt,
+                           trace_id=getattr(p.req, "trace_id", None) or "")
+                if isinstance(res, QueryError):
+                    rec.dump(f"query_error op={op} error={res.error}")
             with self._lock:
                 for s in shards:
                     self._admitted[s] -= 1
                 self.counters["completed"] += 1
                 if isinstance(res, QueryError):
                     self.counters["errors"] += 1
-                op = str(getattr(p.req, "op", "?"))
-                self.latency.setdefault(op, LatencyHistogram()).observe(dt)
+                self.latency.labels(op).observe(dt)
                 self.queue_wait.observe(max(t0 - p.enq_t, 0.0))
                 # call completion time / call size approximates the
                 # per-request service time for the drain estimate
@@ -411,12 +389,12 @@ class BatchScheduler:
                 finally:
                     self._idle -= 1
             batch = [self._q.popleft()]
-            window_end = time.monotonic() + self.max_wait_s
+            window_end = monotime() + self.max_wait_s
             while len(batch) < self.max_batch:
                 if self._q:
                     batch.append(self._q.popleft())
                     continue
-                remaining = window_end - time.monotonic()
+                remaining = window_end - monotime()
                 if remaining <= 0 or self._stopped:
                     break
                 if self.adaptive_wait and self._idle > 0:
@@ -440,7 +418,7 @@ class BatchScheduler:
                     p.pin.release()
 
     def _execute_inner(self, batch: list[_Pending]) -> None:
-        now = time.monotonic()
+        now = monotime()
         live: list[_Pending] = []
         for p in batch:
             if p.future.cancelled():
@@ -462,26 +440,35 @@ class BatchScheduler:
         # plane-locality order: every hot plane decodes once per window
         order = sorted(range(len(live)),
                        key=lambda i: self.server._locality_key(live[i].req))
-        observed: list[tuple[str, float, float, bool]] = []
+        rec = recorder()
+        observed: list[tuple[str, float, float, float, bool, str]] = []
         for i in order:
             p = live[i]
-            t0 = time.monotonic()
+            t0 = monotime()
             res = (self.server.serve_one(p.req, db=p.pin.db)
                    if p.pin is not None else self.server.serve_one(p.req))
-            dt = time.monotonic() - t0
+            dt = monotime() - t0
             observed.append((str(getattr(p.req, "op", "?")), dt,
-                             t0 - p.enq_t, isinstance(res, QueryError)))
+                             t0 - p.enq_t, t0, isinstance(res, QueryError),
+                             getattr(p.req, "trace_id", None) or ""))
             if not p.future.cancelled():
                 self._resolve(p.future, res)
+        if rec.enabled:
+            for op, dt, waited, t0, failed, tid in observed:
+                rec.record("queue_wait", op, t0 - max(waited, 0.0),
+                           max(waited, 0.0), trace_id=tid)
+                rec.record("dispatch", op, t0, dt, trace_id=tid)
+                if failed:
+                    rec.dump(f"query_error op={op}")
         # one bookkeeping pass per window, not per request — the lock is
         # shared with submit(), so per-request acquisition would tax the
         # serving loop exactly where batching should be amortizing it
         with self._lock:
-            for op, dt, waited, failed in observed:
+            for op, dt, waited, _t0, failed, _tid in observed:
                 self.counters["completed"] += 1
                 if failed:
                     self.counters["errors"] += 1
-                self.latency.setdefault(op, LatencyHistogram()).observe(dt)
+                self.latency.labels(op).observe(dt)
                 self.queue_wait.observe(waited)
                 self._ewma_service_s += 0.05 * (dt - self._ewma_service_s)
 

@@ -64,6 +64,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core.sparse import SparseMetrics, Trace
+from repro.obs import MetricsRegistry, configure, monotime, recorder
 from repro.runtime.shm import (SlabArena, read_section, sections_layout,
                                worker_slab, write_section)
 from repro.serve.engine import QueryError, QueryRequest, QueryServer
@@ -294,13 +295,21 @@ def _merge_scatter(req: QueryRequest, parts: list):
 
 def _shard_worker_main(shard: int, n_shards: int, vnodes: int, salt: bytes,
                        db_dir: str, cache_bytes: int, warm_bytes,
-                       server_factory, slab_bytes: int, req_q, resp_q):
+                       server_factory, slab_bytes: int, trace_ring: int,
+                       req_q, resp_q):
     """Worker loop: own Database, own LRU, serve batches in locality order.
 
     Module-level (and all-args-picklable) so it runs under any
     multiprocessing start method.  The worker never creates shm segments —
     oversize results fall back to the pickled response queue — so abrupt
     death cannot leak ``/dev/shm``.
+
+    The worker runs its own flight recorder (sized by ``trace_ring`` —
+    passed explicitly so spawn-start workers match the parent's config)
+    and piggybacks freshly recorded spans on every reply chunk, so span
+    shipping costs no extra queue round trips and a SIGKILL loses at
+    most the spans of the unanswered batch (which the parent's replay
+    re-records on the replacement worker anyway).
     """
     import signal
 
@@ -308,6 +317,8 @@ def _shard_worker_main(shard: int, n_shards: int, vnodes: int, salt: bytes,
     from repro.serve.warm import warm_cache
 
     signal.signal(signal.SIGINT, signal.SIG_IGN)  # parent owns shutdown
+    rec = configure(trace_ring)
+    rec.default_shard = shard
     ring = ConsistentHashRing(n_shards, vnodes=vnodes, salt=salt)
     owned = ((lambda store, oid: ring.owns_plane(store, oid, shard))
              if n_shards > 1 else None)
@@ -353,14 +364,25 @@ def _shard_worker_main(shard: int, n_shards: int, vnodes: int, salt: bytes,
         replies = []
         for i in order:  # every hot plane decodes once per batch
             key, req, slab_name, scatter = items[i]
+            tid = getattr(req, "trace_id", None) or ""
             try:
                 if scatter and req.op in SCATTER_OPS and owned_ctx is not None:
+                    # scatter partials bypass serve_one (and its decode
+                    # span), so time them here
+                    t0 = monotime()
                     res = _serve_scatter(db, owned_ctx, req)
+                    if rec.enabled:
+                        rec.record("decode", str(req.op), t0, monotime() - t0,
+                                   trace_id=tid)
                 else:
                     res = server.serve_one(req)
                 slab_buf = (worker_slab(slab_name).buf
                             if slab_name is not None else None)
+                t0 = monotime()
                 payload = _encode_result(res, slab_buf, slab_bytes)
+                if rec.enabled:
+                    rec.record("encode", str(getattr(req, "op", "?")), t0,
+                               monotime() - t0, trace_id=tid)
             except Exception as e:                          # noqa: BLE001
                 payload = ("obj", None, QueryError(
                     op=str(getattr(req, "op", "?")),
@@ -370,12 +392,14 @@ def _shard_worker_main(shard: int, n_shards: int, vnodes: int, salt: bytes,
             # a chunk instead of being paid per request, while early
             # results still stream back before the batch finishes (a
             # whole-batch reply would stall closed-loop clients and
-            # drain the pipeline)
+            # drain the pipeline).  Spans recorded since the last chunk
+            # ride the same message.
             if len(replies) >= _REPLY_CHUNK:
-                resp_q.put(("res", replies))
+                resp_q.put(("res", replies, rec.drain_outbox()))
                 replies = []
-        if replies:
-            resp_q.put(("res", replies))
+        tail = rec.drain_outbox()
+        if replies or tail:
+            resp_q.put(("res", replies, tail))
     db.close()
 
 
@@ -426,7 +450,8 @@ class ShardedQueryServer:
                  n_slabs: int = 32, slab_bytes: int = 4 << 20,
                  vnodes: int = 96, server_factory=None,
                  replay_limit: int = 3, dispatch_timeout_s: float = 60.0,
-                 start_timeout_s: float = 120.0, mp_context: str | None = None):
+                 start_timeout_s: float = 120.0, mp_context: str | None = None,
+                 trace_ring: int | None = None):
         if db_dir is None:
             raise ValueError("sharded serving needs a database directory "
                              "(explicit pms_path handles cannot be re-opened "
@@ -461,17 +486,27 @@ class ShardedQueryServer:
                           and "fork" in methods else "spawn")
         self._ctx = mp.get_context(mp_context)
 
+        # flight-recorder ring size for the worker processes; None
+        # inherits this (parent) process's configured capacity, so one
+        # `configure()` at the front covers the fleet under any mp start
+        # method (spawn workers don't inherit parent globals)
+        self.trace_ring = (recorder().capacity if trace_ring is None
+                           else max(0, int(trace_ring)))
+
         self._shards: list[_Shard] = []
         self._pumps: list[threading.Thread] = []
         self._seq = itertools.count()
         self._started = False
         self._closed = False
         self._stats_lock = threading.Lock()
-        self._stats = {"dispatched": 0, "completed": 0, "respawns": 0,
-                       "worker_lost": 0, "replayed": 0, "scatter_queries": 0,
-                       "deduped": 0, "slab_payloads": 0,
-                       "inline_payloads": 0, "reopens": 0,
-                       "reopen_last_s": 0.0}
+        self.obs = MetricsRegistry()
+        self._stats = self.obs.group(
+            "shard", {"dispatched": 0, "completed": 0, "respawns": 0,
+                      "worker_lost": 0, "replayed": 0, "scatter_queries": 0,
+                      "deduped": 0, "slab_payloads": 0,
+                      "inline_payloads": 0, "reopens": 0,
+                      "reopen_last_s": 0.0},
+            gauges=("reopen_last_s",))
         self._rw = _RWLock()  # windows are readers, reopen() the writer
 
     # make the scheduler's locality sort work unchanged
@@ -495,14 +530,14 @@ class ShardedQueryServer:
                                         name=f"shard-pump-{shard.index}")
                 pump.start()
                 self._pumps.append(pump)
-            deadline = time.monotonic() + self.start_timeout_s
+            deadline = monotime() + self.start_timeout_s
             for shard in self._shards:
                 # re-read shard.ready each poll: a worker that crashes
                 # during startup is respawned by the supervisor with a
                 # FRESH Event, and waiting on the original object would
                 # miss the replacement's ready signal
                 while not shard.ready.wait(0.1):
-                    if time.monotonic() > deadline:
+                    if monotime() > deadline:
                         raise RuntimeError(
                             f"shard {shard.index} worker failed to become "
                             f"ready within {self.start_timeout_s:.0f}s")
@@ -521,7 +556,7 @@ class ShardedQueryServer:
             args=(shard.index, self.n_shards, self.ring.vnodes,
                   self.ring.salt, self.db_dir, self.cache_bytes,
                   self.warm_bytes, self.server_factory, self.slab_bytes,
-                  shard.req_q, shard.resp_q),
+                  self.trace_ring, shard.req_q, shard.resp_q),
             daemon=True, name=f"repro-shard-{shard.index}")
         shard.proc.start()
 
@@ -596,14 +631,14 @@ class ShardedQueryServer:
             raise RuntimeError("sharded query server is closed")
         from repro.query.database import CMS_NAME
         new_dir = str(db_dir)
-        t0 = time.monotonic()
+        t0 = monotime()
         self._rw.acquire_write()
         try:
             for shard in self._shards:
                 with shard.lock:
                     shard.reopen_ack = threading.Event()
                     shard.req_q.put(("reopen", new_dir))
-            deadline = time.monotonic() + self.start_timeout_s
+            deadline = monotime() + self.start_timeout_s
             for shard in self._shards:
                 seen = shard.deaths
                 while not shard.reopen_ack.wait(0.1):
@@ -616,14 +651,14 @@ class ShardedQueryServer:
                             # came up on the old directory — re-send
                             seen = shard.deaths
                             shard.req_q.put(("reopen", new_dir))
-                    if time.monotonic() > deadline:
+                    if monotime() > deadline:
                         raise RuntimeError(
                             f"shard {shard.index} did not ack reopen "
                             f"within {self.start_timeout_s:.0f}s")
             # respawns-after-death from here on land on the new epoch
             self.db_dir = new_dir
             self._has_cms = os.path.exists(os.path.join(new_dir, CMS_NAME))
-            dt = time.monotonic() - t0
+            dt = monotime() - t0
             with self._stats_lock:
                 self._stats["reopens"] += 1
                 self._stats["reopen_last_s"] = dt
@@ -713,6 +748,7 @@ class ShardedQueryServer:
                 remaining[0] -= 1
                 if remaining[0]:
                     return
+            t0 = monotime()
             try:
                 vals = []
                 for f in parts:
@@ -727,6 +763,12 @@ class ShardedQueryServer:
             except Exception as e:                          # noqa: BLE001
                 res = QueryError(op=str(getattr(req, "op", "?")),
                                  error=type(e).__name__, message=str(e))
+            rec = recorder()
+            if rec.enabled:
+                rec.record("merge", str(getattr(req, "op", "?")), t0,
+                           monotime() - t0,
+                           trace_id=getattr(req, "trace_id", None) or "",
+                           attrs={"parts": len(parts)})
             if not merged.done():
                 merged.set_result(res)
 
@@ -849,6 +891,9 @@ class ShardedQueryServer:
             shard.warm = msg[1].get("warm")
             shard.reopen_ack.set()
             return []
+        if len(msg) > 2 and msg[2]:
+            # spans the worker piggybacked on this reply chunk
+            recorder().extend(msg[2])
         resolved: list[tuple[Future, object]] = []
         slab_n = inline_n = 0
         for key, payload in msg[1]:
@@ -909,6 +954,9 @@ class ShardedQueryServer:
         for fut, res in resolved:
             if not fut.done():
                 fut.set_result(res)
+        # freeze the recent span history: the last moments before this
+        # death are exactly what a postmortem needs
+        recorder().dump(f"worker_death shard={shard.index} deaths={deaths}")
         # exponential backoff so a worker that dies deterministically at
         # startup (corrupt database, OOM loop) cannot pin a CPU with a
         # fork-per-100ms respawn storm; requests arriving meanwhile queue
@@ -936,6 +984,8 @@ class ShardedQueryServer:
                 except Exception:
                     pass
             items = []
+            rec = recorder()
+            now = monotime()
             for p in replay:
                 key = next(self._seq)
                 p.slab = (shard.free_slabs.pop()
@@ -943,6 +993,16 @@ class ShardedQueryServer:
                           and _slab_eligible(p.req, p.scatter) else None)
                 shard.pending[key] = p
                 items.append((key, p.req, p.slab, p.scatter))
+                if rec.enabled:
+                    # zero-duration marker: this request crossed a worker
+                    # death and was re-dispatched (its trace shows a
+                    # second decode on the replacement worker)
+                    rec.record("replay", str(getattr(p.req, "op", "?")),
+                               now, 0.0,
+                               trace_id=getattr(p.req, "trace_id", None)
+                               or "",
+                               attrs={"shard": shard.index,
+                                      "replays": p.replays})
             if items:
                 shard.req_q.put(items)
         with self._stats_lock:

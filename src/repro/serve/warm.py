@@ -29,11 +29,11 @@ planes the consistent-hash router will ever send it.
 """
 from __future__ import annotations
 
-import time
 from typing import Callable
 
 import numpy as np
 
+from repro.obs import monotime
 from repro.query.database import Database
 
 #: plan/ownership keys: ``(store, id)`` with store in _STORES
@@ -108,7 +108,9 @@ def warm_cache(db: Database, byte_budget: int | None = None, *,
     hottest-per-byte planes it loaded first — worse than not warming."""
     cap = int(db.cache.capacity_bytes * 0.9)
     byte_budget = cap if byte_budget is None else min(int(byte_budget), cap)
-    t0 = time.perf_counter()
+    # monotime (not perf_counter): one clock for every duration the
+    # serve stack reports, so warm timings compare against span timings
+    t0 = monotime()
     plan = plan_warm(db, byte_budget, owned)
     loaded = {"cms": 0, "pms": 0, "trc": 0}
     evictions0 = db.cache.evictions
@@ -128,4 +130,4 @@ def warm_cache(db: Database, byte_budget: int | None = None, *,
             "cms_planes": loaded["cms"], "pms_planes": loaded["pms"],
             "trc_planes": loaded["trc"],
             "cache_bytes": db.cache.nbytes, "budget_bytes": int(byte_budget),
-            "seconds": round(time.perf_counter() - t0, 4)}
+            "seconds": round(monotime() - t0, 4)}

@@ -51,7 +51,13 @@ def wire_to_nd(obj: dict) -> np.ndarray:
 
 def request_to_wire(req: QueryRequest) -> dict:
     """Encode a request sparsely: ``op`` plus every non-default field (the
-    decoder fills defaults back in, so unknown future ops keep working)."""
+    decoder fills defaults back in, so unknown future ops keep working).
+
+    ``trace_id`` rides this envelope like any other field: clients that
+    set it (or the HTTP edge, which mints one per request) get the same id
+    stamped on every span the request produces — in-process, in shard
+    workers, and through replay-after-death — with zero wire cost for
+    untraced requests (default ``None`` is elided like every default)."""
     out: dict = {"op": req.op}
     for f in fields(QueryRequest):
         if f.name == "op":

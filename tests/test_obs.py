@@ -1,0 +1,373 @@
+"""Self-hosted observability: registry parity, tracing across processes,
+flight-recorder bounds, and the export-to-our-own-format round trip.
+
+The contract under test: instrumenting the serve stack must not change a
+single historical ``/metrics`` JSON byte (CounterGroup is a real mapping,
+the obs Histogram keeps the seed ``LatencyHistogram`` bucket semantics),
+while the same instruments render as valid Prometheus text exposition —
+and a trace id minted at the HTTP edge must survive scheduler coalescing,
+the shm/pickle shard transport, and replay-after-SIGKILL.
+"""
+import importlib.util
+import os
+import signal
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.aggregate import AggregationConfig, StreamingAggregator
+from repro.obs import (HIST_EDGES_US, FlightRecorder, Histogram,
+                       MetricsRegistry, configure, mint_trace_id, monotime,
+                       recorder, valid_trace_id)
+from repro.obs.export import export_spans, spans_to_profiles
+from repro.obs.registry import CounterGroup
+from repro.query import Database, topk_hot_paths
+from repro.query.timeline import occupancy, samples_in_window
+from repro.serve.engine import QueryError, QueryRequest, QueryServer
+from repro.serve.scheduler import _HIST_EDGES_US, BatchScheduler, LatencyHistogram
+from repro.serve.shard import ShardedQueryServer
+from tests.conftest import make_profile
+
+_spec = importlib.util.spec_from_file_location(
+    "check_prom", os.path.join(os.path.dirname(__file__), "..", "tools",
+                               "check_prom.py"))
+check_prom = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_prom)
+
+
+@pytest.fixture
+def ring():
+    """A fresh default-capacity recorder, restored after the test."""
+    rec = configure(4096)
+    yield rec
+    configure(int(os.environ.get("REPRO_TRACE_RING", "2048") or 2048))
+
+
+@pytest.fixture(scope="module")
+def db_dir(tmp_path_factory):
+    td = tmp_path_factory.mktemp("obsdb")
+    rng = np.random.default_rng(31)
+    paths = []
+    for i in range(6):
+        prof = make_profile(rng, n_nodes=90, n_metrics=6, density=0.3,
+                            n_trace=24, identity={"rank": i})
+        p = td / f"prof{i:03d}.rprf"
+        prof.save(p)
+        paths.append(str(p))
+    StreamingAggregator(
+        td / "db", AggregationConfig(executor="threads", n_workers=3)
+    ).run(paths)
+    return str(td / "db")
+
+
+# ---------------------------------------------------------------------------
+# registry: JSON parity + prometheus exposition
+# ---------------------------------------------------------------------------
+
+def test_histogram_keeps_seed_latencyhistogram_semantics():
+    h = Histogram()
+    h.observe(50e-6)       # 50us < 100us -> bucket 0
+    h.observe(100e-6)      # exactly an edge: strict < puts it one up
+    h.observe(2.5e-3)      # 2500us -> bucket (1e3, 3e3]
+    h.observe(10.0)        # past the last edge -> overflow bucket
+    d = h.as_dict()
+    assert set(d) == {"buckets_us", "counts", "n", "mean_ms",
+                      "p50_ms_le", "p99_ms_le"}
+    assert d["buckets_us"] == list(HIST_EDGES_US)
+    assert d["counts"][0] == 1 and d["counts"][1] == 1
+    assert d["counts"][3] == 1 and d["counts"][-1] == 1
+    assert d["n"] == 4
+    # quantiles return bucket upper edges (seconds -> ms in as_dict)
+    assert d["p50_ms_le"] == pytest.approx(0.3)
+    assert d["p99_ms_le"] == pytest.approx(HIST_EDGES_US[-1] * 10 / 1e3)
+    assert Histogram().as_dict()["mean_ms"] == 0.0
+
+
+def test_scheduler_latencyhistogram_is_the_obs_histogram():
+    assert LatencyHistogram is Histogram
+    assert tuple(_HIST_EDGES_US) == HIST_EDGES_US
+
+
+def test_counter_group_is_dict_compatible():
+    g = CounterGroup({"a": 0, "b": 0})
+    g["a"] += 2
+    g.inc("b", 3)
+    assert dict(g) == {"a": 2, "b": 3}
+    assert g["a"] == 2 and len(g) == 2 and "a" in g
+    threads = [threading.Thread(
+        target=lambda: [g.inc("a") for _ in range(500)]) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert g["a"] == 2 + 2000
+
+
+def test_registry_renders_valid_prometheus():
+    reg = MetricsRegistry()
+    reg.counter("demo.requests").inc(3)
+    reg.gauge("demo.depth", lambda: 7)
+    reg.histogram("demo.latency").observe(0.002)
+    fam = reg.histogram_family("demo.by_op", "op")
+    fam.labels("stripe").observe(0.1)
+    fam.labels("topk").observe(0.2)
+    grp = reg.group("demo", {"hits": 4, "last_s": 1.5}, gauges=("last_s",))
+    grp.inc("hits")
+    text = reg.prometheus()
+    errors, stats = check_prom.check_exposition(text)
+    assert not errors, errors
+    assert stats["histograms"] >= 2
+    assert "repro_demo_requests_total 3" in text
+    assert "repro_demo_depth 7" in text
+    assert 'op="stripe"' in text
+    assert "repro_demo_hits_total 5" in text
+    assert "# TYPE repro_demo_last_s gauge" in text
+
+
+def test_registry_rejects_kind_collisions_and_dedupes():
+    reg = MetricsRegistry()
+    c = reg.counter("x")
+    assert reg.counter("x") is c
+    with pytest.raises(ValueError):
+        reg.gauge("x")
+
+
+def test_database_counters_json_shape(db_dir):
+    with Database(db_dir) as db:
+        db.profile_metrics(0)
+        counters = dict(db.counters)
+        assert set(counters) == {"pms_plane_loads", "cms_plane_loads",
+                                 "cms_stripe_reads", "cms_stripe_skips",
+                                 "trace_loads", "pms_scan_fallbacks"}
+        assert counters["pms_plane_loads"] == 1
+        errors, _ = check_prom.check_exposition(db.obs.prometheus())
+        assert not errors, errors
+
+
+# ---------------------------------------------------------------------------
+# flight recorder
+# ---------------------------------------------------------------------------
+
+def test_ring_bounded_under_load():
+    rec = FlightRecorder(64)
+    for i in range(1000):
+        rec.record("decode", "stripe", float(i), 1e-4, trace_id="t")
+    assert len(rec.snapshot()) == 64
+    assert rec.recorded == 1000
+    # drain ships at most capacity spans; the ring keeps what overflowed
+    assert len(rec.drain_outbox()) == 64
+    assert rec.dropped_outbox == 1000 - 64
+    d = rec.as_dict(limit=16)
+    assert d["n"] == 16 and d["capacity"] == 64 and d["recorded"] == 1000
+
+
+def test_ring_disabled_at_zero_capacity():
+    rec = FlightRecorder(0)
+    assert not rec.enabled
+    rec.record("decode", "stripe", 0.0, 1.0, trace_id="t")
+    assert rec.snapshot() == [] and rec.recorded == 0
+    assert not rec.dump("nope")
+
+
+def test_dump_rate_limited_and_bounded():
+    rec = FlightRecorder(32)
+    rec.record("decode", "stripe", 0.0, 1e-4)
+    assert rec.dump("first")
+    assert not rec.dump("storm")          # inside DUMP_INTERVAL_S
+    assert len(rec.as_dict()["dumps"]) == 1
+
+
+def test_trace_id_minting_and_validation():
+    tid = mint_trace_id()
+    assert valid_trace_id(tid) and len(tid) == 16
+    assert valid_trace_id("client-req.42:a")
+    for bad in ("", None, 17, "a" * 65, "has space", 'quote"'):
+        assert not valid_trace_id(bad)
+
+
+# ---------------------------------------------------------------------------
+# tracing across the serving stack
+# ---------------------------------------------------------------------------
+
+def test_trace_id_survives_scheduler_coalescing(ring, db_dir):
+    """Identical requests with *different* trace ids coalesce into one
+    dispatch (the dedupe key ignores trace_id) — yet every caller's
+    trace still shows its own dispatch span."""
+    tids = [mint_trace_id() for _ in range(3)]
+    with ShardedQueryServer(db_dir, 2, slab_bytes=1 << 20) as srv:
+        with BatchScheduler(srv, max_batch=64, max_queue=256,
+                            n_workers=2) as sched:
+            reqs = [QueryRequest(op="profile", pid=1, trace_id=t)
+                    for t in tids for _ in range(4)]
+            futs = sched.submit_many(reqs)
+            res = [f.result(30) for f in futs]
+            assert not any(isinstance(r, QueryError) for r in res)
+            assert srv.metrics()["deduped"] > 0
+    by_tid = {t: [] for t in tids}
+    for s in recorder().snapshot():
+        if s.trace_id in by_tid:
+            by_tid[s.trace_id].append(s.name)
+    for t in tids:
+        assert "dispatch" in by_tid[t], \
+            f"coalescing dropped the dispatch span of {t}"
+
+
+def test_worker_spans_ship_back_on_chunked_replies(ring, db_dir):
+    """Shard workers decode in their own process; their spans ride the
+    existing reply chunks (including the shm slab path) back into the
+    parent ring, stamped with the owning shard."""
+    tid = mint_trace_id()
+    with ShardedQueryServer(db_dir, 2, slab_bytes=1 << 20) as srv:
+        out = srv.serve([QueryRequest(op="profile", pid=p, trace_id=tid)
+                         for p in range(6)])
+        assert len(out) == 6
+    worker = [s for s in recorder().snapshot()
+              if s.shard >= 0 and s.trace_id == tid]
+    assert {s.name for s in worker} >= {"decode", "encode"}
+    assert {s.shard for s in worker} == {0, 1}
+    assert all(s.pid != os.getpid() for s in worker)
+
+
+class _SleepKillServer(QueryServer):
+    """Worker-side double: ``sleep`` stalls, ``die`` SIGKILLs the worker."""
+
+    def submit(self, req):
+        if req.op == "sleep":
+            time.sleep(req.t0)
+            return 0.0
+        if req.op == "die":
+            os.kill(os.getpid(), signal.SIGKILL)
+        return super().submit(req)
+
+
+@pytest.mark.skipif(not hasattr(signal, "SIGKILL"), reason="POSIX only")
+def test_sigkill_replay_keeps_trace_and_freezes_dump(ring, db_dir):
+    """Kill a worker mid-batch: the replayed requests keep their trace
+    ids, the supervisor records ``replay`` spans, and the recorder
+    freezes a worker-death dump for /debug/spans."""
+    tid = mint_trace_id()
+    with ShardedQueryServer(db_dir, 2, slab_bytes=1 << 20,
+                            server_factory=_SleepKillServer) as srv:
+        sleep_req = QueryRequest(op="sleep", t0=0.6, trace_id=tid)
+        victim = srv.shard_of(sleep_req)
+        reqs = [sleep_req] + [QueryRequest(op="profile", pid=p, trace_id=tid)
+                              for p in range(6)]
+        out: list = [None]
+        t = threading.Thread(
+            target=lambda: out.__setitem__(0, srv.serve(reqs)))
+        t.start()
+        time.sleep(0.2)
+        os.kill(srv.worker_pids()[victim], signal.SIGKILL)
+        t.join(30)
+        assert not t.is_alive()
+        assert out[0][0] == 0.0
+        assert srv.metrics()["respawns"] >= 1
+    spans = recorder().snapshot()
+    replay = [s for s in spans if s.name == "replay"]
+    assert replay and all(s.trace_id == tid for s in replay)
+    dumps = recorder().as_dict()["dumps"]
+    assert any("worker_death" in d["reason"] for d in dumps)
+
+
+# ---------------------------------------------------------------------------
+# HTTP surface
+# ---------------------------------------------------------------------------
+
+def test_http_metrics_json_prom_spans_and_trace_echo(ring, db_dir):
+    from repro.serve.client import QueryClient
+    from repro.serve.http import QueryHTTPServer
+    with Database(db_dir, cache_bytes=8 << 20) as db, \
+            QueryHTTPServer(db, port=0, warm_bytes=0) as srv:
+        host, port = srv.address
+        with QueryClient(host, port) as cl:
+            tid = mint_trace_id()
+            res = cl.batch([QueryRequest(op="profile", pid=0)],
+                           trace_id=tid)
+            assert len(res) == 1
+            assert cl.last_trace_id == tid  # header/body echo
+            # a malformed header id is replaced by a minted one
+            cl.batch([QueryRequest(op="profile", pid=1)],
+                     trace_id=None)
+            assert valid_trace_id(cl.last_trace_id)
+
+            m = cl.metrics()
+            # the historical JSON key set, byte-for-byte compatible
+            assert {"cache", "db_counters", "http_requests", "warm",
+                    "uptime_s", "scheduler", "shards"} <= set(m)
+            assert m["http_requests"] >= 2
+            assert set(m["scheduler"]["latency"]["profile"]) == {
+                "buckets_us", "counts", "n", "mean_ms",
+                "p50_ms_le", "p99_ms_le"}
+
+            import http.client
+            conn = http.client.HTTPConnection(host, port, timeout=30)
+            conn.request("GET", "/metrics?format=prom")
+            resp = conn.getresponse()
+            assert resp.status == 200
+            assert resp.headers["Content-Type"].startswith("text/plain")
+            text = resp.read().decode("utf-8")
+            conn.close()
+            errors, stats = check_prom.check_exposition(text)
+            assert not errors, errors
+            assert "repro_http_requests_total" in text
+            assert "repro_scheduler_latency_seconds_bucket" in text
+            assert "repro_db_cache_hits" in text
+
+            spans = cl._roundtrip("GET", "/debug/spans?limit=32")
+            assert spans["n"] > 0 and spans["capacity"] == 4096
+            assert {s["name"] for s in spans["spans"]} & {
+                "request", "decode", "dispatch"}
+            assert any(s["trace_id"] == tid for s in spans["spans"])
+
+
+def test_ingest_metrics_json_and_prom(tmp_path):
+    from repro.ingest.server import IngestHTTPServer
+    srv = IngestHTTPServer(tmp_path / "root")
+    m = srv.metrics()
+    assert {"http_requests", "profiles_ingested", "merges",
+            "merge_latency", "publish_latency", "pending",
+            "uptime_s"} <= set(m)
+    assert set(m["merge_latency"]) == {"buckets_us", "counts", "n",
+                                       "mean_ms", "p50_ms_le", "p99_ms_le"}
+    errors, _ = check_prom.check_exposition(srv.prometheus())
+    assert not errors, errors
+
+
+# ---------------------------------------------------------------------------
+# export: the profiler profiles itself
+# ---------------------------------------------------------------------------
+
+def test_export_round_trip(ring, tmp_path):
+    rec = recorder()
+    base = monotime()
+    for i in range(40):
+        rec.record("decode", "stripe", base + i * 1e-3, 5e-4, trace_id="t",
+                   shard=i % 2)
+        rec.record("queue_wait", "stripe", base + i * 1e-3, 1e-4,
+                   trace_id="t", shard=i % 2)
+    rec.record("merge", "profile", base + 0.05, 2e-3)
+    summary = export_spans(rec.snapshot(), str(tmp_path / "obs"))
+    assert summary["profiles"] == 3      # two shards + the parent
+    assert summary["spans"] == 81
+    with Database(summary["db_dir"]) as db:
+        rows = topk_hot_paths(db, "obs.time", k=4)
+        assert rows and rows[0].value > 0
+        paths = {r.path for r in rows}
+        assert any("stripe" in p and "decode" in p for p in paths)
+        # span starts land on one host-wide timeline, normalized to the
+        # earliest span — windows and occupancy work across processes
+        win = samples_in_window(db, 0, 0.0, 1.0)
+        assert win.time.size > 0
+        _, counts = occupancy(db, 0.0, 1.0)
+        assert counts.sum() == 81
+        # per-process identity is preserved
+        idents = [db.identity(p) for p in range(db.n_profiles)]
+        assert {i["kind"] for i in idents} == {"obs"}
+        assert sorted(i["shard"] for i in idents) == [-1, 0, 1]
+
+
+def test_export_rejects_empty():
+    with pytest.raises(ValueError):
+        spans_to_profiles([])

@@ -1,0 +1,187 @@
+#!/usr/bin/env python3
+"""Validate Prometheus text exposition format 0.0.4 — stdlib only.
+
+The serve/ingest tiers render their metrics registries as Prometheus
+text (``GET /metrics?format=prom``); this validator is what CI (and
+``tests/test_obs.py``) holds that output against, without needing a
+prometheus client library in the image:
+
+* every sample line parses as ``name[{labels}] value`` with a legal
+  metric name, legal label syntax, and a float-parseable value;
+* every sample's base name is covered by a preceding ``# TYPE``
+  declaration, and no name is declared twice with different types;
+* histogram series are structurally complete and consistent: the
+  ``_bucket`` samples of each label set are cumulative (non-decreasing
+  with ``le``), end at ``le="+Inf"``, and agree with the ``_count``
+  sample; ``_sum``/``_count`` exist for every bucket family;
+* counters never carry a negative value.
+
+Usage::
+
+    python tools/check_prom.py FILE        # or '-' for stdin
+    python tools/check_prom.py http://127.0.0.1:8422/metrics?format=prom
+
+Exits 0 and prints a one-line summary when valid; exits 1 with every
+violation otherwise.
+"""
+from __future__ import annotations
+
+import re
+import sys
+
+_NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+_SAMPLE_RE = re.compile(
+    r"^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)"
+    r"(?:\{(?P<labels>[^}]*)\})?"
+    r"\s+(?P<value>\S+)(?:\s+(?P<ts>-?\d+))?$")
+_LABEL_RE = re.compile(
+    r'^[a-zA-Z_][a-zA-Z0-9_]*="(?:[^"\\]|\\.)*"$')
+_TYPES = ("counter", "gauge", "histogram", "summary", "untyped")
+_HIST_SUFFIXES = ("_bucket", "_sum", "_count")
+
+
+def _base_name(name: str, types: dict) -> str:
+    """The TYPE-declared family a sample belongs to (histogram samples
+    carry _bucket/_sum/_count suffixes; counters carry _total)."""
+    for suffix in _HIST_SUFFIXES:
+        if name.endswith(suffix) and types.get(name[:-len(suffix)]) in (
+                "histogram", "summary"):
+            return name[:-len(suffix)]
+    return name
+
+
+def _parse_labels(raw: str, errors: list, lineno: int) -> dict:
+    labels: dict[str, str] = {}
+    if not raw:
+        return labels
+    for part in raw.split(","):
+        part = part.strip()
+        if not _LABEL_RE.match(part):
+            errors.append(f"line {lineno}: bad label pair {part!r}")
+            continue
+        k, v = part.split("=", 1)
+        labels[k] = v[1:-1]
+    return labels
+
+
+def check_exposition(text: str) -> tuple[list[str], dict]:
+    """Validate exposition text.  Returns ``(errors, stats)``; valid
+    input yields an empty error list."""
+    errors: list[str] = []
+    types: dict[str, str] = {}
+    samples = 0
+    # histogram family -> label-set(frozen, minus le) -> [(le, value)]
+    buckets: dict[str, dict[frozenset, list[tuple[float, float]]]] = {}
+    counts: dict[str, dict[frozenset, float]] = {}
+
+    for lineno, line in enumerate(text.splitlines(), 1):
+        line = line.rstrip()
+        if not line:
+            continue
+        if line.startswith("# TYPE "):
+            parts = line.split()
+            if len(parts) != 4 or parts[3] not in _TYPES:
+                errors.append(f"line {lineno}: malformed TYPE: {line!r}")
+                continue
+            name, mtype = parts[2], parts[3]
+            if not _NAME_RE.match(name):
+                errors.append(f"line {lineno}: bad metric name {name!r}")
+            if name in types and types[name] != mtype:
+                errors.append(f"line {lineno}: {name} redeclared as {mtype} "
+                              f"(was {types[name]})")
+            types[name] = mtype
+            continue
+        if line.startswith("#"):
+            continue  # HELP / comments
+        m = _SAMPLE_RE.match(line)
+        if not m:
+            errors.append(f"line {lineno}: unparseable sample: {line!r}")
+            continue
+        name, raw_labels = m.group("name"), m.group("labels")
+        try:
+            value = float(m.group("value"))
+        except ValueError:
+            errors.append(f"line {lineno}: non-numeric value "
+                          f"{m.group('value')!r}")
+            continue
+        labels = _parse_labels(raw_labels or "", errors, lineno)
+        samples += 1
+        base = _base_name(name, types)
+        mtype = types.get(base)
+        if mtype is None:
+            errors.append(f"line {lineno}: sample {name} has no TYPE "
+                          f"declaration")
+            continue
+        if mtype == "counter" and value < 0:
+            errors.append(f"line {lineno}: counter {name} is negative")
+        if mtype == "histogram":
+            key = frozenset((k, v) for k, v in labels.items() if k != "le")
+            if name.endswith("_bucket"):
+                le_raw = labels.get("le")
+                if le_raw is None:
+                    errors.append(f"line {lineno}: bucket sample without "
+                                  f"an le label")
+                    continue
+                le = float("inf") if le_raw == "+Inf" else float(le_raw)
+                buckets.setdefault(base, {}).setdefault(key, []).append(
+                    (le, value))
+            elif name.endswith("_count"):
+                counts.setdefault(base, {})[key] = value
+
+    for base, by_labels in buckets.items():
+        for key, series in by_labels.items():
+            label_str = dict(sorted(key)) if key else ""
+            les = [le for le, _ in series]
+            vals = [v for _, v in series]
+            if les != sorted(les):
+                errors.append(f"{base}{label_str}: le edges out of order")
+            if vals != sorted(vals):
+                errors.append(f"{base}{label_str}: bucket counts not "
+                              f"cumulative")
+            if not les or les[-1] != float("inf"):
+                errors.append(f"{base}{label_str}: missing le=\"+Inf\" "
+                              f"bucket")
+            total = counts.get(base, {}).get(key)
+            if total is None:
+                errors.append(f"{base}{label_str}: missing _count sample")
+            elif les and les[-1] == float("inf") and vals[-1] != total:
+                errors.append(f"{base}{label_str}: +Inf bucket {vals[-1]} "
+                              f"!= _count {total}")
+
+    stats = {"samples": samples, "families": len(types),
+             "histograms": sum(1 for t in types.values()
+                               if t == "histogram")}
+    return errors, stats
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if len(argv) != 1:
+        print(__doc__.strip().splitlines()[0], file=sys.stderr)
+        print("usage: check_prom.py <file|-|url>", file=sys.stderr)
+        return 2
+    src = argv[0]
+    if src == "-":
+        text = sys.stdin.read()
+    elif src.startswith(("http://", "https://")):
+        from urllib.request import urlopen
+        with urlopen(src, timeout=30) as resp:
+            text = resp.read().decode("utf-8")
+    else:
+        with open(src, encoding="utf-8") as f:
+            text = f.read()
+    errors, stats = check_exposition(text)
+    for e in errors:
+        print(f"INVALID {e}", file=sys.stderr)
+    if errors:
+        print(f"check_prom: {len(errors)} violation(s) in {stats['samples']} "
+              f"samples", file=sys.stderr)
+        return 1
+    print(f"check_prom: ok — {stats['samples']} samples, "
+          f"{stats['families']} families, "
+          f"{stats['histograms']} histograms")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
