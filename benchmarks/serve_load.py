@@ -27,6 +27,13 @@ baseline:
   the trace table of contents too).
 * **overload** — a burst beyond the admission bound must be *rejected*
   (fast :class:`Overloaded` / HTTP 429), never queued without bound.
+* **replication** (with ``--shards``) — R=1 vs R=2 ownership on an
+  all-hot-plane pool: past a backlogged primary the router spills reads
+  onto the replica, so serve bandwidth on the hottest plane scales.
+* **chaos** (``--chaos``) — a timed fault schedule (worker SIGKILL,
+  transport drop, hung-peer stall from :mod:`repro.serve.chaos`) fires
+  under sustained load on a 3-shard R=2 server; zero failed client
+  requests and byte parity with the unfaulted reference are the bars.
 
 ``--http`` runs a mixed-op pool through the real HTTP transport
 (:class:`QueryHTTPServer` + ``QueryClient``), including a 429 probe and a
@@ -228,14 +235,21 @@ def run_scheduled(db_dir: str, shards, *, max_batch: int,
 
 def run_sharded(db_dir: str, client_shards, *, n_shards: int, max_batch: int,
                 cache_bytes: int, slab_bytes: int = 4 << 20,
-                trace_ring: int | None = None) -> dict:
+                trace_ring: int | None = None,
+                replicas: int | None = None,
+                hedge_ms: float | None = None) -> dict:
     """The same closed-loop pool against a ShardedQueryServer: plane
     decodes happen in ``n_shards`` worker processes (each with a
     ``cache_bytes`` LRU over only the planes it owns)."""
     from repro.serve.shard import ShardedQueryServer
+    kw = {}
+    if replicas is not None:
+        kw["replicas"] = replicas
+    if hedge_ms is not None:
+        kw["hedge_ms"] = hedge_ms
     with ShardedQueryServer(db_dir, n_shards, cache_bytes=cache_bytes,
                             slab_bytes=slab_bytes,
-                            trace_ring=trace_ring) as server:
+                            trace_ring=trace_ring, **kw) as server:
         with BatchScheduler(server, max_batch=max_batch, max_wait_ms=0.0,
                             max_queue=8192,
                             n_workers=max(4, n_shards)) as sched:
@@ -247,7 +261,8 @@ def run_sharded(db_dir: str, client_shards, *, n_shards: int, max_batch: int,
             m = server.metrics()
             rep["shard_stats"] = {k: m[k] for k in
                                   ("dispatched", "completed", "respawns",
-                                   "slab_payloads", "inline_payloads")}
+                                   "slab_payloads", "inline_payloads",
+                                   "failovers", "hedges", "hedge_wins")}
             rep["mean_batch"] = round(
                 sched.metrics()["mean_batch_size"], 2)
     return rep
@@ -477,6 +492,145 @@ def phase_sharded(sharded_db: str, *, tiny: bool, shard_counts: list[int],
             "clients": n_clients, "call_size": call_size,
             "plane_bytes": plane_bytes, "cache_bytes": cache_bytes,
             "cpus": os.cpu_count()}
+
+
+def hot_plane_mix(db: Database, n: int, seed: int = 9) -> list[QueryRequest]:
+    """Every request touches ONE profile plane: the read-scaling regime
+    replication exists for.  With R=1 that plane's single owner serializes
+    every lookup; with R=2 the router spills past a backlogged primary
+    onto the replica (both keep the plane decoded), splitting the load."""
+    rng = np.random.default_rng(seed)
+    ctxs = db.stats["ctx"]
+    mids = db.stats["mid"]
+    reqs = []
+    for _ in range(n):
+        i = int(rng.integers(ctxs.size))
+        if rng.random() < 0.6:
+            reqs.append(QueryRequest(op="value", pid=0, ctx=int(ctxs[i]),
+                                     metric=int(mids[i])))
+        else:
+            reqs.append(QueryRequest(op="profile", pid=0))
+    return reqs
+
+
+def phase_replication(sharded_db: str, *, tiny: bool, out) -> dict:
+    """R=1 vs R=2 ownership on an all-hot-plane pool at 3 shards.
+
+    Legs interleave R=1/R=2 twice and keep each side's best run (same
+    discipline as the trace-overhead phase), so a noisy-neighbor burst
+    cannot decide the comparison.  Both legs must stay byte-identical to
+    serial serving; ``--check`` requires R=2 to beat R=1 only where the
+    cores exist to pay for the extra worker's parallelism.
+    """
+    n_shards = 3
+    n_clients, call_size = 16, 32
+    n_calls = 4 if tiny else 8
+    with Database(sharded_db) as db:
+        plane_bytes = int(db._pms.index[:, 1].max())
+        reqs = hot_plane_mix(db, n_clients * n_calls * call_size)
+    pool = _pool_calls(reqs, n_clients, n_calls, call_size)
+    # the hot plane fits every owner's cache: the contest is pure serve
+    # bandwidth on a decoded plane, not decode churn
+    cache_bytes = int(plane_bytes * 2.5)
+    slab_bytes = max(plane_bytes * 2, 1 << 20)
+
+    with Database(sharded_db, cache_bytes=cache_bytes) as ref_db:
+        ref_srv = QueryServer(ref_db)
+        reference = [ref_srv.serve_one(r)
+                     for shard in pool for call in shard for r in call]
+
+    best: dict[str, dict] = {}
+    correct = True
+    for _ in range(2):
+        for r in (1, 2):
+            rep = run_sharded(sharded_db, pool, n_shards=n_shards,
+                              max_batch=8, cache_bytes=cache_bytes,
+                              slab_bytes=slab_bytes, replicas=r)
+            flat = [x for cl in rep.pop("results") for x in cl]
+            rep["correct"] = all(results_equal(a, b)
+                                 for a, b in zip(reference, flat))
+            correct = correct and rep["correct"]
+            name = f"r{r}"
+            if (name not in best
+                    or rep["throughput_rps"] > best[name]["throughput_rps"]):
+                best[name] = rep
+
+    r1_rps = best["r1"]["throughput_rps"]
+    r2_rps = best["r2"]["throughput_rps"]
+    speedup = r2_rps / max(r1_rps, 1e-9)
+    out(f"serve.replicas1_rps,{r1_rps:.1f},hot-plane pool R=1")
+    out(f"serve.replicas2_rps,{r2_rps:.1f},"
+        f"speedup={speedup:.2f}x correct={correct}")
+    return {"r1": best["r1"], "r2": best["r2"],
+            "speedup": round(speedup, 3), "correct": bool(correct),
+            "shards": n_shards, "clients": n_clients,
+            "requests": len(reqs), "plane_bytes": plane_bytes,
+            "cache_bytes": cache_bytes, "cpus": os.cpu_count()}
+
+
+def phase_chaos(sharded_db: str, *, tiny: bool, out) -> dict:
+    """Sustained load with a live chaos schedule (worker SIGKILL,
+    transport drop, hung-peer stall) against a 3-shard R=2 server with
+    hedged reads armed: zero failed client requests and byte parity with
+    an unfaulted serial run, plus post-schedule recovery (every shard
+    routable again, at least one respawn + failover observed)."""
+    from repro.serve.chaos import ChaosSchedule, default_schedule
+    from repro.serve.shard import ShardedQueryServer
+    n_shards = 3
+    with Database(sharded_db) as db:
+        plane_bytes = int(db._pms.index[:, 1].max())
+        batches = [shard_mix(db, 24, seed=20 + s, scatter_share=0.1,
+                             profile_share=0.1) for s in range(4)]
+    cache_bytes = int(plane_bytes * 1.3)
+    slab_bytes = max(plane_bytes * 2, 1 << 20)
+    with Database(sharded_db, cache_bytes=cache_bytes) as ref_db:
+        ref_srv = QueryServer(ref_db)
+        refs = [[ref_srv.serve_one(r) for r in b] for b in batches]
+
+    span_s = 2.5 if tiny else 4.0
+    served = mismatched = failed = 0
+    with ShardedQueryServer(sharded_db, n_shards, cache_bytes=cache_bytes,
+                            slab_bytes=slab_bytes, replicas=2,
+                            hedge_ms=50.0) as srv:
+        events = default_schedule(n_shards, span_s=span_s,
+                                  kinds=("kill", "drop", "stall", "kill"))
+        with ChaosSchedule(srv, events) as sched:
+            deadline = time.perf_counter() + span_s + 0.5
+            i = 0
+            while time.perf_counter() < deadline or served < len(batches):
+                b = i % len(batches)
+                got = srv.serve(batches[b])
+                failed += sum(isinstance(r, QueryError) for r in got)
+                ok = all(results_equal(a, r)
+                         for a, r in zip(refs[b], got))
+                mismatched += 0 if ok else 1
+                served += 1
+                i += 1
+        # recovery: answers keep flowing and every shard rejoins
+        t_end = time.perf_counter() + 30
+        while time.perf_counter() < t_end:
+            srv.serve(batches[0])
+            m = srv.metrics()
+            if (m["respawns"] >= 1
+                    and all(s["health"]["state"] != "dead"
+                            for s in m["shards"])):
+                break
+            time.sleep(0.1)
+        m = srv.metrics()
+        rep = {"served_batches": served, "failed_requests": failed,
+               "mismatched_batches": mismatched,
+               "schedule": sched.report(), "span_s": span_s,
+               "failovers": m["failovers"], "respawns": m["respawns"],
+               "replayed": m["replayed"], "hedges": m["hedges"],
+               "hedge_wins": m["hedge_wins"],
+               "health": [s["health"]["state"] for s in m["shards"]],
+               "shards": n_shards, "replicas": 2}
+    out(f"serve.chaos_failed,{failed},of {served} batches "
+        f"({len(rep['schedule'])} faults injected)")
+    out(f"serve.chaos_recovery,{rep['respawns']},respawns "
+        f"failovers={rep['failovers']} hedge_wins={rep['hedge_wins']} "
+        f"health={','.join(rep['health'])}")
+    return rep
 
 
 def phase_trace_overhead(sharded_db: str, *, tiny: bool, out) -> dict:
@@ -721,7 +875,8 @@ def phase_http(db_dir: str, *, tiny: bool, out) -> dict:
 def run(out=print, tiny: bool = False, check: bool = False,
         http: bool = False, shard_counts: list[int] | None = None,
         out_path: str | None = None, trace: str = "off",
-        trace_only: bool = False, obs_out: str | None = None) -> dict:
+        trace_only: bool = False, obs_out: str | None = None,
+        chaos: bool = False) -> dict:
     report: dict = {"workload": "tiny" if tiny else "standard"}
     with tempfile.TemporaryDirectory() as td:
         sharded_db = None
@@ -729,11 +884,16 @@ def run(out=print, tiny: bool = False, check: bool = False,
             heavy_db = build_heavy_database(td, tiny)
             report["batching"] = phase_batched_vs_unbatched(
                 heavy_db, tiny=tiny, out=out)
-            if shard_counts:
+            if shard_counts or chaos:
                 sharded_db = build_sharded_database(td, tiny)
+            if shard_counts:
                 report["sharded"] = phase_sharded(sharded_db, tiny=tiny,
                                                   shard_counts=shard_counts,
                                                   out=out)
+                report["replication"] = phase_replication(
+                    sharded_db, tiny=tiny, out=out)
+            if chaos:
+                report["chaos"] = phase_chaos(sharded_db, tiny=tiny, out=out)
             db_dir = build_database(td, tiny)
             report["warm"] = phase_warm_vs_cold(db_dir, tiny=tiny, out=out)
             report["overload"] = phase_overload(db_dir, out=out)
@@ -774,6 +934,24 @@ def run(out=print, tiny: bool = False, check: bool = False,
                 assert best >= bar, \
                     f"sharded speedup {best:.2f} (counts {shard_counts}) " \
                     f"< {bar}x"
+        if "replication" in report:
+            r = report["replication"]
+            assert r["correct"], "replicated results diverged from serial"
+            # R=2's extra parallelism needs real cores to show up as
+            # throughput (same gate as the sharded speedup bar)
+            if (os.cpu_count() or 1) >= 2 * r["shards"]:
+                assert r["speedup"] > 1.0, \
+                    f"R=2 did not beat R=1 ({r['speedup']:.2f}x)"
+        if "chaos" in report:
+            c = report["chaos"]
+            assert c["failed_requests"] == 0, \
+                f"{c['failed_requests']} requests failed under chaos"
+            assert c["mismatched_batches"] == 0, \
+                "chaos run diverged from the unfaulted reference"
+            assert c["respawns"] >= 1 and c["failovers"] >= 1, \
+                f"schedule injected no recoverable faults: {c}"
+            assert "dead" not in c["health"], \
+                f"a shard never rejoined: {c['health']}"
         if "warm" in report:
             w = report["warm"]
             assert w["warm_p99_ms"] < w["cold_p99_ms"], \
@@ -828,13 +1006,19 @@ def main():
     ap.add_argument("--obs-out", default=None,
                     help="write BENCH_obs.json (the trace-overhead report) "
                          "here")
+    ap.add_argument("--chaos", action="store_true",
+                    help="add the chaos leg: a timed fault schedule "
+                         "(worker SIGKILL, transport drop, hung-peer "
+                         "stall) under sustained load on a 3-shard R=2 "
+                         "server — zero failed requests and byte parity "
+                         "are the bars under --check")
     args = ap.parse_args()
     tiny = args.tiny or args.smoke
     run(tiny=tiny, check=args.check or args.smoke,
         http=args.http or args.smoke,
         shard_counts=_parse_shards(args.shards, tiny), out_path=args.out,
         trace="both" if args.trace_only else args.trace,
-        trace_only=args.trace_only, obs_out=args.obs_out)
+        trace_only=args.trace_only, obs_out=args.obs_out, chaos=args.chaos)
 
 
 if __name__ == "__main__":

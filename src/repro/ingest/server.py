@@ -3,7 +3,11 @@
 One :class:`IngestHTTPServer` owns a snapshot root::
 
     root/
-      spool/              accepted-but-unmerged uploads (crash-safe queue)
+      spool/              accepted-but-unmerged uploads (crash-safe queue;
+                          each entry's filename carries a crc32 of its
+                          bytes, verified on restart recovery)
+      spool/quarantine/   entries whose checksum failed recovery (torn
+                          writes / bit rot), kept for inspection
       epoch-NNNNNNNNNN/   published snapshots (repro.ingest.snapshot)
       CURRENT             atomic pointer to the newest epoch
 
@@ -43,6 +47,7 @@ import os
 import queue as queue_mod
 import threading
 import time
+import zlib
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from urllib.parse import parse_qs, urlsplit
 
@@ -54,6 +59,35 @@ from repro.serve.scheduler import Overloaded
 
 MAX_BODY_BYTES = 64 << 20
 SPOOL_DIR = "spool"
+QUARANTINE_DIR = "quarantine"  # under spool/: corrupt entries land here
+
+
+def spool_entry_name(seq: int, blob: bytes) -> str:
+    """Spool filename carrying its own integrity check:
+    ``NNNNNNNNNNNN.<crc32 hex>.rprf``.  The crc is of the blob as
+    written, so a restart can detect torn/bit-rotted entries without
+    parsing them."""
+    return f"{seq:012d}.{zlib.crc32(blob) & 0xFFFFFFFF:08x}.rprf"
+
+
+def spool_entry_ok(path: str, name: str) -> bool:
+    """Verify one recovered spool entry.  Checksummed names must match
+    their crc; legacy names (``NNNNNNNNNNNN.rprf``, written before
+    checksumming) are accepted iff the content still looks like an RPRF
+    blob — the strongest check available for them."""
+    try:
+        with open(path, "rb") as f:
+            data = f.read()
+    except OSError:
+        return False
+    parts = name.split(".")
+    if len(parts) == 3:  # seq.crc.rprf
+        try:
+            want = int(parts[1], 16)
+        except ValueError:
+            return False
+        return (zlib.crc32(data) & 0xFFFFFFFF) == want
+    return data.startswith(PROFILE_MAGIC)
 
 
 class _BadUpload(ValueError):
@@ -117,7 +151,8 @@ class IngestHTTPServer:
                        "bytes_ingested": 0, "profiles_merged": 0,
                        "merges": 0, "merge_failures": 0,
                        "epochs_published": 0, "gc_removed": 0,
-                       "rejected_overload": 0, "rejected_bad": 0})
+                       "rejected_overload": 0, "rejected_bad": 0,
+                       "spool_quarantined": 0})
         self.obs.gauge("ingest.pending", lambda: self._pending)
         self.obs.gauge("ingest.paused", lambda: self._paused.is_set())
         self.obs.gauge("ingest.resident_profiles",
@@ -127,14 +162,36 @@ class IngestHTTPServer:
         self.obs.gauge("ingest.uptime_s",
                        lambda: monotime() - self._started_t)
         self._last_merge_error: str | None = None
+        self._draining = False
 
-        # recover a spool left behind by a crash: re-enqueue in seq order
+        # recover a spool left behind by a crash: verify each entry's
+        # checksum and re-enqueue the good ones in seq order; corrupt
+        # entries (torn writes, bit rot) go to spool/quarantine/ for
+        # inspection instead of poisoning a merge batch
+        self._quarantine_dir = os.path.join(self._spool, QUARANTINE_DIR)
         for name in sorted(os.listdir(self._spool)):
-            if name.endswith(".rprf"):
+            if not name.endswith(".rprf"):
+                continue
+            path = os.path.join(self._spool, name)
+            try:
                 self._seq = max(self._seq,
                                 int(name.split(".", 1)[0], 10) + 1)
-                self._queue.put(os.path.join(self._spool, name))
+            except ValueError:
+                self._quarantine(path, name)
+                continue
+            if spool_entry_ok(path, name):
+                self._queue.put(path)
                 self._pending += 1
+            else:
+                self._quarantine(path, name)
+
+    def _quarantine(self, path: str, name: str) -> None:
+        os.makedirs(self._quarantine_dir, exist_ok=True)
+        try:
+            os.replace(path, os.path.join(self._quarantine_dir, name))
+        except OSError:
+            return
+        self._counters["spool_quarantined"] += 1
 
     # -- lifecycle -----------------------------------------------------------
     def start(self) -> "IngestHTTPServer":
@@ -157,6 +214,28 @@ class IngestHTTPServer:
                                         daemon=True, name="ingest-http")
         self._thread.start()
         return self
+
+    def drain(self, timeout_s: float = 10.0) -> dict:
+        """Graceful shutdown, phase one: new uploads are shed with
+        ``503 {"error": "Draining"}`` while the merger keeps folding the
+        spooled backlog for up to ``timeout_s``.  Anything still spooled
+        at the deadline is safe — spool entries are durable and recovered
+        (checksum-verified) on the next start.  Follow with :meth:`stop`.
+        """
+        self._draining = True
+        t0 = monotime()
+        deadline = t0 + max(0.0, float(timeout_s))
+        drained = False
+        while monotime() < deadline:
+            with self._lock:
+                if self._pending == 0 and not self._merging:
+                    drained = True
+                    break
+            if self._paused.is_set():
+                break  # a paused merger will never drain; don't spin
+            time.sleep(0.02)
+        return {"drained": drained, "pending": self._pending,
+                "waited_s": round(monotime() - t0, 3)}
 
     def stop(self) -> None:
         self._stop.set()
@@ -210,7 +289,8 @@ class IngestHTTPServer:
                 raise Overloaded(retry_after_s=hint)
             paths = []
             for b in blobs:
-                path = os.path.join(self._spool, f"{self._seq:012d}.rprf")
+                path = os.path.join(self._spool,
+                                    spool_entry_name(self._seq, b))
                 self._seq += 1
                 paths.append((path, b))
             self._pending += len(blobs)
@@ -337,6 +417,7 @@ class IngestHTTPServer:
                 "contexts": len(self.state.tree.parent),
                 "pending": self._pending,
                 "paused": self._paused.is_set(),
+                "draining": self._draining,
                 "epoch": cur[0] if cur else None,
                 "uptime_s": round(monotime() - self._started_t, 3)}
 
@@ -443,6 +524,14 @@ class _IngestHandler(BaseHTTPRequestHandler):
 
     def do_POST(self):  # noqa: N802 - stdlib casing
         svc = self.service
+        if svc._draining:
+            # structured shed: the spool stays durable, the uploader's
+            # RetryPolicy moves to another instance or retries later
+            self.close_connection = True
+            self._send_json(503, {"error": "Draining",
+                                  "message": "ingest endpoint is draining"},
+                            {"Retry-After": "1", "Connection": "close"})
+            return
         svc._counters["http_requests"] += 1
         try:
             if self.path == "/v1/ingest":

@@ -25,16 +25,52 @@ versioned snapshots under the root)::
     PYTHONPATH=src python -m repro.launch.serve ingest runs/live \
         --port 8423 [--publish-every 64] [--retain 2] [--max-pending 256]
 
-Each server prints one JSON line with its URL, then blocks until SIGINT.
+Each server prints one JSON line with its URL, then blocks until SIGINT
+or SIGTERM.  SIGTERM drains gracefully: the endpoint stops accepting new
+work (new calls get a structured ``503 Draining``), in-flight work gets
+``--drain-timeout-s`` to finish, recorded spans are exported if
+``--obs-export`` asked for them, and the process exits 0 — the contract
+an orchestrator's rolling restart relies on.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import signal
 import sys
+import threading
 import time
 
 import numpy as np
+
+
+class _SignalWatch:
+    """Two-phase signal wait: handlers are installed at construction —
+    *before* the ready line is printed, because an orchestrator may
+    SIGTERM the instant it sees it — and :meth:`wait` blocks until one
+    arrives, restoring the previous handlers on the way out."""
+
+    def __init__(self):
+        self._got: dict = {}
+        self._evt = threading.Event()
+        self._old = {
+            sig: signal.signal(sig, self._on)
+            for sig in (signal.SIGTERM, signal.SIGINT)
+        }
+
+    def _on(self, signum, frame):
+        self._got.setdefault("sig", signum)
+        self._evt.set()
+
+    def wait(self) -> str:
+        try:
+            while not self._evt.wait(0.5):
+                pass
+        finally:
+            for sig, old in self._old.items():
+                signal.signal(sig, old)
+        return ("sigterm" if self._got.get("sig") == signal.SIGTERM
+                else "sigint")
 
 
 def _query_server_main(argv):
@@ -64,6 +100,25 @@ def _query_server_main(argv):
                          "workers); 0 = single-process")
     ap.add_argument("--shard-slab-mb", type=int, default=4,
                     help="shm slab size for sharded plane payloads")
+    ap.add_argument("--replicas", type=int, default=2,
+                    help="R-way plane ownership when sharded: each plane "
+                         "has R successor-distinct owner shards; reads "
+                         "fail over (and optionally hedge) across them")
+    ap.add_argument("--transport", default="shm", choices=["shm", "tcp"],
+                    help="parent<->shard-worker peer link: shm queues + "
+                         "slab payloads (same host, default) or "
+                         "length-prefixed TCP framing")
+    ap.add_argument("--hedge-ms", type=float, default=None,
+                    help="arm hedged reads: fire a duplicate at a live "
+                         "replica after max(this, observed p99) and take "
+                         "the first reply (default: off)")
+    ap.add_argument("--max-connections", type=int, default=0,
+                    help="cap concurrent keep-alive connections; beyond "
+                         "it new connections get 429 + Retry-After "
+                         "(0 = unlimited)")
+    ap.add_argument("--drain-timeout-s", type=float, default=10.0,
+                    help="SIGTERM grace: how long in-flight requests get "
+                         "to finish before teardown")
     ap.add_argument("--no-adaptive-wait", action="store_true",
                     help="always hold batch windows for --max-wait-ms "
                          "instead of flushing when a worker idles")
@@ -113,30 +168,35 @@ def _query_server_main(argv):
                   adaptive_wait=not args.no_adaptive_wait,
                   warm_bytes=warm_bytes, shards=args.shards,
                   shard_slab_bytes=args.shard_slab_mb << 20,
+                  replicas=args.replicas, shard_transport=args.transport,
+                  hedge_ms=args.hedge_ms,
+                  max_connections=args.max_connections,
                   trace_ring=args.trace_ring)
 
     def _serve(srv, db):
+        watch = _SignalWatch()
         info = {"url": srv.url, "batching": srv.batching,
-                "shards": srv.shards, "profiles": db.n_profiles,
+                "shards": srv.shards, "replicas": args.replicas,
+                "transport": args.transport, "profiles": db.n_profiles,
                 "contexts": db.n_contexts, "warm": srv.warm_report}
         if srv.switcher is not None:
             info["epoch"] = srv.switcher.epoch
         print(json.dumps(info), flush=True)
-        try:
-            while True:
-                time.sleep(3600)
-        except KeyboardInterrupt:
-            print("shutting down", file=sys.stderr)
-            if args.obs_export:
-                from repro.obs import recorder
-                from repro.obs.export import export_spans
-                spans = recorder().snapshot()
-                if spans:
-                    summary = export_spans(spans, args.obs_export)
-                    print(json.dumps({"obs_export": summary}),
-                          file=sys.stderr, flush=True)
-                else:
-                    print("obs-export: no spans recorded", file=sys.stderr)
+        sig = watch.wait()
+        if sig == "sigterm":
+            report = srv.drain(timeout_s=args.drain_timeout_s)
+            print(json.dumps({"drain": report}), file=sys.stderr, flush=True)
+        print("shutting down", file=sys.stderr)
+        if args.obs_export:
+            from repro.obs import recorder
+            from repro.obs.export import export_spans
+            spans = recorder().snapshot()
+            if spans:
+                summary = export_spans(spans, args.obs_export)
+                print(json.dumps({"obs_export": summary}),
+                      file=sys.stderr, flush=True)
+            else:
+                print("obs-export: no spans recorded", file=sys.stderr)
 
     if args.follow:
         with QueryHTTPServer(args.db, follow=True, poll_ms=args.poll_ms,
@@ -178,6 +238,10 @@ def _ingest_main(argv):
                     help="largest accepted upload body")
     ap.add_argument("--no-traces", action="store_true",
                     help="skip the trace database in published snapshots")
+    ap.add_argument("--drain-timeout-s", type=float, default=10.0,
+                    help="SIGTERM grace: how long the merger gets to fold "
+                         "the spooled backlog before teardown (anything "
+                         "left is durable and recovered on restart)")
     args = ap.parse_args(argv)
 
     cfg = AggregationConfig(executor=args.executor, n_workers=args.workers,
@@ -188,16 +252,17 @@ def _ingest_main(argv):
                           publish_every=args.publish_every,
                           retain=args.retain,
                           max_body_bytes=args.max_body_mb << 20) as srv:
+        watch = _SignalWatch()
         cur = srv.store.current()
         print(json.dumps({"url": srv.url, "root": srv.root,
                           "epoch": cur[0] if cur else None,
                           "publish_every": srv.publish_every,
                           "retain": srv.retain}), flush=True)
-        try:
-            while True:
-                time.sleep(3600)
-        except KeyboardInterrupt:
-            print("shutting down", file=sys.stderr)
+        sig = watch.wait()
+        if sig == "sigterm":
+            report = srv.drain(timeout_s=args.drain_timeout_s)
+            print(json.dumps({"drain": report}), file=sys.stderr, flush=True)
+        print("shutting down", file=sys.stderr)
 
 
 def _generate_main(argv):

@@ -31,9 +31,12 @@ from dataclasses import dataclass, field
 
 from repro.obs.clock import monotime
 
-#: span phase names recorded by the serving stack (docs/observability.md)
+#: span phase names recorded by the serving stack (docs/observability.md);
+#: "failover" marks a request re-dispatched to a live replica after its
+#: owner died, "hedge" a duplicate dispatch fired at a replica after the
+#: p99-derived hedge delay
 SPAN_PHASES = ("request", "queue_wait", "dispatch", "decode", "encode",
-               "merge", "replay", "ingest")
+               "merge", "replay", "failover", "hedge", "ingest")
 
 _TRACE_ID_RE = re.compile(r"^[A-Za-z0-9._:\-]{1,64}$")
 

@@ -57,6 +57,79 @@ MAX_BODY_BYTES = 16 << 20
 MAX_REQUESTS_PER_CALL = 1024
 
 
+class _CappedThreadingHTTPServer(ThreadingHTTPServer):
+    """ThreadingHTTPServer with a keep-alive connection cap.
+
+    Every accepted connection holds a handler thread for its whole
+    keep-alive lifetime, so an unbounded ThreadingHTTPServer converts a
+    connection flood into a thread flood.  With ``max_connections`` set,
+    connection number cap+1 is answered with a raw ``429`` +
+    ``Retry-After`` and closed *before* a handler thread is spawned —
+    the cheapest possible rejection — while established connections are
+    unaffected.  ``active``/``rejected`` feed ``/metrics``.
+    """
+
+    daemon_threads = True
+
+    def __init__(self, addr, handler, *, max_connections: int = 0):
+        self.max_connections = max(0, int(max_connections))
+        self.active = 0
+        self.rejected = 0
+        self._conn_lock = threading.Lock()
+        super().__init__(addr, handler)
+
+    def process_request(self, request, client_address):
+        if self.max_connections:
+            with self._conn_lock:
+                if self.active >= self.max_connections:
+                    self.rejected += 1
+                    reject = True
+                else:
+                    self.active += 1
+                    reject = False
+            if reject:
+                self._send_reject(request)
+                self.close_request(request)
+                return
+        else:
+            with self._conn_lock:
+                self.active += 1
+        super().process_request(request, client_address)
+
+    @staticmethod
+    def _send_reject(request) -> None:
+        body = (b'{"error": "TooManyConnections", "retry_after_s": 1, '
+                b'"message": "connection cap reached; retry or reuse '
+                b'an existing keep-alive connection"}')
+        head = ("HTTP/1.1 429 Too Many Requests\r\n"
+                "Content-Type: application/json\r\n"
+                "Retry-After: 1\r\n"
+                f"Content-Length: {len(body)}\r\n"
+                "Connection: close\r\n\r\n").encode("ascii")
+        try:
+            request.sendall(head + body)
+        except OSError:
+            pass  # client already gone; the close below is all that's left
+
+    def shutdown_request(self, request):
+        # end of a connection thread's life (never called for rejects,
+        # which close_request directly) — release its cap slot
+        try:
+            super().shutdown_request(request)
+        finally:
+            with self._conn_lock:
+                self.active = max(0, self.active - 1)
+
+    def handle_error(self, request, client_address):
+        # clients hanging up mid-request (resets, broken pipes) are
+        # normal churn, not server errors — don't spray tracebacks
+        import sys
+        exc = sys.exc_info()[1]
+        if isinstance(exc, (ConnectionError, TimeoutError)):
+            return
+        super().handle_error(request, client_address)
+
+
 class QueryHTTPServer:
     """The serve subsystem, assembled: warm cache, scheduler, transport.
 
@@ -69,7 +142,10 @@ class QueryHTTPServer:
     each with its own Database handle and plane cache, consistent-hash
     routed by plane; the scheduler's admission queues and the warming
     budget become per-shard.  ``shards=0`` (default) keeps single-process
-    serving.
+    serving.  ``replicas``/``shard_transport``/``hedge_ms`` pass through
+    to the sharded engine (R-way ownership, shm vs tcp peer links, hedged
+    reads); ``max_connections`` caps concurrent keep-alive connections —
+    connection cap+1 gets a pre-thread ``429`` + ``Retry-After``.
     """
 
     def __init__(self, db, *, host: str = "127.0.0.1",
@@ -80,6 +156,9 @@ class QueryHTTPServer:
                  warm_bytes: int | None = 0, shards: int = 0,
                  shard_cache_bytes: int | None = None,
                  shard_slab_bytes: int = 4 << 20, shard_slabs: int = 8,
+                 replicas: int = 2, shard_transport: str = "shm",
+                 hedge_ms: float | None = None,
+                 max_connections: int = 0,
                  follow: bool = False, poll_ms: float = 250.0,
                  follow_wait_s: float = 60.0,
                  follow_cache_bytes: int = 64 << 20,
@@ -111,7 +190,8 @@ class QueryHTTPServer:
                 db.db_dir, self.shards,
                 cache_bytes=shard_cache_bytes or db.cache.capacity_bytes,
                 warm_bytes=warm_bytes, n_slabs=shard_slabs,
-                slab_bytes=shard_slab_bytes)
+                slab_bytes=shard_slab_bytes, replicas=replicas,
+                transport=shard_transport, hedge_ms=hedge_ms)
             self.engine = self.sharded
         else:
             self.engine = QueryServer(db)
@@ -123,8 +203,12 @@ class QueryHTTPServer:
             default_timeout_s=default_timeout_s,
             adaptive_wait=adaptive_wait) if self.batching else None
         self._warm_bytes = warm_bytes
+        self.max_connections = max(0, int(max_connections))
         self.warm_report: dict | None = None
-        self._httpd: ThreadingHTTPServer | None = None
+        self._draining = False
+        self._inflight = 0
+        self._inflight_lock = threading.Lock()
+        self._httpd: _CappedThreadingHTTPServer | None = None
         self._thread: threading.Thread | None = None
         self._follower: threading.Thread | None = None
         self._follow_stop = threading.Event()
@@ -186,8 +270,9 @@ class QueryHTTPServer:
             pass
 
         Handler.service = service
-        self._httpd = ThreadingHTTPServer((self.host, self._port), Handler)
-        self._httpd.daemon_threads = True
+        self._httpd = _CappedThreadingHTTPServer(
+            (self.host, self._port), Handler,
+            max_connections=self.max_connections)
         self._started_t = monotime()
         self._thread = threading.Thread(target=self._httpd.serve_forever,
                                         kwargs={"poll_interval": 0.1},
@@ -200,6 +285,38 @@ class QueryHTTPServer:
                                               name="serve-epoch-follower")
             self._follower.start()
         return self
+
+    def drain(self, timeout_s: float = 10.0) -> dict:
+        """Graceful shutdown, phase one: stop taking new work, finish
+        what's in flight, shed the rest with structured errors.
+
+        New ``/v1/query`` calls are answered ``503 {"error": "Draining"}``
+        (a retryable signal — a load balancer or retrying client moves to
+        another instance); the accept loop keeps running so those
+        rejections are clean HTTP, not connection resets.  Established
+        calls get up to ``timeout_s`` to complete.  Returns a report;
+        the caller then runs :meth:`stop` for teardown.
+        """
+        self._draining = True
+        t0 = monotime()
+        deadline = t0 + max(0.0, float(timeout_s))
+        # epoch follower first: no new reopens mid-drain
+        self._follow_stop.set()
+        if self._follower is not None:
+            self._follower.join(timeout=max(deadline - monotime(), 0.1))
+        drained = True
+        # wait on in-flight *requests*, not connections: idle keep-alive
+        # connections are harmless and may outlive any drain window
+        while self._inflight > 0:
+            if monotime() >= deadline:
+                drained = False  # stragglers shed by stop()'s teardown
+                break
+            threading.Event().wait(0.02)
+        return {"drained": drained,
+                "waited_s": round(monotime() - t0, 3),
+                "inflight_requests": self._inflight,
+                "active_connections": (self._httpd.active
+                                       if self._httpd is not None else 0)}
 
     def stop(self) -> None:
         self._follow_stop.set()
@@ -251,6 +368,14 @@ class QueryHTTPServer:
         out = {"cache": self.db.cache_stats(),
                "db_counters": dict(self.db.counters),
                "http_requests": self._http["requests"],
+               "connections": {
+                   "cap": self.max_connections,
+                   "active": (self._httpd.active
+                              if self._httpd is not None else 0),
+                   "rejected": (self._httpd.rejected
+                                if self._httpd is not None else 0),
+                   "draining": self._draining,
+               },
                "warm": self.warm_report,
                "uptime_s": round(monotime() - self._started_t, 3)}
         out["scheduler"] = (self.scheduler.metrics()
@@ -440,7 +565,18 @@ class _QueryHandler(BaseHTTPRequestHandler):
         if self.path != "/v1/query":
             self._send_json(404, {"error": "NotFound", "path": self.path})
             return
+        if svc._draining:
+            # structured shed: a retrying client or LB moves elsewhere;
+            # close so the slot frees for the drain to complete
+            self.close_connection = True
+            self._send_json(503, {"error": "Draining",
+                                  "message": "server is draining; retry "
+                                             "against another instance"},
+                            {"Retry-After": "1", "Connection": "close"})
+            return
         svc._http.inc("requests")
+        with svc._inflight_lock:
+            svc._inflight += 1
         try:
             try:
                 n = int(self.headers.get("Content-Length", 0))
@@ -470,3 +606,6 @@ class _QueryHandler(BaseHTTPRequestHandler):
                 {"Retry-After": str(max(1, math.ceil(e.retry_after_s)))})
         except Exception as e:  # noqa: BLE001 - last-resort 500
             self._send_json(500, {"error": type(e).__name__, "message": str(e)})
+        finally:
+            with svc._inflight_lock:
+                svc._inflight -= 1

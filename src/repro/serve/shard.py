@@ -6,9 +6,10 @@ clients the GIL is the ceiling (the ROADMAP limiter this module removes).
 :class:`ShardedQueryServer` spawns ``n_shards`` worker *processes*, each
 owning a full :class:`repro.query.Database` handle (its own mmap + decoded
 -plane LRU), and routes every request with a consistent-hash ring keyed by
-:meth:`QueryServer._locality_key` — so each plane is decoded and cached by
-exactly one worker, and the per-worker LRU only ever holds planes the
-router can send it.
+:meth:`QueryServer._locality_key` — with ``replicas`` (default 2)
+successor-distinct owners per key, so each plane is decoded and cached by
+a small owner set: the primary serves it in steady state, replicas absorb
+hot-plane spill, hedged reads, and failover.
 
 Topology::
 
@@ -16,36 +17,47 @@ Topology::
                  |  serve_window(reqs): one batch message per shard
                  v
              ShardedQueryServer (parent)
-               ring: locality_key -> shard          supervisor: respawn +
-               payloads: shm slab arena per shard   replay on worker death
-                 |             |             |
+               ring: locality_key -> R owners       supervisor: health,
+               transport: shm slabs | framed TCP    failover, respawn,
+                 |             |             |      replay, hedges
                worker 0      worker 1      worker N-1   (processes)
                Database      Database      Database
                own LRU       own LRU       own LRU
 
 * **routing** — ``profile``/``window`` requests hash on ``(0, pid)``,
   ``stripe``/``value`` on ``(1, ctx)``; the ring is stable under shard-count
-  changes (only ~1/N of keys move, and every moved key moves to the *new*
-  shard — the classic consistent-hashing property, property-tested in
-  ``tests/test_shard.py``).
+  changes (only ~1/N of keys move their primary, and every moved key moves
+  to the *new* shard — the classic consistent-hashing property,
+  property-tested in ``tests/test_shard.py``).  Among an owner set the
+  router prefers health (alive > rejoining > suspect, never dead), then
+  least backlog in ``spill_pending`` quanta (hot planes spread over their
+  replicas, cold planes stay put), then replica rank.
 * **scatter–gather** — summary-space queries (``topk``, ``threshold``)
-  fan out to every shard restricted to the contexts it owns
-  (``within=`` on the select functions) and the parent merges partials in
-  the same deterministic ``(-value, ctx)`` order, so results are identical
-  to single-process serving.
-* **payloads** — plane-sized results return through a parent-owned
-  :class:`~repro.runtime.shm.SlabArena` (the PR 3 slab transport): the
-  worker serializes straight into the slab and ships a tiny descriptor;
-  only results that outgrow their slab fall back to pickling through the
-  response queue.  Workers never *create* segments, so a SIGKILL'd worker
-  cannot leak ``/dev/shm``.
-* **fault tolerance** — a per-shard pump thread doubles as supervisor:
-  when a worker dies it drains the responses that did arrive, respawns the
-  worker (same ring position, fresh Database), and replays every
-  unanswered in-flight request to the replacement — a killed worker costs
-  latency, never wrong answers.  A request that outlives ``replay_limit``
-  respawns (it is probably what keeps killing workers) resolves to a
-  structured ``QueryError("WorkerLost")`` instead of looping forever.
+  fan out over the *live* shard set; each member answers the slice of
+  contexts the ring assigns it under that live set (``within=`` on the
+  select functions) and the parent merges partials in the same
+  deterministic ``(-value, ctx)`` order, so results are identical to
+  single-process serving for any live set.
+* **payloads** — with the same-host ``shm`` transport, plane-sized results
+  return through a parent-owned :class:`~repro.runtime.shm.SlabArena`
+  (the PR 3 slab transport): the worker serializes straight into the slab
+  and ships a tiny descriptor; only results that outgrow their slab fall
+  back to the pickled reply path.  Workers never *create* segments, so a
+  SIGKILL'd worker cannot leak ``/dev/shm``.  With the ``tcp`` transport
+  (:mod:`repro.serve.transport`) payloads ride inline in length-prefixed
+  frames — shard groups can live in separate process trees or hosts.
+* **fault tolerance** — a per-shard pump thread doubles as supervisor,
+  feeding a per-owner health state machine (alive -> suspect -> dead ->
+  rejoining).  When a worker dies, in-flight requests with another live
+  owner *fail over* immediately (any worker holds the full database, so
+  answers stay byte-identical); the rest replay on the respawned
+  replacement.  A hung worker (stalled transport, wedged syscall) is
+  detected by reply-stall age and killed into the same recovery path.
+  Optional **hedged reads** (``hedge_ms``) duplicate a slow primary read
+  to the next live replica after a p99-derived delay and take the first
+  reply.  A request that outlives ``replay_limit`` respawns (it is
+  probably what keeps killing workers) resolves to a structured
+  ``QueryError("WorkerLost")`` instead of looping forever.
 """
 from __future__ import annotations
 
@@ -53,10 +65,11 @@ import hashlib
 import itertools
 import multiprocessing as mp
 import os
-import queue as queue_mod
+import signal as signal_mod
 import sys
 import threading
 import time
+from collections import deque
 from concurrent.futures import Future
 from concurrent.futures import TimeoutError as FutureTimeout
 from dataclasses import dataclass, field
@@ -68,6 +81,9 @@ from repro.obs import MetricsRegistry, configure, monotime, recorder
 from repro.runtime.shm import (SlabArena, read_section, sections_layout,
                                worker_slab, write_section)
 from repro.serve.engine import QueryError, QueryRequest, QueryServer
+from repro.serve.transport import (ChaosState, PeerClosed, PeerError,
+                                   PeerHealth, PeerTimeout, QueuePeer,
+                                   TcpListener, connect_peer)
 
 #: summary-space ops served by every shard over its owned contexts and
 #: merged in the parent (all other ops route to exactly one shard)
@@ -147,28 +163,54 @@ def _hash64(data: bytes) -> int:
 
 
 class ConsistentHashRing:
-    """Classic vnode hash ring over locality keys.
+    """Classic vnode hash ring over locality keys, with R-way ownership.
 
-    Each shard owns ``vnodes`` pseudo-random points; a key routes to the
-    first point clockwise from its own hash.  Growing the ring from N to
-    N+1 shards only adds points, so the *only* keys that change owner are
-    the ones the new shard's points capture — an expected 1/(N+1) of the
-    key space, and every moved key moves to the new shard.
+    Each shard owns ``vnodes`` pseudo-random points; a key's **primary**
+    owner is the first point clockwise from its own hash, and its
+    ``replicas``-way owner set is the first R *distinct* shards met
+    walking clockwise (the successor list).  Growing the ring from N to
+    N+1 shards only adds points, so the *only* keys that change primary
+    owner are the ones the new shard's points capture — an expected
+    1/(N+1) of the key space, and every moved key moves to the new
+    shard.  The same stability holds per replica rank.
     """
 
     def __init__(self, n_shards: int, *, vnodes: int = 96,
-                 salt: bytes = b"repro-serve-shard"):
+                 salt: bytes = b"repro-serve-shard", replicas: int = 1):
         self.n_shards = max(1, int(n_shards))
         self.vnodes = max(1, int(vnodes))
         self.salt = bytes(salt)
+        self.replicas = max(1, min(int(replicas), self.n_shards))
         pts = sorted(
             (_hash64(b"%s|vnode|%d:%d" % (self.salt, s, v)), s)
             for s in range(self.n_shards) for v in range(self.vnodes))
         self._points = np.array([h for h, _ in pts], dtype=np.uint64)
         self._owner = np.array([s for _, s in pts], dtype=np.int64)
 
+    def _walk_key(self, key: tuple[int, int], need: int) -> list[int]:
+        """First ``need`` *distinct* shards clockwise from the key's
+        hash point — the successor list that defines replica ownership
+        (rank 0 is the classic single owner)."""
+        h = _hash64(b"%s|key|%d:%d" % (self.salt, int(key[0]), int(key[1])))
+        i = int(np.searchsorted(self._points, np.uint64(h), side="left"))
+        n = self._points.size
+        need = min(max(1, int(need)), self.n_shards)
+        out: list[int] = []
+        for j in range(n):
+            s = int(self._owner[(i + j) % n])
+            if s not in out:
+                out.append(s)
+                if len(out) == need:
+                    break
+        return out
+
+    def owners_key(self, key: tuple[int, int]) -> tuple[int, ...]:
+        """Locality key -> the R successor-distinct owning shards,
+        primary first."""
+        return tuple(self._walk_key(key, self.replicas))
+
     def route_key(self, key: tuple[int, int]) -> int:
-        """Locality key ``(group, id)`` -> owning shard."""
+        """Locality key ``(group, id)`` -> primary owning shard."""
         h = _hash64(b"%s|key|%d:%d" % (self.salt, int(key[0]), int(key[1])))
         i = int(np.searchsorted(self._points, np.uint64(h), side="left"))
         return int(self._owner[i % self._points.size])
@@ -176,25 +218,67 @@ class ConsistentHashRing:
     def route(self, req: QueryRequest) -> int:
         return self.route_key(QueryServer._locality_key(req))
 
-    def owned_contexts(self, n_contexts: int, shard: int) -> np.ndarray:
-        """Context ids whose ``(1, ctx)`` key routes to ``shard`` — the
-        ``within=`` set for scatter queries and CMS warm ownership."""
+    def owners(self, req: QueryRequest) -> tuple[int, ...]:
+        return self.owners_key(QueryServer._locality_key(req))
+
+    def assigned_shard(self, key: tuple[int, int],
+                       live=None) -> int:
+        """The shard responsible for ``key`` given the ``live`` set: the
+        first live shard in successor order (not capped at R — with every
+        owner down, responsibility keeps walking, so any non-empty live
+        set always yields a total assignment)."""
+        if live is None:
+            return self.route_key(key)
+        live = frozenset(int(s) for s in live)
+        for s in self._walk_key(key, self.n_shards):
+            if s in live:
+                return s
+        return self.route_key(key)  # nothing live: degenerate fallback
+
+    def owned_contexts(self, n_contexts: int, shard: int,
+                       live=None) -> np.ndarray:
+        """Context ids whose ``(1, ctx)`` key is *assigned* to ``shard``
+        under the ``live`` set — the ``within=`` set for scatter queries.
+        With ``live=None`` this is plain primary ownership; the
+        assignment partitions contexts across any live set."""
         return np.array([c for c in range(int(n_contexts))
-                         if self.route_key((1, c)) == int(shard)],
+                         if self.assigned_shard((1, c), live) == int(shard)],
                         dtype=np.int64)
 
-    def owned_context_mask(self, n_contexts: int, shard: int) -> np.ndarray:
+    def owned_context_mask(self, n_contexts: int, shard: int,
+                           live=None) -> np.ndarray:
         """Boolean ownership over context ids — the O(1)-lookup ``within=``
         form the worker hands to the select functions per scatter query."""
         mask = np.zeros(int(n_contexts), dtype=bool)
-        mask[self.owned_contexts(n_contexts, shard)] = True
+        mask[self.owned_contexts(n_contexts, shard, live)] = True
         return mask
 
-    def owns_plane(self, store: str, oid: int, shard: int) -> bool:
-        """Warm-plan ownership: PMS/trace planes follow the profile key,
-        CMS planes the context key."""
+    def plane_role(self, store: str, oid: int, shard: int) -> int | None:
+        """Replica rank of ``shard`` for a plane (0 = primary, 1.. =
+        replica), or None when the shard does not own it.  PMS/trace
+        planes follow the profile key, CMS planes the context key."""
         group = 1 if store == "cms" else 0
-        return self.route_key((group, int(oid))) == int(shard)
+        owners = self.owners_key((group, int(oid)))
+        try:
+            return owners.index(int(shard))
+        except ValueError:
+            return None
+
+    def owns_plane(self, store: str, oid: int, shard: int) -> bool:
+        """Warm-plan ownership: any replica rank counts (primaries warm
+        hot, replicas warm — see ``warm_priority``)."""
+        return self.plane_role(store, oid, shard) is not None
+
+    def warm_priority(self, store: str, oid: int, shard: int, *,
+                      replica_scale: float = 0.5) -> float:
+        """Warm-plan weight: 1.0 for primary-owned planes, a reduced
+        weight for replica-owned ones (they warm after every primary
+        plane of equal density), 0.0 for planes the shard never serves
+        outside failover."""
+        role = self.plane_role(store, oid, shard)
+        if role is None:
+            return 0.0
+        return 1.0 if role == 0 else float(replica_scale)
 
 
 # ---------------------------------------------------------------------------
@@ -293,16 +377,30 @@ def _merge_scatter(req: QueryRequest, parts: list):
     return ctx[order], vals[order]
 
 
+def _worker_peer(link, shard: int):
+    """Build the worker's side of the parent link from its spec:
+    ``("queue", req_q, resp_q)`` or ``("tcp", host, port, token_hex)``."""
+    if link[0] == "queue":
+        _, req_q, resp_q = link
+        return QueuePeer(resp_q, req_q)  # worker sends replies, recvs reqs
+    _, host, port, token = link
+    return connect_peer((host, int(port)), shard, bytes.fromhex(token))
+
+
 def _shard_worker_main(shard: int, n_shards: int, vnodes: int, salt: bytes,
-                       db_dir: str, cache_bytes: int, warm_bytes,
-                       server_factory, slab_bytes: int, trace_ring: int,
-                       req_q, resp_q):
+                       replicas: int, db_dir: str, cache_bytes: int,
+                       warm_bytes, server_factory, slab_bytes: int,
+                       trace_ring: int, link):
     """Worker loop: own Database, own LRU, serve batches in locality order.
 
     Module-level (and all-args-picklable) so it runs under any
     multiprocessing start method.  The worker never creates shm segments —
-    oversize results fall back to the pickled response queue — so abrupt
+    oversize results fall back to the pickled reply path — so abrupt
     death cannot leak ``/dev/shm``.
+
+    ``link`` picks the parent transport: the same-host queue/shm pair,
+    or framed TCP (connect + hello handshake with bounded backoff; see
+    :mod:`repro.serve.transport`).  The loop itself is transport-blind.
 
     The worker runs its own flight recorder (sized by ``trace_ring`` —
     passed explicitly so spawn-start workers match the parent's config)
@@ -319,25 +417,54 @@ def _shard_worker_main(shard: int, n_shards: int, vnodes: int, salt: bytes,
     signal.signal(signal.SIGINT, signal.SIG_IGN)  # parent owns shutdown
     rec = configure(trace_ring)
     rec.default_shard = shard
-    ring = ConsistentHashRing(n_shards, vnodes=vnodes, salt=salt)
-    owned = ((lambda store, oid: ring.owns_plane(store, oid, shard))
+    try:
+        peer = _worker_peer(link, shard)
+    except PeerClosed:
+        return  # could not reach the parent: let the supervisor respawn
+    ring = ConsistentHashRing(n_shards, vnodes=vnodes, salt=salt,
+                              replicas=replicas)
+    owned = ((lambda store, oid: ring.warm_priority(store, oid, shard))
              if n_shards > 1 else None)
+    # scatter assignment masks are a function of (member, live-set) and
+    # the open epoch's context count — tiny dict, rebuilt per epoch
+    masks: dict[tuple, np.ndarray] = {}
+
+    def _mask(d, member: int, live: tuple):
+        key = (member, live)
+        m = masks.get(key)
+        if m is None:
+            m = ring.owned_context_mask(d.n_contexts, member, live or None)
+            masks[key] = m
+        return m
 
     def _open(path):
         d = Database(path, cache_bytes=cache_bytes)
         srv = (server_factory or QueryServer)(d)
-        octx = (ring.owned_context_mask(d.n_contexts, shard)
-                if n_shards > 1 else None)
+        masks.clear()
         report = None
         if warm_bytes is None or warm_bytes > 0:
             report = warm_cache(d, warm_bytes, owned=owned)
-        return d, srv, octx, report
+        return d, srv, report
 
-    db, server, owned_ctx, warm_report = _open(db_dir)
-    resp_q.put(("ready", {"shard": shard, "pid": os.getpid(),
-                          "warm": warm_report}))
+    db, server, warm_report = _open(db_dir)
+    peer.send(("ready", {"shard": shard, "pid": os.getpid(),
+                         "warm": warm_report}))
     while True:
-        msg = req_q.get()
+        try:
+            msg = peer.recv()
+        except PeerTimeout:
+            continue
+        except PeerClosed:
+            if link[0] != "tcp":
+                break
+            # transport loss, not shutdown: reconnect with bounded
+            # backoff and re-handshake; exhausting the budget exits the
+            # worker and hands recovery to the supervisor's respawn
+            try:
+                peer = _worker_peer(link, shard)
+            except PeerClosed:
+                break
+            continue
         if msg is None:
             break
         if isinstance(msg, tuple) and msg and msg[0] == "reopen":
@@ -349,11 +476,11 @@ def _shard_worker_main(shard: int, n_shards: int, vnodes: int, salt: bytes,
             # structural, not key-by-key.
             new_dir = msg[1]
             db.close()
-            db, server, owned_ctx, warm_report = _open(new_dir)
-            resp_q.put(("reopened", {"shard": shard, "pid": os.getpid(),
-                                     "dir": new_dir, "warm": warm_report}))
+            db, server, warm_report = _open(new_dir)
+            peer.send(("reopened", {"shard": shard, "pid": os.getpid(),
+                                    "dir": new_dir, "warm": warm_report}))
             continue
-        items = msg  # [(key, QueryRequest, slab_name | None, scatter), ...]
+        items = msg  # [(key, QueryRequest, slab | None, scatter), ...]
         # plane-less ops (group 2: top-k/threshold partials) first — they
         # are barrier legs of scatter-gather merges, so answering them
         # early keeps sibling shards' merges from waiting out this
@@ -366,11 +493,15 @@ def _shard_worker_main(shard: int, n_shards: int, vnodes: int, salt: bytes,
             key, req, slab_name, scatter = items[i]
             tid = getattr(req, "trace_id", None) or ""
             try:
-                if scatter and req.op in SCATTER_OPS and owned_ctx is not None:
-                    # scatter partials bypass serve_one (and its decode
-                    # span), so time them here
+                if scatter and req.op in SCATTER_OPS and n_shards > 1:
+                    # scatter partials carry (member, live-set): answer
+                    # for the member's slice of the live assignment (the
+                    # member is this shard unless the partial failed
+                    # over here).  They bypass serve_one (and its decode
+                    # span), so time them here.
+                    member, live = scatter
                     t0 = monotime()
-                    res = _serve_scatter(db, owned_ctx, req)
+                    res = _serve_scatter(db, _mask(db, member, live), req)
                     if rec.enabled:
                         rec.record("decode", str(req.op), t0, monotime() - t0,
                                    trace_id=tid)
@@ -388,18 +519,18 @@ def _shard_worker_main(shard: int, n_shards: int, vnodes: int, salt: bytes,
                     op=str(getattr(req, "op", "?")),
                     error=type(e).__name__, message=str(e)))
             replies.append((key, payload))
-            # chunked responses: the mp.Queue round trip amortizes over
+            # chunked responses: the transport round trip amortizes over
             # a chunk instead of being paid per request, while early
             # results still stream back before the batch finishes (a
             # whole-batch reply would stall closed-loop clients and
             # drain the pipeline).  Spans recorded since the last chunk
             # ride the same message.
             if len(replies) >= _REPLY_CHUNK:
-                resp_q.put(("res", replies, rec.drain_outbox()))
+                peer.send(("res", replies, rec.drain_outbox()))
                 replies = []
         tail = rec.drain_outbox()
         if replies or tail:
-            resp_q.put(("res", replies, tail))
+            peer.send(("res", replies, tail))
     db.close()
 
 
@@ -412,24 +543,30 @@ class _Pending:
     req: QueryRequest
     future: Future
     slab: str | None
-    scatter: bool
+    scatter: object  # False, or (member, live-set tuple) for partials
     replays: int = 0
+    t0: float = 0.0  # monotime() at (re-)dispatch, drives stall detection
 
 
 @dataclass
 class _Shard:
     index: int
-    arena: SlabArena
+    arena: SlabArena | None
     free_slabs: list[str]
+    chaos: ChaosState = field(default_factory=ChaosState)
+    health: PeerHealth = field(default_factory=PeerHealth)
     lock: threading.Lock = field(default_factory=threading.Lock)
     pending: dict[int, _Pending] = field(default_factory=dict)
     proc: mp.process.BaseProcess | None = None
-    req_q: object = None
-    resp_q: object = None
+    peer: object = None          # parent side of the worker link
+    backlog: list = field(default_factory=list)  # msgs awaiting a peer
+    slab_ok: bool = True
     ready: threading.Event = field(default_factory=threading.Event)
     reopen_ack: threading.Event = field(default_factory=threading.Event)
     warm: dict | None = None
     deaths: int = 0
+    last_reply_t: float = 0.0
+    last_miss_t: float = 0.0
 
 
 class ShardedQueryServer:
@@ -441,8 +578,32 @@ class ShardedQueryServer:
     present (``n_shards``, ``shard_of``, ``serve_window``).
 
     ``cache_bytes``/``warm_bytes`` are *per worker*: sharding scales cache
-    capacity with compute, and the router guarantees the budgets never
-    hold overlapping planes.
+    capacity with compute; with ``replicas`` > 1 each plane has R owners
+    (primary warmed hot, replicas warm), so a hot plane's decode load can
+    spread across its owner set and any single owner's death leaves live
+    replicas to fail over to.
+
+    Replication/failover knobs:
+
+    * ``replicas`` — R-way successor-distinct ownership (default 2;
+      capped at ``n_shards``).
+    * ``transport`` — ``"shm"`` (mp.Queue control + shm slab payloads,
+      same host) or ``"tcp"`` (length-prefixed frames, workers connect
+      back with a per-spawn token; payloads ride inline).
+    * ``hedge_ms`` — when set, single-owner reads fire a *hedge* to the
+      next live replica after ``max(hedge_ms, observed p99)`` and the
+      first reply wins (replicas serve byte-identical answers within an
+      epoch).  ``None`` disables hedging.
+    * ``spill_pending`` — backlog quantum for replica read-scaling: the
+      router prefers the primary until its pending depth exceeds a live
+      replica's by a full quantum, then spills (0 pins reads to the
+      primary unless it is unhealthy).
+    * ``suspect_after_s`` / ``hang_kill_s`` — stall thresholds driving
+      the per-owner health machine: a shard with dispatched-but-
+      unanswered work older than ``suspect_after_s`` takes health
+      *misses* (alive -> suspect -> dead for routing); older than
+      ``hang_kill_s`` it is presumed hung and SIGKILLed so the
+      respawn/replay/failover path recovers its in-flight work.
     """
 
     def __init__(self, db_dir: str, n_shards: int, *,
@@ -451,7 +612,10 @@ class ShardedQueryServer:
                  vnodes: int = 96, server_factory=None,
                  replay_limit: int = 3, dispatch_timeout_s: float = 60.0,
                  start_timeout_s: float = 120.0, mp_context: str | None = None,
-                 trace_ring: int | None = None):
+                 trace_ring: int | None = None, replicas: int = 2,
+                 transport: str = "shm", hedge_ms: float | None = None,
+                 spill_pending: int = 4, suspect_after_s: float = 1.0,
+                 hang_kill_s: float = 30.0):
         if db_dir is None:
             raise ValueError("sharded serving needs a database directory "
                              "(explicit pms_path handles cannot be re-opened "
@@ -462,7 +626,18 @@ class ShardedQueryServer:
         self.warm_bytes = warm_bytes
         self.n_slabs = max(1, int(n_slabs))
         self.slab_bytes = max(1 << 12, int(slab_bytes))
-        self.ring = ConsistentHashRing(self.n_shards, vnodes=vnodes)
+        self.ring = ConsistentHashRing(self.n_shards, vnodes=vnodes,
+                                       replicas=replicas)
+        self.replicas = self.ring.replicas
+        if transport not in ("shm", "tcp"):
+            raise ValueError(f"unknown transport {transport!r} "
+                             f"(expected 'shm' or 'tcp')")
+        self.transport = transport
+        self.hedge_ms = None if hedge_ms is None else max(0.0,
+                                                          float(hedge_ms))
+        self.spill_pending = max(0, int(spill_pending))
+        self.suspect_after_s = max(0.05, float(suspect_after_s))
+        self.hang_kill_s = max(0.0, float(hang_kill_s))
         self.server_factory = server_factory
         self.replay_limit = int(replay_limit)
         self.dispatch_timeout_s = float(dispatch_timeout_s)
@@ -495,19 +670,30 @@ class ShardedQueryServer:
 
         self._shards: list[_Shard] = []
         self._pumps: list[threading.Thread] = []
+        self._listener: TcpListener | None = None
         self._seq = itertools.count()
         self._started = False
         self._closed = False
         self._stats_lock = threading.Lock()
+        # recent dispatch->reply latencies (seconds) feeding the
+        # p99-derived hedge delay; GIL-atomic appends, no lock needed
+        self._lat: "deque[float]" = deque(maxlen=512)
         self.obs = MetricsRegistry()
         self._stats = self.obs.group(
             "shard", {"dispatched": 0, "completed": 0, "respawns": 0,
                       "worker_lost": 0, "replayed": 0, "scatter_queries": 0,
                       "deduped": 0, "slab_payloads": 0,
                       "inline_payloads": 0, "reopens": 0,
-                      "reopen_last_s": 0.0},
+                      "reopen_last_s": 0.0, "failovers": 0, "hedges": 0,
+                      "hedge_wins": 0, "health_misses": 0, "hung_kills": 0},
             gauges=("reopen_last_s",))
         self._rw = _RWLock()  # windows are readers, reopen() the writer
+        # epoch generation guards late hedges: a hedge armed before a
+        # reopen must not dispatch after it (its primary answered — or
+        # will replay — on the old epoch)
+        self._epoch_gen = 0
+        self._reopening = False
+        self._reopen_dir: str | None = None
 
     # make the scheduler's locality sort work unchanged
     _locality_key = staticmethod(QueryServer._locality_key)
@@ -518,10 +704,18 @@ class ShardedQueryServer:
             return self
         self._started = True
         try:
+            if self.transport == "tcp":
+                self._listener = TcpListener(self._on_peer)
             for s in range(self.n_shards):
-                arena = SlabArena(self.n_slabs, self.slab_bytes)
-                shard = _Shard(index=s, arena=arena,
-                               free_slabs=list(arena._free))
+                if self.transport == "tcp":
+                    # no shm slabs across TCP: payloads ride inline in
+                    # the frame, so no arena is allocated at all
+                    arena, free, slab_ok = None, [], False
+                else:
+                    arena = SlabArena(self.n_slabs, self.slab_bytes)
+                    free, slab_ok = list(arena._free), True
+                shard = _Shard(index=s, arena=arena, free_slabs=free,
+                               slab_ok=slab_ok)
                 self._shards.append(shard)
                 self._spawn_locked(shard)
             for shard in self._shards:
@@ -548,17 +742,49 @@ class ShardedQueryServer:
 
     def _spawn_locked(self, shard: _Shard) -> None:
         """(Re)create one worker; caller holds ``shard.lock`` on respawn."""
-        shard.req_q = self._ctx.Queue()
-        shard.resp_q = self._ctx.Queue()
+        if self.transport == "tcp":
+            # per-spawn token: the worker (and only it) can present it,
+            # and a stale pre-respawn connection can never be re-adopted
+            token = os.urandom(16)
+            self._listener.expect(shard.index, token, shard.chaos)
+            shard.peer = None  # installed by the accept loop on hello
+            host, port = self._listener.address
+            link = ("tcp", host, port, token.hex())
+        else:
+            req_q, resp_q = self._ctx.Queue(), self._ctx.Queue()
+            shard.peer = QueuePeer(req_q, resp_q, chaos=shard.chaos)
+            link = ("queue", req_q, resp_q)
         shard.ready = threading.Event()
         shard.proc = self._ctx.Process(
             target=_shard_worker_main,
             args=(shard.index, self.n_shards, self.ring.vnodes,
-                  self.ring.salt, self.db_dir, self.cache_bytes,
-                  self.warm_bytes, self.server_factory, self.slab_bytes,
-                  self.trace_ring, shard.req_q, shard.resp_q),
+                  self.ring.salt, self.replicas, self.db_dir,
+                  self.cache_bytes, self.warm_bytes, self.server_factory,
+                  self.slab_bytes, self.trace_ring, link),
             daemon=True, name=f"repro-shard-{shard.index}")
         shard.proc.start()
+
+    def _on_peer(self, shard_idx: int, peer) -> None:
+        """TCP accept path: install (or replace, on worker reconnect) a
+        shard's authenticated peer and flush anything queued while the
+        link was down."""
+        if not (0 <= shard_idx < len(self._shards)):
+            peer.close()
+            return
+        shard = self._shards[shard_idx]
+        with shard.lock:
+            old, shard.peer = shard.peer, peer
+            backlog, shard.backlog = shard.backlog, []
+            for n, msg in enumerate(backlog):
+                try:
+                    peer.send(msg)
+                except PeerClosed:
+                    # link died again already: keep the unsent tail for
+                    # the next reconnect
+                    shard.backlog = backlog[n:] + shard.backlog
+                    break
+        if old is not None:
+            old.close()
 
     def close(self) -> None:
         if self._closed:
@@ -566,10 +792,10 @@ class ShardedQueryServer:
         self._closed = True
         for shard in self._shards:
             with shard.lock:
-                if shard.req_q is not None:
+                if shard.peer is not None:
                     try:
-                        shard.req_q.put(None)
-                    except Exception:
+                        shard.peer.send(None)
+                    except PeerClosed:
                         pass
         for pump in self._pumps:
             pump.join(timeout=10.0)
@@ -586,14 +812,12 @@ class ShardedQueryServer:
                 if shard.proc.is_alive():
                     shard.proc.kill()
                     shard.proc.join(timeout=2.0)
-            for q in (shard.req_q, shard.resp_q):
-                if q is not None:
-                    try:
-                        q.close()
-                        q.cancel_join_thread()
-                    except Exception:
-                        pass
-            shard.arena.close()
+            if shard.peer is not None:
+                shard.peer.close()
+            if shard.arena is not None:
+                shard.arena.close()
+        if self._listener is not None:
+            self._listener.close()
         for p in leftovers:
             if not p.future.done():
                 try:
@@ -623,7 +847,13 @@ class ShardedQueryServer:
         A worker that dies mid-switch is respawned by the supervisor on
         the previous directory (replays land on the old epoch — the
         documented recovery limit) and the reopen message is re-sent, so
-        the switch still converges.
+        the switch still converges.  While the switch is in flight the
+        supervisor also suppresses cross-replica failover (death
+        recovery replays to the same ring position instead): a partial
+        failed over to a shard that already acked would be answered
+        from the *new* epoch while its sibling partials came from the
+        old one.  The epoch generation bump at the end retires any
+        armed-but-unfired hedges for the same reason.
         """
         if not self._started:
             raise RuntimeError("sharded query server is not started")
@@ -633,11 +863,13 @@ class ShardedQueryServer:
         new_dir = str(db_dir)
         t0 = monotime()
         self._rw.acquire_write()
+        self._reopen_dir = new_dir
+        self._reopening = True
         try:
             for shard in self._shards:
                 with shard.lock:
                     shard.reopen_ack = threading.Event()
-                    shard.req_q.put(("reopen", new_dir))
+                    self._send_locked(shard, ("reopen", new_dir))
             deadline = monotime() + self.start_timeout_s
             for shard in self._shards:
                 seen = shard.deaths
@@ -650,7 +882,7 @@ class ShardedQueryServer:
                             # the worker died mid-switch; its replacement
                             # came up on the old directory — re-send
                             seen = shard.deaths
-                            shard.req_q.put(("reopen", new_dir))
+                            self._send_locked(shard, ("reopen", new_dir))
                     if monotime() > deadline:
                         raise RuntimeError(
                             f"shard {shard.index} did not ack reopen "
@@ -658,55 +890,215 @@ class ShardedQueryServer:
             # respawns-after-death from here on land on the new epoch
             self.db_dir = new_dir
             self._has_cms = os.path.exists(os.path.join(new_dir, CMS_NAME))
+            self._epoch_gen += 1
             dt = monotime() - t0
             with self._stats_lock:
                 self._stats["reopens"] += 1
                 self._stats["reopen_last_s"] = dt
             return {"dir": new_dir, "seconds": dt}
         finally:
+            self._reopening = False
+            self._reopen_dir = None
             self._rw.release_write()
 
+    @staticmethod
+    def _send_locked(shard: _Shard, msg) -> None:
+        """Send on a shard's peer (caller holds ``shard.lock``); with the
+        link down (TCP reconnect window) the message queues in the
+        backlog and flushes, in order, when the peer is re-installed."""
+        if shard.peer is None:
+            shard.backlog.append(msg)
+            return
+        try:
+            shard.peer.send(msg)
+        except PeerClosed:
+            shard.backlog.append(msg)
+
     # -- routing -------------------------------------------------------------
+    def _owners_of(self, req: QueryRequest) -> tuple[int, ...]:
+        """R-way owner set for a request, primary first."""
+        if getattr(req, "op", None) == "value" and not self._has_cms:
+            # PMS-only database: the plane a value lookup touches is the
+            # profile plane, so route to its owners
+            try:
+                return self.ring.owners_key((0, int(req.pid or 0)))
+            except (TypeError, ValueError):
+                pass
+        return self.ring.owners(req)
+
+    def _pick_owner(self, owners: tuple[int, ...]) -> int:
+        """Route among an owner set: healthiest state first, then least
+        backlog (quantized by ``spill_pending`` so small depth noise
+        never breaks cache locality), then replica rank.  A fully-dead
+        owner set degenerates to the primary — its pendings replay
+        through the supervisor anyway."""
+        best, best_key = owners[0], None
+        for rank, o in enumerate(owners):
+            health = self._shards[o].health.rank()
+            if health >= 3:  # dead: never route
+                continue
+            bucket = (len(self._shards[o].pending) // self.spill_pending
+                      if self.spill_pending else 0)
+            key = (health, bucket, rank)
+            if best_key is None or key < best_key:
+                best, best_key = o, key
+        return best
+
     def shard_of(self, req: QueryRequest) -> int | None:
-        """Owning shard for a request; ``None`` means scatter to all."""
+        """Target shard for a request; ``None`` means scatter."""
         op = getattr(req, "op", None)
         if self.n_shards > 1 and op in SCATTER_OPS:
             return None
-        if op == "value" and not self._has_cms:
-            # PMS-only database: the plane a value lookup touches is the
-            # profile plane, so route to its owner
-            try:
-                return self.ring.route_key((0, int(req.pid or 0)))
-            except (TypeError, ValueError):
-                pass
-        return self.ring.route(req)
+        owners = self._owners_of(req)
+        if len(owners) == 1 or not self._shards:
+            return owners[0]
+        return self._pick_owner(owners)
+
+    def _live_set(self) -> tuple[int, ...]:
+        """Shards a scatter query fans out over (every non-dead shard;
+        the assignment mask partitions contexts across exactly this
+        set).  All-dead degenerates to everyone — the supervisor is
+        about to respawn them regardless."""
+        live = tuple(s.index for s in self._shards
+                     if s.health.rank() < 3)
+        return live or tuple(range(self.n_shards))
 
     def worker_pids(self) -> list[int]:
         return [s.proc.pid for s in self._shards if s.proc is not None]
 
+    # -- chaos hooks (tests + benchmarks/serve_load.py --chaos) ---------------
+    def kill_worker(self, shard_idx: int) -> int | None:
+        """SIGKILL one shard's worker process (fault injection)."""
+        shard = self._shards[shard_idx]
+        proc = shard.proc
+        if proc is None or proc.pid is None:
+            return None
+        try:
+            os.kill(proc.pid, signal_mod.SIGKILL)
+        except (OSError, ProcessLookupError):
+            return None
+        return proc.pid
+
+    def inject_fault(self, shard_idx: int, kind: str, seconds: float, *,
+                     delay_s: float = 0.02) -> None:
+        """Arm a transport fault window on one peer: ``drop`` (requests
+        vanish), ``delay`` (each send sleeps ``delay_s``), or ``stall``
+        (replies stop being delivered — a hung peer)."""
+        chaos = self._shards[shard_idx].chaos
+        if kind == "drop":
+            chaos.drop_for(seconds)
+        elif kind == "delay":
+            chaos.delay(delay_s, for_s=seconds)
+        elif kind == "stall":
+            chaos.stall_for(seconds)
+        else:
+            raise ValueError(f"unknown fault kind {kind!r}")
+
     # -- dispatch ------------------------------------------------------------
     def _dispatch(self, shard_idx: int,
-                  reqs: list[tuple[QueryRequest, bool]]) -> list[Future]:
+                  reqs: list[tuple[QueryRequest, object]]) -> list[Future]:
         """Send ``[(request, scatter), ...]`` to one worker as a single
         batch message; returns one Future per entry."""
         shard = self._shards[shard_idx]
         items, futs = [], []
+        now = monotime()
         with shard.lock:
             if self._closed:
                 raise RuntimeError("sharded query server is closed")
             for req, scatter in reqs:
                 key = next(self._seq)
                 slab = (shard.free_slabs.pop()
-                        if shard.free_slabs and _slab_eligible(req, scatter)
+                        if shard.free_slabs and shard.slab_ok
+                        and _slab_eligible(req, scatter)
                         else None)
-                p = _Pending(req, Future(), slab, scatter)
+                p = _Pending(req, Future(), slab, scatter, t0=now)
                 shard.pending[key] = p
                 items.append((key, req, slab, scatter))
                 futs.append(p.future)
-            shard.req_q.put(items)
+            self._send_locked(shard, items)
         with self._stats_lock:
             self._stats["dispatched"] += len(items)
         return futs
+
+    # -- hedged reads ---------------------------------------------------------
+    def _hedge_delay_s(self) -> float:
+        """p99 of recent dispatch latencies, floored at ``hedge_ms``: a
+        hedge should fire only when the primary is off its own tail."""
+        base = (self.hedge_ms or 0.0) / 1e3
+        lat = sorted(self._lat)
+        if lat:
+            base = max(base, lat[int(0.99 * (len(lat) - 1))])
+        return max(base, 1e-3)
+
+    def _maybe_hedge(self, req: QueryRequest, primary: int,
+                     fut: Future) -> Future:
+        """Wrap a single-owner dispatch with an optional hedge: if the
+        primary has not answered after a p99-derived delay, the same
+        request is dispatched to the next live replica and the first
+        reply wins (within an epoch every replica serves byte-identical
+        answers, so the winner's identity is unobservable).  The loser's
+        reply is still drained normally — it just finds the output
+        future already resolved."""
+        if self.hedge_ms is None or self.replicas < 2:
+            return fut
+        owners = self._owners_of(req)
+        alts = [o for o in owners
+                if o != primary and self._shards[o].health.rank() < 2]
+        if not alts:
+            return fut
+        alt = alts[0]
+        out: Future = Future()
+
+        def relay(f: Future, hedged: bool) -> None:
+            if out.done():
+                return
+            exc = f.exception()
+            try:
+                if exc is not None:
+                    out.set_exception(exc)
+                else:
+                    out.set_result(f.result())
+            except Exception:
+                return  # lost the race to the other leg
+            if hedged:
+                with self._stats_lock:
+                    self._stats["hedge_wins"] += 1
+
+        fut.add_done_callback(lambda f: relay(f, False))
+        gen = self._epoch_gen
+
+        def fire() -> None:
+            if out.done() or self._closed:
+                return
+            # take the window lock as a reader: if a reopen is waiting
+            # or running, this blocks until it finishes and the epoch
+            # generation check below retires the hedge (the primary
+            # answers — or replays — entirely on the old epoch)
+            self._rw.acquire_read()
+            try:
+                if self._epoch_gen != gen or out.done():
+                    return
+                try:
+                    [hfut] = self._dispatch(alt, [(req, False)])
+                except RuntimeError:
+                    return
+                with self._stats_lock:
+                    self._stats["hedges"] += 1
+                rec = recorder()
+                if rec.enabled:
+                    rec.record("hedge", str(getattr(req, "op", "?")),
+                               monotime(), 0.0,
+                               trace_id=getattr(req, "trace_id", None) or "",
+                               attrs={"primary": primary, "hedge": alt})
+                hfut.add_done_callback(lambda f: relay(f, True))
+            finally:
+                self._rw.release_read()
+
+        timer = threading.Timer(self._hedge_delay_s(), fire)
+        timer.daemon = True
+        timer.start()
+        out.add_done_callback(lambda _f: timer.cancel())
+        return out
 
     def _await(self, fut: Future, req: QueryRequest):
         try:
@@ -806,17 +1198,23 @@ class ShardedQueryServer:
             if k is not None:
                 alias[i] = reps.setdefault(k, i)
         n_unique = len(set(alias))
-        per_shard: list[list[tuple[int, QueryRequest, bool]]] = \
+        per_shard: list[list[tuple[int, QueryRequest, object]]] = \
             [[] for _ in range(self.n_shards)]
         n_scatter = 0
+        live = None
         for i, req in enumerate(reqs):
             if alias[i] != i:
                 continue  # a duplicate slot shares its representative
             s = self.shard_of(req)
             if s is None:
+                # scatter over the current live set: each member answers
+                # its own slice of the (member, live) assignment, which
+                # partitions contexts across exactly the live shards
+                if live is None:
+                    live = self._live_set()
                 n_scatter += 1
-                for t in range(self.n_shards):
-                    per_shard[t].append((i, req, True))
+                for t in live:
+                    per_shard[t].append((i, req, (t, live)))
             else:
                 per_shard[s].append((i, req, False))
         with self._stats_lock:
@@ -833,7 +1231,7 @@ class ShardedQueryServer:
                 if scatter:
                     scatter_parts.setdefault(i, []).append(fut)
                 else:
-                    futs[i] = fut
+                    futs[i] = self._maybe_hedge(req, s, fut)
         for i, parts in scatter_parts.items():
             futs[i] = self._merged_future(reqs[i], parts)
         for i, j in enumerate(alias):
@@ -865,24 +1263,73 @@ class ShardedQueryServer:
     def _pump_loop(self, shard_idx: int) -> None:
         shard = self._shards[shard_idx]
         while not self._closed:
-            resp_q, proc = shard.resp_q, shard.proc
-            try:
-                msg = resp_q.get(timeout=0.1)
-            except queue_mod.Empty:
+            peer, proc = shard.peer, shard.proc
+            if peer is None:
+                # TCP worker (re)connecting; the accept loop installs
+                # the peer when the hello lands
+                time.sleep(0.02)
                 if proc is not None and not proc.is_alive() \
                         and not self._closed:
                     self._handle_death(shard)
                 continue
-            except (EOFError, OSError):
-                if not self._closed:
+            try:
+                msg = peer.recv(timeout=0.1)
+            except PeerTimeout:
+                if self._closed:
+                    continue
+                if proc is not None and not proc.is_alive():
                     self._handle_death(shard)
+                else:
+                    self._check_stall(shard)
+                continue
+            except PeerClosed:
+                if self._closed:
+                    continue
+                if proc is not None and not proc.is_alive():
+                    self._handle_death(shard)
+                else:
+                    # link lost but the worker lives: a TCP reconnect is
+                    # in flight (the accept loop will replace the peer)
+                    time.sleep(0.02)
                 continue
             self._handle_msg(shard, msg)
+
+    def _check_stall(self, shard: _Shard) -> None:
+        """Idle-tick health: dispatched work with no reply for
+        ``suspect_after_s`` accumulates misses (alive -> suspect ->
+        dead for routing); past ``hang_kill_s`` the worker is presumed
+        hung (stalled transport, wedged syscall) and killed so the
+        death path can replay/fail over its in-flight requests."""
+        now = monotime()
+        with shard.lock:
+            if not shard.pending:
+                return
+            oldest = min(p.t0 for p in shard.pending.values())
+        stalled_since = max(oldest, shard.last_reply_t)
+        age = now - stalled_since
+        if age < self.suspect_after_s:
+            return
+        if now - shard.last_miss_t >= self.suspect_after_s:
+            shard.last_miss_t = now
+            shard.health.miss()
+            with self._stats_lock:
+                self._stats["health_misses"] += 1
+        if self.hang_kill_s and age >= self.hang_kill_s:
+            proc = shard.proc
+            if proc is not None and proc.is_alive() and proc.pid:
+                with self._stats_lock:
+                    self._stats["hung_kills"] += 1
+                try:
+                    os.kill(proc.pid, signal_mod.SIGKILL)
+                except (OSError, ProcessLookupError):
+                    pass
 
     def _handle_msg_locked(self, shard: _Shard, msg
                            ) -> list[tuple[Future, object]]:
         """Decode one worker message; caller holds ``shard.lock`` and
         resolves the returned futures *after* releasing it."""
+        shard.last_reply_t = monotime()
+        shard.health.ok()
         if msg[0] == "ready":
             shard.warm = msg[1]
             shard.ready.set()
@@ -896,6 +1343,7 @@ class ShardedQueryServer:
             recorder().extend(msg[2])
         resolved: list[tuple[Future, object]] = []
         slab_n = inline_n = 0
+        now = monotime()
         for key, payload in msg[1]:
             p = shard.pending.pop(key, None)
             if p is None:
@@ -914,6 +1362,7 @@ class ShardedQueryServer:
                 slab_n += 1
             else:
                 inline_n += 1
+            self._lat.append(now - p.t0)
             resolved.append((p.future, res))
         with self._stats_lock:
             self._stats["completed"] += len(resolved)
@@ -928,69 +1377,162 @@ class ShardedQueryServer:
             if not fut.done():
                 fut.set_result(res)
 
-    def _handle_death(self, shard: _Shard) -> None:
-        """The supervisor path: drain, back off, respawn, replay.
+    def _failover_target(self, dead_idx: int, p: _Pending) -> int | None:
+        """Where a dead shard's in-flight request should go *now*:
+        the healthiest other owner (any shard can answer — every worker
+        holds the full database — but owners have the plane warm), or
+        any live shard as a last resort; ``None`` keeps it on the
+        respawning ring position."""
+        if p.scatter:
+            # any live shard can compute the original member's slice of
+            # the (member, live) assignment — the mask is a pure function
+            # of the ring, so the merge stays byte-identical
+            cands = [s.index for s in self._shards
+                     if s.index != dead_idx and s.health.rank() < 2]
+        else:
+            owners = self._owners_of(p.req)
+            cands = [o for o in owners if o != dead_idx
+                     and self._shards[o].health.rank() < 2]
+            if not cands:
+                cands = [s.index for s in self._shards
+                         if s.index != dead_idx and s.health.rank() < 3]
+        if not cands:
+            return None
+        return min(cands, key=lambda s: (self._shards[s].health.rank(),
+                                         len(self._shards[s].pending)))
 
-        The dead worker's queues stay open until the replacement is
-        installed (both swaps happen under ``shard.lock``), so a
-        concurrent :meth:`_dispatch` never touches a closed queue — at
-        worst its message lands in the orphaned queue and its pending
-        entries are picked up by the replay snapshot below.
+    def _redispatch(self, target_idx: int, pendings: list[_Pending]) -> None:
+        """Failover: move in-flight pendings (same futures) onto a live
+        shard's queue."""
+        shard = self._shards[target_idx]
+        rec = recorder()
+        now = monotime()
+        with shard.lock:
+            if self._closed:
+                return
+            items = []
+            for p in pendings:
+                key = next(self._seq)
+                p.slab = (shard.free_slabs.pop()
+                          if shard.free_slabs and shard.slab_ok
+                          and _slab_eligible(p.req, p.scatter) else None)
+                p.t0 = now
+                shard.pending[key] = p
+                items.append((key, p.req, p.slab, p.scatter))
+                if rec.enabled:
+                    # zero-duration marker: this request crossed a worker
+                    # death and failed over to a live replica
+                    rec.record("failover", str(getattr(p.req, "op", "?")),
+                               now, 0.0,
+                               trace_id=getattr(p.req, "trace_id", None)
+                               or "",
+                               attrs={"to": target_idx,
+                                      "replays": p.replays})
+            self._send_locked(shard, items)
+        with self._stats_lock:
+            # a failover is still a replay (re-sent after loss) — the
+            # failovers counter tracks the cross-replica subset
+            self._stats["failovers"] += len(pendings)
+            self._stats["replayed"] += len(pendings)
+
+    def _handle_death(self, shard: _Shard) -> None:
+        """The supervisor path: drain, fail over, back off, respawn,
+        replay.
+
+        The dead worker's link stays installed until the replacement is
+        (both swaps happen under ``shard.lock``), so a concurrent
+        :meth:`_dispatch` never touches a closed transport — at worst
+        its message lands in the orphaned link and its pending entries
+        are picked up by the recovery snapshot below.
+
+        With replicas, in-flight requests that have another live owner
+        are **failed over immediately** — re-dispatched to that owner
+        before the respawn backoff, so a killed worker costs one
+        failover hop, not a respawn wait.  During an epoch switch
+        failover is suppressed (replays stay on this ring position) so
+        sibling scatter partials can never straddle epochs.
         """
         resolved: list[tuple[Future, object]] = []
         with shard.lock:
             if self._closed or shard.proc is None or shard.proc.is_alive():
                 return
             # responses the worker got out before dying still count
-            while True:
+            peer = shard.peer
+            while peer is not None:
                 try:
-                    msg = shard.resp_q.get_nowait()
-                except (queue_mod.Empty, EOFError, OSError):
+                    msg = peer.recv(timeout=0.0, bypass_chaos=True)
+                except PeerError:
                     break
                 resolved.extend(self._handle_msg_locked(shard, msg))
             shard.proc.join(timeout=1.0)
             shard.deaths += 1
             deaths = shard.deaths
-        for fut, res in resolved:
-            if not fut.done():
-                fut.set_result(res)
-        # freeze the recent span history: the last moments before this
-        # death are exactly what a postmortem needs
-        recorder().dump(f"worker_death shard={shard.index} deaths={deaths}")
-        # exponential backoff so a worker that dies deterministically at
-        # startup (corrupt database, OOM loop) cannot pin a CPU with a
-        # fork-per-100ms respawn storm; requests arriving meanwhile queue
-        # against the admission bound and are replayed below
-        time.sleep(min(0.05 * (2 ** min(deaths - 1, 6)), 2.0))
-        doomed: list[_Pending] = []
-        with shard.lock:
-            if self._closed:
-                return
-            old_qs = (shard.req_q, shard.resp_q)
+            shard.health.dead()
+            # snapshot survivors now: failover must not wait out the
+            # respawn backoff below
             survivors = sorted(shard.pending.items())  # dispatch order
             shard.pending.clear()
             replay: list[_Pending] = []
+            doomed: list[_Pending] = []
             for _, p in survivors:
                 if p.slab is not None:  # slab content is garbage now
                     shard.free_slabs.append(p.slab)
                     p.slab = None
                 p.replays += 1
                 (doomed if p.replays > self.replay_limit else replay).append(p)
+        for fut, res in resolved:
+            if not fut.done():
+                fut.set_result(res)
+        # freeze the recent span history: the last moments before this
+        # death are exactly what a postmortem needs
+        recorder().dump(f"worker_death shard={shard.index} deaths={deaths}")
+        # cross-replica failover first (never during an epoch switch:
+        # the target may already serve the new epoch)
+        requeue: list[_Pending] = []
+        by_target: dict[int, list[_Pending]] = {}
+        if self._reopening or self.n_shards == 1:
+            requeue = replay
+        else:
+            for p in replay:
+                t = self._failover_target(shard.index, p)
+                if t is None:
+                    requeue.append(p)
+                else:
+                    by_target.setdefault(t, []).append(p)
+            for t, ps in by_target.items():
+                self._redispatch(t, ps)
+        # exponential backoff so a worker that dies deterministically at
+        # startup (corrupt database, OOM loop) cannot pin a CPU with a
+        # fork-per-100ms respawn storm; requests arriving meanwhile queue
+        # against the admission bound and are replayed below
+        time.sleep(min(0.05 * (2 ** min(deaths - 1, 6)), 2.0))
+        with shard.lock:
+            if self._closed:
+                return
+            old_peer = shard.peer
+            # dispatches that raced the failover snapshot above landed
+            # in the dead worker's orphaned link: move them onto the
+            # replacement with the same-position replays (they never
+            # reached a worker, so their replay budget is untouched)
+            for _, p in sorted(shard.pending.items()):
+                if p.slab is not None:
+                    shard.free_slabs.append(p.slab)
+                    p.slab = None
+                requeue.append(p)
+            shard.pending.clear()
             self._spawn_locked(shard)
-            for q in old_qs:
-                try:
-                    q.close()
-                    q.cancel_join_thread()
-                except Exception:
-                    pass
+            shard.health.rejoining()
+            if old_peer is not None and old_peer is not shard.peer:
+                old_peer.close()
             items = []
             rec = recorder()
             now = monotime()
-            for p in replay:
+            for p in requeue:
                 key = next(self._seq)
                 p.slab = (shard.free_slabs.pop()
-                          if shard.free_slabs
+                          if shard.free_slabs and shard.slab_ok
                           and _slab_eligible(p.req, p.scatter) else None)
+                p.t0 = now
                 shard.pending[key] = p
                 items.append((key, p.req, p.slab, p.scatter))
                 if rec.enabled:
@@ -1004,10 +1546,20 @@ class ShardedQueryServer:
                                attrs={"shard": shard.index,
                                       "replays": p.replays})
             if items:
-                shard.req_q.put(items)
+                self._send_locked(shard, items)
+            if self._reopening and self._reopen_dir is not None:
+                # an epoch switch is in flight and the dead worker may
+                # have swallowed — or already acked — its reopen message;
+                # the replacement just came up on the pre-switch
+                # directory, so re-send here or the switch wedges (the
+                # ack loop's deaths check misses deaths that land before
+                # it snapshots, and a send into the orphaned link is
+                # silently lost).  Replays were queued first, so they
+                # answer from the old epoch — the documented limit.
+                self._send_locked(shard, ("reopen", self._reopen_dir))
         with self._stats_lock:
             self._stats["respawns"] += 1
-            self._stats["replayed"] += len(replay)
+            self._stats["replayed"] += len(requeue)
             self._stats["worker_lost"] += len(doomed)
         for p in doomed:
             if not p.future.done():
@@ -1025,17 +1577,25 @@ class ShardedQueryServer:
         with self._stats_lock:
             out = dict(self._stats)
         out["n_shards"] = self.n_shards
+        out["replicas"] = self.replicas
+        out["transport"] = self.transport
+        out["hedge_ms"] = self.hedge_ms
         out["slab_bytes"] = self.slab_bytes
         per = []
         for s in self._shards:
             with s.lock:
-                per.append({"shard": s.index,
-                            "pid": s.proc.pid if s.proc is not None else None,
-                            "alive": bool(s.proc is not None
-                                          and s.proc.is_alive()),
-                            "pending": len(s.pending),
-                            "deaths": s.deaths,
-                            "free_slabs": len(s.free_slabs),
-                            "warm": s.warm})
+                entry = {"shard": s.index,
+                         "pid": s.proc.pid if s.proc is not None else None,
+                         "alive": bool(s.proc is not None
+                                       and s.proc.is_alive()),
+                         "pending": len(s.pending),
+                         "deaths": s.deaths,
+                         "free_slabs": len(s.free_slabs),
+                         "health": s.health.snapshot(),
+                         "warm": s.warm}
+                chaos = s.chaos.active()
+                if any(chaos[k] for k in ("drop", "delay_s", "stall")):
+                    entry["chaos"] = chaos
+                per.append(entry)
         out["shards"] = per
         return out

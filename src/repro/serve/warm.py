@@ -25,7 +25,13 @@ only plane I/O is the warming itself.
 
 ``owned`` restricts the plan to planes a predicate claims — how a shard
 worker of :class:`repro.serve.shard.ShardedQueryServer` warms only the
-planes the consistent-hash router will ever send it.
+planes the consistent-hash router will ever send it.  The predicate may
+return a *weight* instead of a bool: replica-owned planes report a
+fractional weight (``ConsistentHashRing.warm_priority``), scaling their
+heat density down so primary-owned planes warm **hot** (first, as
+before) and replica-owned planes warm behind every primary plane of
+equal density — the replica tier fills whatever budget the primary tier
+leaves.
 """
 from __future__ import annotations
 
@@ -49,7 +55,9 @@ def plan_warm(db: Database, byte_budget: int,
     summary stats + store/trace indexes only — zero plane reads.
     ``est_bytes`` is the on-disk plane size, a stand-in for the decoded
     footprint.  ``owned(store, id)`` (optional) drops planes another shard
-    is responsible for.
+    is responsible for; a falsy return drops the plane, and a fractional
+    weight (replica ownership) scales its density so it ranks behind
+    primary-owned planes of equal heat.
     """
     stat = "count" if "count" in db.stats else "sum"
     ctx_heat = np.zeros(db.n_contexts, dtype=np.float64)
@@ -87,12 +95,19 @@ def plan_warm(db: Database, byte_budget: int,
                 candidates.append((trc_density, 2, "trc", pid,
                                    segment_nbytes(n_samples)))
 
+    if owned is not None:
+        weighted = []
+        for dens, rank, store, oid, sz in candidates:
+            w = owned(store, oid)
+            if not w:
+                continue
+            weighted.append((dens * float(w), rank, store, oid, sz))
+        candidates = weighted
+
     # hottest-per-byte first; (store, id) tiebreak keeps plans deterministic
     candidates.sort(key=lambda t: (-t[0], t[1], t[3]))
     plan, budget = [], int(byte_budget)
     for _, _, store, oid, sz in candidates:
-        if owned is not None and not owned(store, oid):
-            continue
         if sz > budget:
             continue
         plan.append((store, oid, sz))

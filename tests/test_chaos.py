@@ -1,0 +1,245 @@
+"""Chaos suite (``-m chaos``): timed fault schedules against a live
+replicated server under sustained load.
+
+The contract being proven: with R=2 ownership, every fault in the
+schedule — single worker SIGKILL, whole-group SIGKILL, transport drops,
+hung-peer stalls — costs *latency only*.  Zero client requests fail and
+every answer stays byte-identical to an unfaulted run of the same
+request stream.
+
+Excluded from tier-1 via ``addopts = "-m 'not chaos'"`` (pyproject);
+CI's chaos-smoke job opts in with ``-m chaos --timeout=300``.
+"""
+import json
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.aggregate import AggregationConfig, StreamingAggregator
+from repro.query import Database
+from repro.serve.chaos import ChaosEvent, ChaosSchedule, default_schedule
+from repro.serve.engine import QueryError, QueryRequest, QueryServer
+from repro.serve.shard import ShardedQueryServer
+from repro.serve.wire import result_to_wire
+from tests.conftest import make_profile
+
+pytestmark = pytest.mark.chaos
+
+N_PROFILES = 6
+
+
+@pytest.fixture(scope="module")
+def db_dir(tmp_path_factory):
+    td = tmp_path_factory.mktemp("chaosdb")
+    rng = np.random.default_rng(47)
+    paths = []
+    for i in range(N_PROFILES):
+        prof = make_profile(rng, n_nodes=80, n_metrics=6, density=0.3,
+                            n_trace=20, identity={"rank": i})
+        p = td / f"prof{i:03d}.rprf"
+        prof.save(p)
+        paths.append(str(p))
+    StreamingAggregator(
+        td / "db", AggregationConfig(executor="threads", n_workers=3)
+    ).run(paths)
+    return str(td / "db")
+
+
+def _mixed_requests(db, n, seed=0):
+    rng = np.random.default_rng(seed)
+    ctxs, mids = db.stats["ctx"], db.stats["mid"]
+    reqs = []
+    for _ in range(n):
+        i = int(rng.integers(len(ctxs)))
+        p = rng.random()
+        if p < 0.35:
+            reqs.append(QueryRequest(op="stripe", ctx=int(ctxs[i]),
+                                     metric=int(mids[i])))
+        elif p < 0.55:
+            reqs.append(QueryRequest(
+                op="profile", pid=int(rng.integers(db.n_profiles))))
+        elif p < 0.75:
+            reqs.append(QueryRequest(op="topk", metric=0, inclusive=True,
+                                     k=int(rng.integers(3, 10))))
+        else:
+            reqs.append(QueryRequest(
+                op="window", pid=int(rng.integers(db.n_profiles)),
+                t0=0.0, t1=0.7))
+    return reqs
+
+
+def _enc(results):
+    return [json.dumps(result_to_wire(r), sort_keys=True) for r in results]
+
+
+def _batches_and_refs(db_dir, n_batches=6, per_batch=25):
+    """Request batches plus their unfaulted single-process answers."""
+    with Database(db_dir) as db:
+        batches = [_mixed_requests(db, per_batch, seed=100 + s)
+                   for s in range(n_batches)]
+        refs = [_enc(QueryServer(db).serve(b)) for b in batches]
+    return batches, refs
+
+
+def _sustained_load(srv, batches, refs, span_s):
+    """Serve batches round-robin until ``span_s`` elapses (minimum one
+    full cycle).  Returns (n_served, mismatches, errors)."""
+    deadline = time.monotonic() + span_s
+    served = 0
+    mismatches = []
+    errors = []
+    i = 0
+    while time.monotonic() < deadline or served < len(batches):
+        b = i % len(batches)
+        got = srv.serve(batches[b])
+        errors.extend(r for r in got if isinstance(r, QueryError))
+        if _enc(got) != refs[b]:
+            mismatches.append(b)
+        served += 1
+        i += 1
+    return served, mismatches, errors
+
+
+def _wait_metric(srv, key, minimum, timeout_s=25.0):
+    deadline = time.monotonic() + timeout_s
+    while time.monotonic() < deadline:
+        if srv.metrics()[key] >= minimum:
+            break
+        time.sleep(0.05)
+    return srv.metrics()[key]
+
+
+def _assert_recovered(srv, probe):
+    """After the schedule drains: one more round trip, then every shard
+    must be routable again (respawned workers rejoin as alive)."""
+    deadline = time.monotonic() + 25.0
+    while time.monotonic() < deadline:
+        srv.serve(probe)
+        if all(s["health"]["state"] != "dead"
+               for s in srv.metrics()["shards"]):
+            return
+        time.sleep(0.1)
+    pytest.fail(f"shards never rejoined: {srv.metrics()['shards']}")
+
+
+@pytest.mark.timeout(240)
+def test_full_schedule_zero_failures_byte_parity(db_dir):
+    """The headline drill: kill, stall, drop, then a whole-group kill,
+    all inside one sustained load window, with hedged reads armed."""
+    batches, refs = _batches_and_refs(db_dir)
+    schedule = [
+        ChaosEvent(at_s=0.4, kind="kill", shard=0),
+        ChaosEvent(at_s=1.2, kind="stall", shard=1, duration_s=0.6),
+        ChaosEvent(at_s=2.0, kind="drop", shard=2, duration_s=0.4),
+        ChaosEvent(at_s=2.8, kind="kill_group", shards=(1, 2)),
+    ]
+    with ShardedQueryServer(db_dir, 3, slab_bytes=1 << 20, replicas=2,
+                            hedge_ms=40.0) as srv:
+        with ChaosSchedule(srv, schedule) as sched:
+            served, mismatches, errors = _sustained_load(
+                srv, batches, refs, span_s=4.5)
+        assert errors == [], f"{len(errors)} failed requests: {errors[:3]}"
+        assert mismatches == [], f"byte divergence in batches {mismatches}"
+        assert served >= len(batches)
+        report = sched.report()
+        assert [r["kind"] for r in report] == \
+            ["kill", "stall", "drop", "kill_group"]
+        # every fault actually recovered, not just got lucky routing
+        assert _wait_metric(srv, "respawns", 2) >= 2  # kill + group kill
+        m = srv.metrics()
+        assert m["failovers"] >= 1
+        _assert_recovered(srv, batches[0])
+
+
+@pytest.mark.timeout(240)
+def test_default_schedule_matches_bench_leg(db_dir):
+    """The canned ``default_schedule`` (what serve_load --chaos runs)
+    also holds the zero-failure / parity bar."""
+    batches, refs = _batches_and_refs(db_dir, n_batches=4)
+    with ShardedQueryServer(db_dir, 3, slab_bytes=1 << 20,
+                            replicas=2) as srv:
+        events = default_schedule(3, span_s=2.0)
+        with ChaosSchedule(srv, events) as sched:
+            served, mismatches, errors = _sustained_load(
+                srv, batches, refs, span_s=3.0)
+        assert errors == [] and mismatches == []
+        assert served >= len(batches)
+        assert len(sched.report()) == len(events)
+        _assert_recovered(srv, batches[0])
+
+
+@pytest.mark.timeout(240)
+def test_repeated_kills_same_shard(db_dir):
+    """Deterministic crash-looping of one ring position: the replica
+    absorbs every loss while the backoff grows; no request ever fails."""
+    batches, refs = _batches_and_refs(db_dir, n_batches=4)
+    schedule = [ChaosEvent(at_s=0.3 + 0.9 * i, kind="kill", shard=1)
+                for i in range(3)]
+    with ShardedQueryServer(db_dir, 3, slab_bytes=1 << 20,
+                            replicas=2) as srv:
+        with ChaosSchedule(srv, schedule) as sched:
+            served, mismatches, errors = _sustained_load(
+                srv, batches, refs, span_s=3.5)
+        assert errors == [] and mismatches == []
+        # some scheduled kills may find the shard already down (pid gone
+        # mid-backoff) — at least one must have landed
+        landed = [r for r in sched.report() if r.get("pid") is not None]
+        assert landed, sched.report()
+        assert _wait_metric(srv, "respawns", len(landed)) >= len(landed)
+        _assert_recovered(srv, batches[0])
+
+
+@pytest.mark.timeout(240)
+def test_tcp_transport_survives_schedule(db_dir):
+    """The framed-TCP peer path holds the same bar as shm slabs."""
+    batches, refs = _batches_and_refs(db_dir, n_batches=4)
+    schedule = [
+        ChaosEvent(at_s=0.4, kind="kill", shard=0),
+        ChaosEvent(at_s=1.3, kind="stall", shard=2, duration_s=0.5),
+    ]
+    with ShardedQueryServer(db_dir, 3, slab_bytes=1 << 20, replicas=2,
+                            transport="tcp") as srv:
+        with ChaosSchedule(srv, schedule):
+            served, mismatches, errors = _sustained_load(
+                srv, batches, refs, span_s=3.0)
+        assert errors == [] and mismatches == []
+        assert srv.metrics()["inline_payloads"] > 0
+        assert srv.metrics()["slab_payloads"] == 0
+        assert _wait_metric(srv, "respawns", 1) >= 1
+        _assert_recovered(srv, batches[0])
+
+
+@pytest.mark.timeout(240)
+def test_chaos_during_epoch_switch(db_dir):
+    """A kill landing while reopen() is switching epochs: the switch
+    still converges and replies never mix epochs (same directory both
+    sides, so parity doubles as the no-mixing check here; the
+    cross-epoch variant lives in tests/test_ingest.py)."""
+    batches, refs = _batches_and_refs(db_dir, n_batches=4)
+    with ShardedQueryServer(db_dir, 3, slab_bytes=1 << 20,
+                            replicas=2) as srv:
+        stop = threading.Event()
+        reopens = []
+
+        def flipper():
+            while not stop.is_set():
+                reopens.append(srv.reopen(db_dir))
+                time.sleep(0.25)
+
+        t = threading.Thread(target=flipper)
+        t.start()
+        try:
+            schedule = [ChaosEvent(at_s=0.5, kind="kill", shard=0),
+                        ChaosEvent(at_s=1.5, kind="kill", shard=2)]
+            with ChaosSchedule(srv, schedule):
+                served, mismatches, errors = _sustained_load(
+                    srv, batches, refs, span_s=3.0)
+        finally:
+            stop.set()
+            t.join(60)
+        assert errors == [] and mismatches == []
+        assert len(reopens) >= 2
+        assert srv.metrics()["reopens"] == len(reopens)
+        _assert_recovered(srv, batches[0])

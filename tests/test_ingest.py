@@ -380,3 +380,134 @@ def test_follow_sharded_no_mixed_epoch_replies(tmp_path):
                 # replies were observed from more than one epoch, so the
                 # single-epoch property was exercised across a transition
                 assert len(seen) >= 2
+
+
+def test_spool_checksum_quarantines_corrupt_entries(tmp_path):
+    """Spool entries carry a crc32 in their filename; a restart
+    re-enqueues only entries whose checksum (or, for legacy names, RPRF
+    magic) still holds and quarantines the rest instead of poisoning a
+    merge batch."""
+    import glob
+
+    from repro.ingest.server import (QUARANTINE_DIR, SPOOL_DIR,
+                                     spool_entry_name, spool_entry_ok)
+    paths = _write_profiles(tmp_path, 4)
+    blobs = [open(p, "rb").read() for p in paths]
+    root = str(tmp_path / "live")
+
+    srv = IngestHTTPServer(root, config=_serial_cfg())
+    srv.start()
+    srv.pause()  # accepted but never merged: stays in the spool
+    host, port = srv.address
+    with IngestClient(host, port) as c:
+        c.upload_many(blobs[:3])
+    srv.stop()
+
+    spool = os.path.join(root, SPOOL_DIR)
+    entries = sorted(os.listdir(spool))
+    assert len(entries) == 3
+    assert all(spool_entry_ok(os.path.join(spool, n), n) for n in entries)
+    assert entries[1] == spool_entry_name(1, blobs[1])
+    # flip a byte in the middle entry: its filename crc no longer matches
+    mid = os.path.join(spool, entries[1])
+    data = bytearray(open(mid, "rb").read())
+    data[len(data) // 2] ^= 0xFF
+    open(mid, "wb").write(bytes(data))
+    # a pre-checksum (legacy, two-part name) entry that is still valid...
+    open(os.path.join(spool, "000000000098.rprf"), "wb").write(blobs[3])
+    # ...and legacy junk that never was a profile
+    open(os.path.join(spool, "000000000099.rprf"), "wb").write(b"not rprf")
+
+    with IngestHTTPServer(root, config=_serial_cfg()) as srv2:
+        host, port = srv2.address
+        with IngestClient(host, port) as c:
+            m = c.metrics()
+            assert m["spool_quarantined"] == 2
+            assert m["pending"] == 3
+            pub = c.publish()
+    qdir = os.path.join(spool, QUARANTINE_DIR)
+    assert sorted(os.listdir(qdir)) == [entries[1], "000000000099.rprf"]
+    # the survivors merged in seq order, byte-identical to a one-shot
+    # over exactly those profiles
+    one = tmp_path / "one"
+    StreamingAggregator(one, _serial_cfg()).run(
+        [paths[0], paths[2], paths[3]])
+    edir = os.path.join(root, pub["dir"])
+    for name in DB_FILES:
+        assert filecmp.cmp(os.path.join(edir, name), str(one / name),
+                           shallow=False)
+    assert not glob.glob(os.path.join(spool, "*.rprf"))
+
+
+def test_replicated_reopen_races_worker_death_no_mixed_epochs(tmp_path):
+    """Satellite of the replication tentpole: a sharded follower with
+    R=2 ownership crosses epoch transitions while workers are SIGKILLed
+    right as each epoch publishes — the reopen/respawn/failover machinery
+    interleaves, yet every batched reply still matches exactly one
+    epoch's answers in full."""
+    import signal as _signal
+    if not hasattr(_signal, "SIGKILL"):
+        pytest.skip("POSIX only")
+    blobs = [open(p, "rb").read() for p in _write_profiles(tmp_path, 9)]
+    root = str(tmp_path / "live")
+    reqs = [QueryRequest(op="topk", metric=1, k=256, inclusive=True),
+            QueryRequest(op="threshold", metric=1, inclusive=True,
+                         params={"min_value": 0.0})]
+    expected: dict[int, list] = {}
+    with IngestHTTPServer(root, config=_serial_cfg(), merge_batch=4) as ing:
+        ihost, iport = ing.address
+        with IngestClient(ihost, iport) as ic:
+            ic.upload_many(blobs[:3])
+            e1 = ic.publish()["epoch"]
+            expected[e1] = _epoch_answers(root, e1, reqs)
+            with QueryHTTPServer(root, follow=True, poll_ms=20, shards=3,
+                                 replicas=2, warm_bytes=0) as srv:
+                qhost, qport = srv.address
+                stop = threading.Event()
+                batches: list[list] = []
+                errors: list[Exception] = []
+
+                def fire():
+                    with QueryClient(qhost, qport) as qc2:
+                        while not stop.is_set():
+                            try:
+                                res = qc2.batch(reqs)
+                            except Exception as e:       # noqa: BLE001
+                                errors.append(e)
+                                return
+                            batches.append(
+                                [result_to_wire(r) for r in res])
+
+                thread = threading.Thread(target=fire, daemon=True)
+                thread.start()
+                with QueryClient(qhost, qport) as qc:
+                    for n, (lo, hi) in enumerate(((3, 6), (6, 9))):
+                        ic.upload_many(blobs[lo:hi])
+                        epoch = ic.publish()["epoch"]
+                        # land a kill in the follower's reopen window
+                        pid = srv.sharded.worker_pids()[n % 3]
+                        os.kill(pid, _signal.SIGKILL)
+                        expected[epoch] = _epoch_answers(root, epoch, reqs)
+                        deadline = time.monotonic() + 30
+                        while qc.health().get("epoch") != epoch:
+                            assert time.monotonic() < deadline, \
+                                "follower never switched"
+                            time.sleep(0.02)
+                        time.sleep(0.1)  # observe post-switch replies
+                    stop.set()
+                    thread.join(timeout=15)
+                    metrics = qc.metrics()
+                assert not errors, errors[:1]
+                assert metrics["epoch"]["transitions"] == 3  # open + 2
+                assert metrics["shards"]["reopens"] == 2
+                deadline = time.monotonic() + 20
+                while srv.sharded.metrics()["respawns"] < 2 and \
+                        time.monotonic() < deadline:
+                    time.sleep(0.05)
+                assert srv.sharded.metrics()["respawns"] >= 2
+
+                assert batches, "query thread never completed a batch"
+                for got in batches:
+                    owners = [e for e, ans in expected.items()
+                              if got == ans]
+                    assert owners, "reply mixes epochs (or matches none)"

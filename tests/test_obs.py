@@ -246,9 +246,11 @@ class _SleepKillServer(QueryServer):
 def test_sigkill_replay_keeps_trace_and_freezes_dump(ring, db_dir):
     """Kill a worker mid-batch: the replayed requests keep their trace
     ids, the supervisor records ``replay`` spans, and the recorder
-    freezes a worker-death dump for /debug/spans."""
+    freezes a worker-death dump for /debug/spans.  A single shard pins
+    the replay path — with any other live shard the loss would fail
+    over instead (covered below)."""
     tid = mint_trace_id()
-    with ShardedQueryServer(db_dir, 2, slab_bytes=1 << 20,
+    with ShardedQueryServer(db_dir, 1, slab_bytes=1 << 20,
                             server_factory=_SleepKillServer) as srv:
         sleep_req = QueryRequest(op="sleep", t0=0.6, trace_id=tid)
         victim = srv.shard_of(sleep_req)
@@ -267,6 +269,36 @@ def test_sigkill_replay_keeps_trace_and_freezes_dump(ring, db_dir):
     spans = recorder().snapshot()
     replay = [s for s in spans if s.name == "replay"]
     assert replay and all(s.trace_id == tid for s in replay)
+    dumps = recorder().as_dict()["dumps"]
+    assert any("worker_death" in d["reason"] for d in dumps)
+
+
+@pytest.mark.skipif(not hasattr(signal, "SIGKILL"), reason="POSIX only")
+def test_sigkill_failover_keeps_trace_and_freezes_dump(ring, db_dir):
+    """Same loss with a live replica (default R=2): in-flight requests
+    fail over instead of waiting out the respawn, the ``failover``
+    marker spans keep the caller's trace id, and the death dump still
+    freezes."""
+    tid = mint_trace_id()
+    with ShardedQueryServer(db_dir, 2, slab_bytes=1 << 20,
+                            server_factory=_SleepKillServer) as srv:
+        sleep_req = QueryRequest(op="sleep", t0=0.6, trace_id=tid)
+        victim = srv.shard_of(sleep_req)
+        reqs = [sleep_req] + [QueryRequest(op="profile", pid=p, trace_id=tid)
+                              for p in range(6)]
+        out: list = [None]
+        t = threading.Thread(
+            target=lambda: out.__setitem__(0, srv.serve(reqs)))
+        t.start()
+        time.sleep(0.2)
+        os.kill(srv.worker_pids()[victim], signal.SIGKILL)
+        t.join(30)
+        assert not t.is_alive()
+        assert out[0][0] == 0.0
+    spans = recorder().snapshot()
+    moved = [s for s in spans if s.name in ("failover", "replay")]
+    assert moved and all(s.trace_id == tid for s in moved)
+    assert any(s.name == "failover" for s in moved)
     dumps = recorder().as_dict()["dumps"]
     assert any("worker_death" in d["reason"] for d in dumps)
 

@@ -1,0 +1,408 @@
+"""R-way replicated shard ownership: ring successor sets, live-set
+assignment, replica-tiered warming, failover reads that survive worker
+and whole-group SIGKILLs with byte-identical answers, and hedged reads
+that cut tail latency past a stalled primary."""
+import json
+import os
+import signal
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from tests._hypothesis_compat import given, settings, st
+
+from repro.core.aggregate import AggregationConfig, StreamingAggregator
+from repro.query import Database
+from repro.serve.chaos import AppliedEvent, ChaosEvent, ChaosSchedule
+from repro.serve.engine import QueryError, QueryRequest, QueryServer
+from repro.serve.shard import ConsistentHashRing, ShardedQueryServer
+from repro.serve.warm import plan_warm
+from repro.serve.wire import result_to_wire
+from tests.conftest import make_profile
+from tests.test_shard import _SleepKillServer
+
+N_PROFILES = 6
+
+
+@pytest.fixture(scope="module")
+def db_dir(tmp_path_factory):
+    td = tmp_path_factory.mktemp("repldb")
+    rng = np.random.default_rng(31)
+    paths = []
+    for i in range(N_PROFILES):
+        prof = make_profile(rng, n_nodes=80, n_metrics=6, density=0.3,
+                            n_trace=20, identity={"rank": i})
+        p = td / f"prof{i:03d}.rprf"
+        prof.save(p)
+        paths.append(str(p))
+    StreamingAggregator(
+        td / "db", AggregationConfig(executor="threads", n_workers=3)
+    ).run(paths)
+    return str(td / "db")
+
+
+def _mixed_requests(db, n, seed=0):
+    rng = np.random.default_rng(seed)
+    ctxs, mids = db.stats["ctx"], db.stats["mid"]
+    reqs = []
+    for _ in range(n):
+        i = int(rng.integers(len(ctxs)))
+        p = rng.random()
+        if p < 0.35:
+            reqs.append(QueryRequest(op="stripe", ctx=int(ctxs[i]),
+                                     metric=int(mids[i])))
+        elif p < 0.55:
+            reqs.append(QueryRequest(
+                op="profile", pid=int(rng.integers(db.n_profiles))))
+        elif p < 0.75:
+            reqs.append(QueryRequest(op="topk", metric=0, inclusive=True,
+                                     k=int(rng.integers(3, 10))))
+        else:
+            reqs.append(QueryRequest(
+                op="window", pid=int(rng.integers(db.n_profiles)),
+                t0=0.0, t1=0.7))
+    return reqs
+
+
+def _enc(results):
+    """Canonical byte form of a result list (wire JSON, sorted keys)."""
+    return [json.dumps(result_to_wire(r), sort_keys=True) for r in results]
+
+
+def _wait_metric(srv, key, minimum, timeout_s=20.0):
+    """Failover resolves client futures *before* the backoff+respawn
+    completes, so supervision counters lag the answers — poll them."""
+    deadline = time.monotonic() + timeout_s
+    while time.monotonic() < deadline:
+        val = srv.metrics()[key]
+        if val >= minimum:
+            return val
+        time.sleep(0.05)
+    return srv.metrics()[key]
+
+
+# ---------------------------------------------------------------------------
+# ring: R-way successor ownership
+# ---------------------------------------------------------------------------
+
+def test_owners_are_distinct_and_primary_first():
+    ring = ConsistentHashRing(5, replicas=3)
+    for g in (0, 1):
+        for i in range(200):
+            owners = ring.owners_key((g, i))
+            assert len(owners) == 3
+            assert len(set(owners)) == 3
+            assert owners[0] == ring.route_key((g, i))
+
+
+def test_replicas_clamped_to_shard_count():
+    ring = ConsistentHashRing(2, replicas=8)
+    assert ring.replicas == 2
+    assert len(ring.owners_key((0, 1))) == 2
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 6),
+       st.lists(st.tuples(st.integers(0, 3), st.integers(0, 10**6)),
+                min_size=1, max_size=60))
+def test_growth_stability_per_replica_rank(n_shards, keys):
+    """Growing N -> N+1 shards only ever moves a key's rank-r owner to
+    the newcomer — the classic consistent-hash guarantee, per rank."""
+    ring = ConsistentHashRing(n_shards, replicas=2)
+    grown = ConsistentHashRing(n_shards + 1, replicas=2)
+    for k in keys:
+        a = ring.owners_key(k)
+        b = grown.owners_key(k)
+        for r in range(2):
+            assert b[r] == a[r] or b[r] == n_shards
+
+
+def test_assigned_shard_total_over_any_live_set():
+    """Any non-empty live set yields a total assignment: every key lands
+    on a live shard, and the assignment is the first live successor (so
+    with all owners up it is exactly the primary)."""
+    ring = ConsistentHashRing(4, replicas=2)
+    full = frozenset(range(4))
+    for c in range(100):
+        assert ring.assigned_shard((1, c), full) == ring.route_key((1, c))
+    for live in [{0}, {3}, {1, 2}, {0, 2, 3}]:
+        for c in range(100):
+            assert ring.assigned_shard((1, c), live) in live
+
+
+def test_owned_contexts_partition_under_live_subsets():
+    """For any live set, per-member owned-context sets partition the
+    context space — the invariant scatter correctness rides on."""
+    ring = ConsistentHashRing(4, replicas=2)
+    n = 300
+    for live in [(0, 1, 2, 3), (1, 3), (2,)]:
+        sets = [set(ring.owned_contexts(n, s, live).tolist()) for s in live]
+        union = set()
+        for s in sets:
+            assert not (union & s), "overlap between live members"
+            union |= s
+        assert union == set(range(n))
+        # dead members own nothing under this live set
+        for s in set(range(4)) - set(live):
+            assert ring.owned_contexts(n, s, live).size == 0
+
+
+def test_plane_role_and_warm_priority(db_dir):
+    ring = ConsistentHashRing(3, replicas=2)
+    with Database(db_dir) as db:
+        roles = {0: 0, 1: 0, 2: 0, None: 0}
+        for pid in range(db.n_profiles):
+            for s in range(3):
+                role = ring.plane_role("pms", pid, s)
+                w = ring.warm_priority("pms", pid, s)
+                if role == 0:
+                    assert w == 1.0
+                elif role == 1:
+                    assert w == 0.5
+                else:
+                    assert role is None and w == 0.0
+                roles[role] += 1
+        # every plane has exactly one primary and one replica owner
+        assert roles[0] == db.n_profiles
+        assert roles[1] == db.n_profiles
+
+
+def test_warm_plans_cover_replicas(db_dir):
+    """With R=2 every plane appears in exactly two shards' warm plans
+    (unbounded budget), and replica-owned planes rank behind primary
+    planes of equal density."""
+    ring = ConsistentHashRing(3, replicas=2)
+    with Database(db_dir) as db:
+        full = set((s, o) for s, o, _ in plan_warm(db, 1 << 30))
+        seen: dict = {}
+        for s in range(3):
+            plan = plan_warm(db, 1 << 30,
+                             owned=lambda st_, oid, s=s:
+                             ring.warm_priority(st_, oid, s))
+            for store, oid, _ in plan:
+                seen[(store, oid)] = seen.get((store, oid), 0) + 1
+        assert set(seen) == full
+        assert all(v == 2 for v in seen.values())
+
+
+# ---------------------------------------------------------------------------
+# failover reads: kills become latency, never lost answers
+# ---------------------------------------------------------------------------
+
+@pytest.mark.skipif(not hasattr(signal, "SIGKILL"), reason="POSIX only")
+def test_single_replica_kill_mid_load_zero_failures(db_dir):
+    """R=2: SIGKILL one worker while its batch is in flight — every
+    client future resolves byte-identically to the unfaulted reference,
+    with zero QueryErrors, via failover to the surviving replica."""
+    with Database(db_dir) as db:
+        reqs = _mixed_requests(db, 60, seed=1)
+        ref = _enc(QueryServer(db).serve(reqs))
+    with ShardedQueryServer(db_dir, 3, slab_bytes=1 << 20, replicas=2,
+                            server_factory=_SleepKillServer) as srv:
+        sleeper = QueryRequest(op="sleep", t0=0.6)
+        victim = srv.shard_of(sleeper)
+        out: list = [None, None]
+
+        def run():
+            out[0] = srv.serve([sleeper] + reqs)
+
+        t = threading.Thread(target=run)
+        t.start()
+        time.sleep(0.2)  # victim is inside the sleep, batch in flight
+        os.kill(srv.worker_pids()[victim], signal.SIGKILL)
+        t.join(60)
+        assert not t.is_alive(), "serve() wedged after replica death"
+        got = out[0]
+        assert not any(isinstance(r, QueryError) for r in got), \
+            [r for r in got if isinstance(r, QueryError)]
+        assert got[0] == 0.0
+        assert _enc(got[1:]) == ref
+        assert _wait_metric(srv, "respawns", 1) >= 1
+        assert srv.metrics()["failovers"] >= 1, \
+            "death should fail over, not just replay"
+
+
+@pytest.mark.skipif(not hasattr(signal, "SIGKILL"), reason="POSIX only")
+def test_whole_group_kill_mid_load_zero_failures(db_dir):
+    """Kill an entire owner group (2 of 3 shards) at once mid-load: the
+    lone survivor answers everything (every worker holds the full
+    Database; replication is about locality, not data availability)."""
+    with Database(db_dir) as db:
+        all_reqs = [_mixed_requests(db, 30, seed=s) for s in range(4)]
+        refs = [_enc(QueryServer(db).serve(rs)) for rs in all_reqs]
+    with ShardedQueryServer(db_dir, 3, slab_bytes=1 << 20,
+                            replicas=2) as srv:
+        results: list = []
+        done = threading.Event()
+
+        def load():
+            for rs in all_reqs:
+                results.append(_enc(srv.serve(rs)))
+            done.set()
+
+        t = threading.Thread(target=load)
+        t.start()
+        time.sleep(0.05)
+        pids = srv.worker_pids()
+        os.kill(pids[0], signal.SIGKILL)
+        os.kill(pids[1], signal.SIGKILL)
+        t.join(120)
+        assert done.is_set(), "serve() wedged after group death"
+        assert results == refs
+        assert _wait_metric(srv, "respawns", 1) >= 1
+        # the survivor then rejoins its respawned peers: all healthy again
+        srv.serve(all_reqs[0])
+        assert all(s["health"]["state"] != "dead"
+                   for s in srv.metrics()["shards"])
+
+
+def test_summary_ops_route_to_single_live_owner(db_dir):
+    """Scatter ops fan out over the live set only: with one shard marked
+    dead the remaining members partition the context space and the merge
+    still reproduces the single-space answer byte for byte."""
+    with Database(db_dir) as db:
+        req = QueryRequest(op="topk", metric=0, inclusive=True, k=6)
+        ref = _enc(QueryServer(db).serve([req]))
+    with ShardedQueryServer(db_dir, 3, slab_bytes=1 << 20,
+                            replicas=2) as srv:
+        assert _enc(srv.serve([req])) == ref
+        srv._shards[1].health.dead()  # router sees shard 1 as dead
+        assert _enc(srv.serve([req])) == ref
+        m = srv.metrics()
+        assert m["scatter_queries"] >= 2
+
+
+# ---------------------------------------------------------------------------
+# hedged reads
+# ---------------------------------------------------------------------------
+
+def test_hedged_read_beats_stalled_primary(db_dir):
+    """With hedging armed, a request whose primary's replies are stalled
+    (hung peer, not dead) is duplicated to the replica after the hedge
+    delay and the first reply wins — tail latency capped near the hedge
+    delay, not the stall window."""
+    with Database(db_dir) as db:
+        req = QueryRequest(op="profile", pid=0)
+        ref = _enc(QueryServer(db).serve([req]))
+    with ShardedQueryServer(db_dir, 2, slab_bytes=1 << 20, replicas=2,
+                            hedge_ms=40.0) as srv:
+        srv.serve_one(req)  # warm path + latency history
+        primary = srv.shard_of(req)
+        srv.inject_fault(primary, "stall", 1.5)
+        t0 = time.monotonic()
+        res = srv.serve_one(req)
+        dt = time.monotonic() - t0
+        assert _enc([res]) == ref
+        m = srv.metrics()
+        assert m["hedges"] >= 1
+        assert m["hedge_wins"] >= 1
+        assert dt < 1.2, f"hedge did not cut latency: {dt:.2f}s"
+
+
+def test_hedge_disabled_by_default(db_dir):
+    with ShardedQueryServer(db_dir, 2, slab_bytes=1 << 20,
+                            replicas=2) as srv:
+        srv.serve_one(QueryRequest(op="profile", pid=0))
+        assert srv.metrics()["hedge_ms"] is None
+        assert srv.metrics()["hedges"] == 0
+
+
+# ---------------------------------------------------------------------------
+# tcp transport
+# ---------------------------------------------------------------------------
+
+def test_tcp_transport_byte_parity(db_dir):
+    with Database(db_dir) as db:
+        reqs = _mixed_requests(db, 50, seed=3)
+        ref = _enc(QueryServer(db).serve(reqs))
+    with ShardedQueryServer(db_dir, 2, replicas=2,
+                            transport="tcp") as srv:
+        assert _enc(srv.serve(reqs)) == ref
+        m = srv.metrics()
+        assert m["transport"] == "tcp"
+        # no slab arena across tcp: payloads ride inline in frames
+        assert m["slab_payloads"] == 0
+        assert m["inline_payloads"] > 0
+
+
+@pytest.mark.skipif(not hasattr(signal, "SIGKILL"), reason="POSIX only")
+def test_tcp_worker_death_recovers(db_dir):
+    with Database(db_dir) as db:
+        reqs = _mixed_requests(db, 20, seed=4)
+        ref = _enc(QueryServer(db).serve(reqs))
+    with ShardedQueryServer(db_dir, 2, replicas=2,
+                            transport="tcp") as srv:
+        assert _enc(srv.serve(reqs)) == ref
+        os.kill(srv.worker_pids()[0], signal.SIGKILL)
+        assert _enc(srv.serve(reqs)) == ref
+        assert _wait_metric(srv, "respawns", 1) >= 1
+
+
+# ---------------------------------------------------------------------------
+# chaos harness (schedule mechanics only; the full suite is -m chaos)
+# ---------------------------------------------------------------------------
+
+class _StubServer:
+    def __init__(self):
+        self.calls = []
+
+    def kill_worker(self, shard):
+        self.calls.append(("kill", shard))
+        return 4242
+
+    def inject_fault(self, shard, kind, seconds, *, delay_s=0.02):
+        self.calls.append((kind, shard, seconds))
+
+
+def test_chaos_schedule_applies_events_in_order():
+    srv = _StubServer()
+    sched = ChaosSchedule(srv, [
+        ChaosEvent(at_s=0.10, kind="drop", shard=1, duration_s=0.2),
+        ChaosEvent(at_s=0.02, kind="kill", shard=0),
+        ChaosEvent(at_s=0.15, kind="kill_group", shards=(0, 2)),
+    ])
+    with sched:
+        time.sleep(0.4)
+    assert srv.calls == [("kill", 0), ("drop", 1, 0.2),
+                         ("kill", 0), ("kill", 2)]
+    rep = sched.report()
+    assert [r["kind"] for r in rep] == ["kill", "drop", "kill_group"]
+    assert rep[0]["pid"] == 4242
+    assert rep[2]["targets"] == [0, 2]
+    assert isinstance(sched.applied[0], AppliedEvent)
+
+
+def test_chaos_schedule_stop_cancels_pending_events():
+    srv = _StubServer()
+    sched = ChaosSchedule(srv, [ChaosEvent(at_s=5.0, kind="kill")])
+    sched.start()
+    sched.stop()
+    sched.join(2.0)
+    assert srv.calls == []
+
+
+def test_chaos_event_rejects_unknown_kind():
+    with pytest.raises(ValueError):
+        ChaosEvent(at_s=0.0, kind="meteor")
+
+
+# ---------------------------------------------------------------------------
+# metrics surface
+# ---------------------------------------------------------------------------
+
+def test_metrics_expose_replica_topology_and_health(db_dir):
+    with ShardedQueryServer(db_dir, 3, slab_bytes=1 << 20, replicas=2,
+                            hedge_ms=25.0) as srv:
+        srv.serve_one(QueryRequest(op="profile", pid=0))
+        m = srv.metrics()
+        assert m["replicas"] == 2
+        assert m["transport"] == "shm"
+        assert m["hedge_ms"] == 25.0
+        for key in ("failovers", "hedges", "hedge_wins", "health_misses",
+                    "hung_kills"):
+            assert key in m
+        for s in m["shards"]:
+            assert s["health"]["state"] == "alive"
+            assert "misses" in s["health"]

@@ -667,3 +667,143 @@ def test_unbatched_server_mode(db_dir):
                 assert [h.ctx for h in cl.topk(0, k=3)] == \
                     [h.ctx for h in topk_hot_paths(handle, 0, k=3)]
                 assert cl.metrics()["scheduler"] is None
+
+
+# ---------------------------------------------------------------------------
+# connection cap, graceful drain, SIGTERM lifecycle
+# ---------------------------------------------------------------------------
+
+def test_http_connection_cap_429_then_recovers(db_dir):
+    """Connections past --max-connections get a raw 429 + Retry-After
+    before a handler thread is even spawned; freeing a slot restores
+    service and the metrics endpoint accounts for the rejections."""
+    import socket
+
+    from repro.serve.client import QueryClient
+    from repro.serve.http import QueryHTTPServer
+    with Database(db_dir) as handle:
+        with QueryHTTPServer(handle, port=0, warm_bytes=0,
+                             max_connections=2) as srv:
+            host, port = srv.address
+            holders = [socket.create_connection((host, port), timeout=10)
+                       for _ in range(2)]
+            try:
+                # the acceptor counts connections as it admits them; the
+                # cap+1-th connection reads a raw 429 (or, if it raced an
+                # admitted-but-uncounted holder, retry until the cap bites)
+                deadline = time.monotonic() + 10
+                status = None
+                while time.monotonic() < deadline:
+                    s3 = socket.create_connection((host, port), timeout=10)
+                    s3.settimeout(2.0)
+                    try:
+                        head = s3.recv(4096)
+                    except socket.timeout:
+                        head = b""
+                    finally:
+                        s3.close()
+                    if head.startswith(b"HTTP/1.1 429"):
+                        status = head
+                        break
+                    time.sleep(0.05)
+                assert status is not None, "cap never rejected a connection"
+                assert b"Retry-After" in status
+                assert b"TooManyConnections" in status
+            finally:
+                for s in holders:
+                    s.close()
+            # slots freed: a real client gets through again
+            deadline = time.monotonic() + 10
+            while True:
+                try:
+                    with QueryClient(host, port) as cl:
+                        m = cl.metrics()
+                    break
+                except Exception:
+                    assert time.monotonic() < deadline
+                    time.sleep(0.05)
+            assert m["connections"]["cap"] == 2
+            assert m["connections"]["rejected"] >= 1
+            assert m["connections"]["draining"] is False
+
+
+def test_http_drain_waits_for_inflight_then_503(db_dir):
+    """drain() lets in-flight requests finish (they are not shed), then
+    new POSTs answer a structured 503 Draining with Connection: close."""
+    from repro.serve.client import QueryClient, TransportError
+    from repro.serve.http import QueryHTTPServer
+    with Database(db_dir) as handle:
+        with QueryHTTPServer(handle, port=0, warm_bytes=0,
+                             n_workers=2) as srv:
+            stall_srv = _StallServer(handle)
+            srv.scheduler.server = stall_srv
+            host, port = srv.address
+            results: list = []
+
+            def occupant():
+                with QueryClient(host, port) as c:
+                    results.append(
+                        c.batch([QueryRequest(op="stall", metric=0)]))
+
+            t = threading.Thread(target=occupant)
+            t.start()
+            time.sleep(0.2)  # the stall op is now in flight
+            report: dict = {}
+
+            def drainer():
+                report.update(srv.drain(timeout_s=10.0))
+
+            d = threading.Thread(target=drainer)
+            d.start()
+            time.sleep(0.2)
+            assert not d.is_alive() or report == {}  # still waiting
+            stall_srv.release.set()
+            d.join(15)
+            t.join(15)
+            assert report["drained"] is True
+            assert report["inflight_requests"] == 0
+            assert results and not isinstance(results[0][0], QueryError)
+            # post-drain: structured rejection, not a hang or a reset
+            with QueryClient(host, port) as cl:
+                with pytest.raises(TransportError) as exc:
+                    cl.batch([QueryRequest(op="topk", metric=0, k=1)])
+                assert exc.value.status == 503
+                assert exc.value.body["error"] == "Draining"
+
+
+def test_query_server_sigterm_drains_and_exits_zero(db_dir):
+    """The launcher contract an orchestrator's rolling restart relies
+    on: SIGTERM -> drain report on stderr -> exit code 0."""
+    import json as _json
+    import os
+    import signal as _signal
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.serve", "query-server",
+         str(db_dir), "--port", "0", "--no-warm",
+         "--drain-timeout-s", "5"],
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE, env=env)
+    try:
+        info = _json.loads(proc.stdout.readline())
+        assert info["url"].startswith("http://")
+        host, port = info["url"].removeprefix("http://").split(":")
+        from repro.serve.client import QueryClient
+        with QueryClient(host, int(port)) as cl:
+            assert cl.health()["status"] == "ok"
+        proc.send_signal(_signal.SIGTERM)
+        out, err = proc.communicate(timeout=30)
+    except BaseException:
+        proc.kill()
+        raise
+    assert proc.returncode == 0, err.decode()
+    drain_lines = [ln for ln in err.decode().splitlines()
+                   if ln.startswith("{") and "drain" in ln]
+    assert drain_lines, err.decode()
+    report = _json.loads(drain_lines[0])["drain"]
+    assert report["drained"] is True

@@ -335,7 +335,9 @@ def test_scheduler_parity_with_concurrent_clients(db_dir):
 def test_scheduler_per_shard_admission_bounds(db_dir):
     """Admission is per shard: saturating one shard 429s traffic bound
     for it while the other shard keeps admitting and serving."""
-    with ShardedQueryServer(db_dir, 2, slab_bytes=1 << 20,
+    # replicas=1 pins each key to exactly one shard; with R>1 the router
+    # would spill the backlog onto the replica instead of 429ing
+    with ShardedQueryServer(db_dir, 2, slab_bytes=1 << 20, replicas=1,
                             server_factory=_SleepKillServer) as srv:
         sleeper = QueryRequest(op="sleep", t0=0.8)
         hot = srv.shard_of(sleeper)
@@ -383,7 +385,9 @@ def test_warm_plans_partition_across_shards(db_dir):
 
 
 def test_workers_warm_only_owned_planes(db_dir):
-    with ShardedQueryServer(db_dir, 2, warm_bytes=None,
+    # replicas=1: plans partition exactly (with R>1 replica-owned planes
+    # are deliberately planned by several workers — see test_replication)
+    with ShardedQueryServer(db_dir, 2, warm_bytes=None, replicas=1,
                             slab_bytes=1 << 20) as srv:
         reports = srv.warm_reports()
         assert len(reports) == 2

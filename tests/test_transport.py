@@ -1,0 +1,271 @@
+"""Peer transport unit tests: TCP framing, the hello handshake + token
+auth, chaos fault windows at the transport boundary, and the per-owner
+health state machine — the pieces the replicated sharded server is
+built from, exercised without spawning a single worker process."""
+import multiprocessing as mp
+import socket
+import threading
+import time
+
+import pytest
+
+from repro.serve.transport import (ALIVE, DEAD, REJOINING, SUSPECT,
+                                   ChaosState, PeerClosed, PeerHealth,
+                                   PeerTimeout, QueuePeer, TcpListener,
+                                   TcpPeer, connect_peer, recv_frame,
+                                   send_frame)
+
+
+def _sock_pair():
+    a, b = socket.socketpair()
+    return a, b
+
+
+# ---------------------------------------------------------------------------
+# framing
+# ---------------------------------------------------------------------------
+
+def test_frame_roundtrip_and_coalesced_stream():
+    a, b = _sock_pair()
+    try:
+        msgs = [b"", b"x", b"hello" * 1000, bytes(range(256))]
+        for m in msgs:
+            send_frame(a, m)
+        for m in msgs:
+            assert recv_frame(b, timeout=5.0) == m
+    finally:
+        a.close()
+        b.close()
+
+
+def test_frame_timeout_vs_closed():
+    a, b = _sock_pair()
+    try:
+        # nothing sent: a clean pre-frame timeout (a health miss)
+        with pytest.raises(PeerTimeout):
+            recv_frame(b, timeout=0.05)
+        # partial frame then silence: the stream is unframed, so the
+        # only safe signal is closed (forces reconnect, not retry-read)
+        a.sendall(b"\x10\x00\x00")
+        with pytest.raises(PeerClosed):
+            recv_frame(b, timeout=0.1)
+    finally:
+        a.close()
+        b.close()
+
+
+def test_frame_eof_is_closed():
+    a, b = _sock_pair()
+    a.close()
+    try:
+        with pytest.raises(PeerClosed):
+            recv_frame(b, timeout=1.0)
+    finally:
+        b.close()
+
+
+def test_frame_rejects_absurd_length_prefix():
+    a, b = _sock_pair()
+    try:
+        a.sendall((1 << 40).to_bytes(8, "little"))
+        with pytest.raises(PeerClosed):
+            recv_frame(b, timeout=1.0)
+    finally:
+        a.close()
+        b.close()
+
+
+def test_tcp_peer_pickles_python_objects():
+    a, b = _sock_pair()
+    pa, pb = TcpPeer(a), TcpPeer(b)
+    try:
+        msg = ("batch", [1, 2, {"op": "stripe"}], None)
+        pa.send(msg)
+        assert pb.recv(timeout=5.0) == msg
+        pb.send({"reply": 7})
+        assert pa.recv(timeout=5.0) == {"reply": 7}
+    finally:
+        pa.close()
+        pb.close()
+
+
+# ---------------------------------------------------------------------------
+# hello handshake + listener
+# ---------------------------------------------------------------------------
+
+def test_listener_handshake_delivers_authenticated_peer():
+    got = {}
+    evt = threading.Event()
+
+    def on_peer(shard, peer):
+        got["shard"], got["peer"] = shard, peer
+        evt.set()
+
+    lis = TcpListener(on_peer)
+    try:
+        token = b"\x01" * 16
+        lis.expect(3, token)
+        worker = connect_peer(lis.address, 3, token)
+        assert evt.wait(5.0)
+        assert got["shard"] == 3
+        worker.send(["ready", 3])
+        assert got["peer"].recv(timeout=5.0) == ["ready", 3]
+        got["peer"].send("ack")
+        assert worker.recv(timeout=5.0) == "ack"
+        worker.close()
+        got["peer"].close()
+    finally:
+        lis.close()
+
+
+def test_listener_rejects_bad_token_and_unknown_shard():
+    calls = []
+    lis = TcpListener(lambda s, p: calls.append(s))
+    try:
+        lis.expect(0, b"\x02" * 16)
+        with pytest.raises(PeerClosed):
+            connect_peer(lis.address, 0, b"\x03" * 16,
+                         reconnect_attempts=1)
+        with pytest.raises(PeerClosed):
+            connect_peer(lis.address, 9, b"\x02" * 16,
+                         reconnect_attempts=1)
+        assert calls == []
+    finally:
+        lis.close()
+
+
+def test_reconnect_replaces_peer_with_same_token():
+    peers = []
+    evt = threading.Event()
+
+    def on_peer(shard, peer):
+        peers.append(peer)
+        evt.set()
+
+    lis = TcpListener(on_peer)
+    try:
+        token = b"\x04" * 16
+        lis.expect(1, token)
+        w1 = connect_peer(lis.address, 1, token)
+        assert evt.wait(5.0)
+        evt.clear()
+        w1.close()  # link dies; the worker reconnects with the same token
+        w2 = connect_peer(lis.address, 1, token)
+        assert evt.wait(5.0)
+        assert len(peers) == 2
+        w2.send("back")
+        assert peers[1].recv(timeout=5.0) == "back"
+        w2.close()
+        for p in peers:
+            p.close()
+    finally:
+        lis.close()
+
+
+def test_connect_peer_bounded_backoff_gives_up():
+    # grab a port with no listener behind it
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    addr = s.getsockname()[:2]
+    s.close()
+    t0 = time.monotonic()
+    with pytest.raises(PeerClosed):
+        connect_peer(addr, 0, b"\x05" * 16, connect_timeout_s=0.2,
+                     reconnect_attempts=3, backoff_base_s=0.01,
+                     backoff_max_s=0.05)
+    assert time.monotonic() - t0 < 5.0  # bounded, not forever
+
+
+# ---------------------------------------------------------------------------
+# chaos windows at the transport boundary
+# ---------------------------------------------------------------------------
+
+def test_chaos_drop_eats_sends_until_window_expires():
+    q_out: mp.Queue = mp.Queue()
+    q_in: mp.Queue = mp.Queue()
+    chaos = ChaosState()
+    peer = QueuePeer(q_out, q_in, chaos=chaos)
+    chaos.drop_for(0.2)
+    peer.send("lost")
+    assert chaos.dropped == 1
+    time.sleep(0.25)
+    peer.send("kept")
+    assert q_out.get(timeout=5.0) == "kept"
+    assert q_out.empty()
+    peer.close()
+
+
+def test_chaos_stall_withholds_queued_messages_then_heals():
+    q_out: mp.Queue = mp.Queue()
+    q_in: mp.Queue = mp.Queue()
+    chaos = ChaosState()
+    peer = QueuePeer(q_out, q_in, chaos=chaos)
+    q_in.put("queued")
+    time.sleep(0.05)  # let the queue feeder make it visible
+    chaos.stall_for(0.3)
+    with pytest.raises(PeerTimeout):
+        peer.recv(timeout=0.1)  # stalled: queued message withheld
+    assert peer.recv(timeout=2.0) == "queued"  # heals after the window
+    # bypass_chaos (the death-drain path) ignores an active stall
+    q_in.put("drain")
+    time.sleep(0.05)
+    chaos.stall_for(5.0)
+    assert peer.recv(timeout=1.0, bypass_chaos=True) == "drain"
+    peer.close()
+
+
+def test_chaos_delay_slows_sends():
+    q_out: mp.Queue = mp.Queue()
+    chaos = ChaosState()
+    peer = QueuePeer(q_out, mp.Queue(), chaos=chaos)
+    chaos.delay(0.15, for_s=10.0)
+    t0 = time.monotonic()
+    peer.send("slow")
+    assert time.monotonic() - t0 >= 0.14
+    assert q_out.get(timeout=5.0) == "slow"
+    chaos.clear()
+    assert chaos.active()["delay_s"] == 0.0
+    peer.close()
+
+
+# ---------------------------------------------------------------------------
+# health state machine
+# ---------------------------------------------------------------------------
+
+def test_health_walk_alive_suspect_dead_rejoin():
+    h = PeerHealth(suspect_after=2, dead_after=4)
+    assert h.state == ALIVE and h.rank() == 0 and h.routable()
+    h.miss()
+    assert h.state == ALIVE  # one miss is noise
+    h.miss()
+    assert h.state == SUSPECT and h.routable()
+    h.miss()
+    assert h.state == SUSPECT
+    h.miss()
+    assert h.state == DEAD and not h.routable()
+    h.miss()  # dead is terminal to misses
+    assert h.state == DEAD
+    h.rejoining()
+    assert h.state == REJOINING and h.routable()
+    h.ok()
+    assert h.state == ALIVE and h.misses == 0
+
+
+def test_health_any_reply_snaps_back_to_alive():
+    h = PeerHealth(suspect_after=1, dead_after=4)
+    h.miss()
+    h.miss()
+    assert h.state == SUSPECT
+    h.ok()
+    assert h.state == ALIVE and h.misses == 0
+    # fresh misses start the walk over
+    h.miss()
+    assert h.state == SUSPECT
+
+
+def test_health_snapshot_shape():
+    h = PeerHealth()
+    h.miss()
+    snap = h.snapshot()
+    assert set(snap) == {"state", "misses", "transitions", "since_s"}
+    assert snap["misses"] == 1
