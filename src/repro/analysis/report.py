@@ -143,6 +143,23 @@ def profile_table(db, metric=None) -> str:
     return "\n".join(rows)
 
 
+def findings_table(findings) -> str:
+    """Diagnosis findings as a markdown table, most severe first.
+
+    Takes the :class:`~repro.diagnose.Finding` list produced by
+    :func:`~repro.diagnose.compute_findings` /
+    :func:`~repro.diagnose.regression_findings` (already sorted)."""
+    if not findings:
+        return "No findings: everything within thresholds and noise bands."
+    rows = ["| severity | kind | score | where | message |",
+            "|---|---|---|---|---|"]
+    for f in findings:
+        where = f.path or (f"pid {f.pid}" if f.pid >= 0 else f"ctx {f.ctx}")
+        rows.append(f"| {f.severity} | {f.kind} | {f.score:.2f} "
+                    f"| `{where}` | {f.message} |")
+    return "\n".join(rows)
+
+
 def diff_table(db_a, db_b, metric, top: int = 10, *, stat: str = "sum") -> str:
     """Cross-run regression table aligned on the unified CCT."""
     from repro.query import diff

@@ -17,6 +17,20 @@ import threading
 import numpy as np
 
 
+def imbalance_ratio(vmax, mean) -> np.ndarray:
+    """λ = max/mean, the classic load-imbalance metric, elementwise.
+
+    λ == 1 is perfect balance; λ == N means one worker carried everything.
+    Positions with mean <= 0 report 1.0 (an empty row is balanced, not
+    infinite) so the caller can threshold without special-casing.
+    """
+    vmax = np.asarray(vmax, dtype=np.float64)
+    mean = np.asarray(mean, dtype=np.float64)
+    out = np.ones_like(vmax, dtype=np.float64)
+    np.divide(vmax, mean, out=out, where=mean > 0)
+    return out
+
+
 def make_groups(sizes: np.ndarray, target_bytes: int) -> list[tuple[int, int]]:
     """Split contexts [0, n) into contiguous [lo, hi) groups of ~target_bytes.
 

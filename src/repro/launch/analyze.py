@@ -15,7 +15,15 @@ Query a completed database (``repro.query`` front end)::
     ... query runs/db diff runs/db_b --metric 3 --top 20
     ... query runs/db window --pid 0 --t0 0.0 --t1 1.0
 
-Every query subcommand prints one JSON document to stdout.
+Diagnose a database (trace-derived findings, optionally regressions vs a
+baseline fleet)::
+
+    PYTHONPATH=src python -m repro.launch.analyze diagnose runs/db \
+        [--baseline runs/baselines] [--metric 3] [--analyzers imbalance] \
+        [--markdown]
+
+Every query subcommand prints one JSON document to stdout; ``diagnose
+--markdown`` prints the findings table instead.
 """
 from __future__ import annotations
 
@@ -188,10 +196,74 @@ def _query_main(argv):
         print(json.dumps(out, indent=2))
 
 
+def _diagnose_main(argv):
+    from repro.analysis.report import findings_table
+    from repro.diagnose import (DEFAULT_ANALYZERS, BaselineFleet,
+                                compute_findings, regression_findings,
+                                sort_findings)
+    from repro.query import Database
+
+    ap = argparse.ArgumentParser(
+        prog="repro.launch.analyze diagnose",
+        description="Run the diagnosis analyzers over a database: "
+                    "trace-derived findings (load imbalance, stragglers, "
+                    "occupancy gaps) plus, with --baseline, regressions "
+                    "against a baseline fleet's noise bands.")
+    ap.add_argument("db", help="database directory (db.pms [+ db.trc])")
+    ap.add_argument("--baseline", default=None, metavar="DIR",
+                    help="baseline fleet: a database dir, or a dir of "
+                         "database dirs")
+    ap.add_argument("--metric", default="0",
+                    help="metric id (int) or registry name")
+    ap.add_argument("--stat", default="sum",
+                    choices=["sum", "mean", "min", "max", "count"])
+    ap.add_argument("--inclusive", action="store_true")
+    ap.add_argument("--analyzers", default=",".join(DEFAULT_ANALYZERS),
+                    help="comma-separated trace analyzers "
+                         "('' = regression-only)")
+    ap.add_argument("--z", type=float, default=3.0,
+                    help="noise-band width in baseline stddevs")
+    ap.add_argument("--rel-margin", type=float, default=0.05,
+                    help="relative margin floor under the z-band")
+    ap.add_argument("--min-value", type=float, default=0.0,
+                    help="ignore paths below this absolute value")
+    ap.add_argument("--limit", type=int, default=0,
+                    help="keep only the N most severe findings")
+    ap.add_argument("--markdown", action="store_true",
+                    help="print a findings table instead of JSON")
+    args = ap.parse_args(argv)
+
+    metric = _parse_metric(args.metric)
+    analyzers = tuple(a for a in args.analyzers.split(",") if a)
+    findings = []
+    with Database(args.db) as db:
+        if args.baseline:
+            with BaselineFleet.from_dir(args.baseline) as fleet:
+                findings += regression_findings(
+                    db, fleet, metric, stat=args.stat,
+                    inclusive=args.inclusive, z=args.z,
+                    rel_margin=args.rel_margin, min_value=args.min_value)
+        if analyzers:
+            findings += compute_findings(db, analyzers=analyzers,
+                                         metric=metric,
+                                         inclusive=args.inclusive)
+    findings = sort_findings(findings, args.limit or None)
+    if args.markdown:
+        print(findings_table(findings))
+    else:
+        print(json.dumps({"op": "diagnose", "db": args.db,
+                          "baseline": args.baseline,
+                          "count": len(findings),
+                          "findings": [f.as_dict() for f in findings]},
+                         indent=2))
+
+
 def main(argv=None):
     argv = list(sys.argv[1:] if argv is None else argv)
     if argv and argv[0] == "query":
         _query_main(argv[1:])
+    elif argv and argv[0] == "diagnose":
+        _diagnose_main(argv[1:])
     else:
         _aggregate_main(argv)
 

@@ -19,11 +19,23 @@ restart)::
     PYTHONPATH=src python -m repro.launch.serve query-server runs/live \
         --follow [--poll-ms 250] [--shards 4]
 
+Multi-tenant front (many named databases behind one listener, per-tenant
+admission budgets)::
+
+    PYTHONPATH=src python -m repro.launch.serve query-server \
+        --tenant teamA=runs/a --tenant teamB=runs/b,queue=64 [--follow]
+
 Live ingest endpoint (continuous uploads -> incremental aggregation ->
 versioned snapshots under the root)::
 
     PYTHONPATH=src python -m repro.launch.serve ingest runs/live \
         --port 8423 [--publish-every 64] [--retain 2] [--max-pending 256]
+
+Regression watch (follow live roots, print one JSON findings report per
+published epoch)::
+
+    PYTHONPATH=src python -m repro.launch.serve watch nightly=runs/live \
+        --baseline runs/baselines [--metric 0] [--poll-ms 250]
 
 Each server prints one JSON line with its URL, then blocks until SIGINT
 or SIGTERM.  SIGTERM drains gracefully: the endpoint stops accepting new
@@ -78,7 +90,17 @@ def _query_server_main(argv):
     from repro.serve.http import QueryHTTPServer
 
     ap = argparse.ArgumentParser(prog="repro.launch.serve query-server")
-    ap.add_argument("db", help="database directory (db.pms [+ db.cms/db.trc])")
+    ap.add_argument("db", nargs="?", default=None,
+                    help="database directory (db.pms [+ db.cms/db.trc]); "
+                         "omit when using --tenant")
+    ap.add_argument("--tenant", action="append", default=None,
+                    metavar="NAME=PATH[,queue=N]",
+                    help="serve a named database behind this front "
+                         "(repeatable -> multi-tenant: per-tenant "
+                         "admission queues and metric labels; queue=N "
+                         "overrides --max-queue for that tenant). "
+                         "PATH is a database dir, or a snapshot root "
+                         "under --follow")
     ap.add_argument("--host", default="127.0.0.1")
     ap.add_argument("--port", type=int, default=8422,
                     help="0 picks a free port (printed on startup)")
@@ -181,6 +203,8 @@ def _query_server_main(argv):
                 "contexts": db.n_contexts, "warm": srv.warm_report}
         if srv.switcher is not None:
             info["epoch"] = srv.switcher.epoch
+        if srv.multi_tenant:
+            info["tenants"] = sorted(srv.tenants)
         print(json.dumps(info), flush=True)
         sig = watch.wait()
         if sig == "sigterm":
@@ -198,7 +222,31 @@ def _query_server_main(argv):
             else:
                 print("obs-export: no spans recorded", file=sys.stderr)
 
-    if args.follow:
+    if bool(args.db) == bool(args.tenant):
+        ap.error("pass a db directory or --tenant name=path (not both)")
+
+    if args.tenant:
+        from contextlib import ExitStack
+
+        from repro.serve.tenant import parse_tenant_arg
+        specs = [parse_tenant_arg(s) for s in args.tenant]
+        queues = {name: q for name, _, q in specs if q is not None}
+        with ExitStack() as stack:
+            if args.follow:
+                # each tenant follows its own snapshot root
+                tenants = {name: path for name, path, _ in specs}
+            else:
+                tenants = {
+                    name: stack.enter_context(
+                        Database(path, cache_bytes=args.cache_mb << 20))
+                    for name, path, _ in specs}
+            srv = stack.enter_context(QueryHTTPServer(
+                tenants=tenants, tenant_queues=queues or None,
+                follow=args.follow, poll_ms=args.poll_ms,
+                follow_wait_s=args.follow_wait_s,
+                follow_cache_bytes=args.cache_mb << 20, **kwargs))
+            _serve(srv, srv.db)
+    elif args.follow:
         with QueryHTTPServer(args.db, follow=True, poll_ms=args.poll_ms,
                              follow_wait_s=args.follow_wait_s,
                              follow_cache_bytes=args.cache_mb << 20,
@@ -265,6 +313,69 @@ def _ingest_main(argv):
         print("shutting down", file=sys.stderr)
 
 
+def _watch_main(argv):
+    from repro.diagnose import RegressionWatch, WatchTarget
+
+    ap = argparse.ArgumentParser(
+        prog="repro.launch.serve watch",
+        description="Regression watch: follow live snapshot roots and "
+                    "print one JSON report line per published epoch — "
+                    "regressions vs a baseline fleet plus trace-derived "
+                    "findings (imbalance, stragglers, occupancy gaps).")
+    ap.add_argument("targets", nargs="+", metavar="NAME=ROOT",
+                    help="snapshot roots to follow, e.g. nightly=runs/live")
+    ap.add_argument("--baseline", default=None, metavar="DIR",
+                    help="baseline fleet: a database dir, or a dir of "
+                         "database dirs; per-context noise bands come "
+                         "from its variance")
+    ap.add_argument("--metric", default="0",
+                    help="metric id or name to compare (default 0)")
+    ap.add_argument("--stat", default="sum",
+                    choices=["sum", "mean", "max", "min", "count"])
+    ap.add_argument("--analyzers", default="imbalance,straggler,"
+                                           "occupancy_gap",
+                    help="comma-separated trace analyzers per epoch "
+                         "('' = regression-only)")
+    ap.add_argument("--poll-ms", type=float, default=250.0)
+    ap.add_argument("--z", type=float, default=3.0,
+                    help="noise-band width in baseline stddevs")
+    ap.add_argument("--rel-margin", type=float, default=0.05,
+                    help="relative margin floor under the z-band")
+    ap.add_argument("--min-value", type=float, default=0.0,
+                    help="ignore paths below this absolute value")
+    ap.add_argument("--wait-s", type=float, default=60.0,
+                    help="how long to wait for each target's first epoch")
+    args = ap.parse_args(argv)
+
+    metric = int(args.metric) if args.metric.lstrip("-").isdigit() \
+        else args.metric
+    analyzers = tuple(a for a in args.analyzers.split(",") if a)
+    targets = []
+    for spec in args.targets:
+        name, sep, root = spec.partition("=")
+        if not sep or not root:
+            ap.error(f"targets must be NAME=ROOT, got {spec!r}")
+        targets.append(WatchTarget(
+            name=name, root=root, baseline=args.baseline, metric=metric,
+            stat=args.stat, analyzers=analyzers, z=args.z,
+            rel_margin=args.rel_margin, min_value=args.min_value))
+
+    def on_report(report):
+        print(json.dumps(report.as_dict()), flush=True)
+
+    with RegressionWatch(targets, poll_ms=args.poll_ms, wait_s=args.wait_s,
+                         on_report=on_report) as watch:
+        watcher = _SignalWatch()
+        print(json.dumps({"watching": sorted(t.name for t in targets),
+                          "baseline": args.baseline,
+                          "poll_ms": args.poll_ms}), file=sys.stderr,
+              flush=True)
+        watcher.wait()
+        print(json.dumps({"status": watch.status()}), file=sys.stderr,
+              flush=True)
+    print("shutting down", file=sys.stderr)
+
+
 def _generate_main(argv):
     from repro.configs.base import get_arch, reduced
     from repro.models import params as PD
@@ -309,6 +420,8 @@ def main(argv=None):
         _query_server_main(argv[1:])
     elif argv and argv[0] == "ingest":
         _ingest_main(argv[1:])
+    elif argv and argv[0] == "watch":
+        _watch_main(argv[1:])
     else:
         _generate_main(argv)
 

@@ -274,42 +274,53 @@ class MetricsRegistry:
 
     # -- exposition ---------------------------------------------------------
 
-    def prometheus(self) -> str:
-        """Render every instrument as Prometheus text exposition 0.0.4."""
+    def prometheus(self, labels: str = "") -> str:
+        """Render every instrument as Prometheus text exposition 0.0.4.
+
+        ``labels`` (e.g. ``tenant="team-a"``) is merged into every sample
+        line — how a multi-tenant front exposes one registry per tenant
+        under shared series names.  Repeated same-type ``# TYPE`` lines
+        across tenants are valid exposition (and accepted by
+        tools/check_prom.py); only *conflicting* redeclarations are not.
+        """
         out: list[str] = []
+        suffix = f"{{{labels}}}" if labels else ""
         with self._lock:
             items = sorted(self._instruments.items())
         for name, (kind, inst) in items:
             base = f"{self.namespace}_{_prom_name(name)}"
             if kind == "counter":
                 out.append(f"# TYPE {base}_total counter")
-                out.append(f"{base}_total {inst.value}")
+                out.append(f"{base}_total{suffix} {inst.value}")
             elif kind == "gauge":
                 out.append(f"# TYPE {base} gauge")
-                out.append(f"{base} {_num(inst.value)}")
+                out.append(f"{base}{suffix} {_num(inst.value)}")
             elif kind == "hist":
                 out.append(f"# TYPE {base}_seconds histogram")
-                out.extend(inst._prom_lines(f"{base}_seconds"))
+                out.extend(inst._prom_lines(f"{base}_seconds", labels))
             elif kind == "family":
                 out.append(f"# TYPE {base}_seconds histogram")
                 for key, h in inst.items():
                     label = f'{_prom_name(inst.label)}="{key}"'
+                    if labels:
+                        label = f"{labels},{label}"
                     out.extend(h._prom_lines(f"{base}_seconds", label))
             elif kind == "group":
                 for key, val in sorted(inst.snapshot().items()):
                     series = f"{base}_{_prom_name(str(key))}"
                     if key in inst._gauges:
                         out.append(f"# TYPE {series} gauge")
-                        out.append(f"{series} {_num(val)}")
+                        out.append(f"{series}{suffix} {_num(val)}")
                     else:
                         out.append(f"# TYPE {series}_total counter")
-                        out.append(f"{series}_total {_num(val)}")
+                        out.append(f"{series}_total{suffix} {_num(val)}")
         return "\n".join(out) + "\n" if out else ""
 
     @staticmethod
-    def render(registries) -> str:
+    def render(registries, labels: str = "") -> str:
         """Concatenate several registries' expositions (``None`` skipped)."""
-        return "".join(r.prometheus() for r in registries if r is not None)
+        return "".join(r.prometheus(labels) for r in registries
+                       if r is not None)
 
 
 def _num(v) -> str:

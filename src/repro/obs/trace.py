@@ -34,9 +34,10 @@ from repro.obs.clock import monotime
 #: span phase names recorded by the serving stack (docs/observability.md);
 #: "failover" marks a request re-dispatched to a live replica after its
 #: owner died, "hedge" a duplicate dispatch fired at a replica after the
-#: p99-derived hedge delay
+#: p99-derived hedge delay, "watch" one epoch evaluation by the
+#: regression-watch service
 SPAN_PHASES = ("request", "queue_wait", "dispatch", "decode", "encode",
-               "merge", "replay", "failover", "hedge", "ingest")
+               "merge", "replay", "failover", "hedge", "ingest", "watch")
 
 _TRACE_ID_RE = re.compile(r"^[A-Za-z0-9._:\-]{1,64}$")
 

@@ -21,7 +21,8 @@ Quick start::
 """
 from repro.query.cache import LRUCache
 from repro.query.database import Database
-from repro.query.diff import DiffEntry, diff, total_delta
+from repro.query.diff import (DiffEntry, diff, metric_stats_by_path,
+                              total_delta)
 from repro.query.epoch import EpochSwitcher, wait_for_epoch
 from repro.query.export import to_dataframe
 from repro.query.select import (HotPath, StripeRow, context_aggregate,
@@ -35,7 +36,7 @@ __all__ = [
     "HotPath", "StripeRow", "select_contexts", "stripe_select",
     "threshold_contexts", "topk_hot_paths",
     "profile_aggregate", "context_aggregate",
-    "DiffEntry", "diff", "total_delta",
+    "DiffEntry", "diff", "metric_stats_by_path", "total_delta",
     "samples_in_window", "occupancy", "activity",
     "to_dataframe",
 ]

@@ -142,6 +142,18 @@ class Database:
     def has_traces(self) -> bool:
         return self._trc is not None
 
+    def trace_lengths(self) -> np.ndarray:
+        """Per-profile trace sample counts straight from the in-memory toc.
+
+        Zero segment decodes: the toc's second column *is* the sample
+        count, so rank-activity shape (who sampled how much) is readable
+        at file-open cost — the straggler analyzer's whole input.  Empty
+        array when the database carries no trace store.
+        """
+        if self._trc is None:
+            return np.zeros(0, dtype=np.int64)
+        return self._trc.toc[:, 1].astype(np.int64)
+
     def identity(self, pid: int) -> dict | None:
         return self._pms.identity(pid)
 

@@ -11,6 +11,8 @@
 * :class:`QueryHTTPServer` / :class:`QueryClient` — the stdlib HTTP
   transport and its typed client (:mod:`repro.serve.http` / ``client``),
   with :class:`RetryPolicy` for client-side backoff;
+* :class:`TenantBackend` — one named tenant's engine/scheduler/follower
+  stack behind a shared multi-tenant front (:mod:`repro.serve.tenant`);
 * :func:`warm_cache` — stats-driven startup plane preloading
   (:mod:`repro.serve.warm`).
 """
@@ -22,6 +24,7 @@ from repro.serve.engine import (QueryError, QueryRequest, QueryServer,
 from repro.serve.http import QueryHTTPServer
 from repro.serve.scheduler import BatchScheduler, Overloaded
 from repro.serve.shard import ConsistentHashRing, ShardedQueryServer
+from repro.serve.tenant import TenantBackend, parse_tenant_arg
 from repro.serve.warm import plan_warm, warm_cache
 
 __all__ = [
@@ -31,5 +34,6 @@ __all__ = [
     "ShardedQueryServer", "ConsistentHashRing",
     "QueryHTTPServer", "QueryClient", "JSONClient", "ServerOverloaded",
     "RequestFailed", "TransportError", "RetryPolicy", "RetryBudgetExceeded",
+    "TenantBackend", "parse_tenant_arg",
     "plan_warm", "warm_cache",
 ]

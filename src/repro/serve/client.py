@@ -29,7 +29,9 @@ import json
 import random
 import time
 from dataclasses import dataclass, field
+from urllib.parse import urlencode
 
+from repro.diagnose.findings import Finding
 from repro.serve.engine import QueryError, QueryRequest
 from repro.serve.wire import request_to_wire, result_from_wire
 
@@ -185,6 +187,15 @@ class JSONClient:
 
 
 class QueryClient(JSONClient):
+    """``tenant=`` pins every call this client makes to one named tenant
+    on a multi-tenant front (sent as the ``tenant`` envelope field /
+    ``?tenant=`` query parameter); ``None`` keeps the historical
+    default-tenant behavior."""
+
+    def __init__(self, host: str, port: int, *, timeout_s: float = 30.0,
+                 tenant: str | None = None):
+        super().__init__(host, port, timeout_s=timeout_s)
+        self.tenant = tenant
 
     # -- batched query surface -------------------------------------------------
     def batch(self, requests: list[QueryRequest], *,
@@ -197,6 +208,8 @@ class QueryClient(JSONClient):
         body: dict = {"requests": [request_to_wire(r) for r in requests]}
         if timeout_ms is not None:
             body["timeout_ms"] = timeout_ms
+        if self.tenant is not None:
+            body["tenant"] = self.tenant
         hdrs = {"X-Trace-Id": trace_id} if trace_id else None
         obj = self._roundtrip("POST", "/v1/query", body, headers=hdrs)
         self.last_trace_id = obj.get("trace_id")
@@ -241,6 +254,30 @@ class QueryClient(JSONClient):
 
     def window(self, pid: int, t0: float, t1: float):
         return self._one(QueryRequest(op="window", pid=pid, t0=t0, t1=t1))
+
+    def findings(self, *, metric=None, inclusive: bool = False,
+                 analyzers=None, limit: int = 0,
+                 trace_id: str | None = None) -> list:
+        """Run the diagnosis analyzers server-side (``GET /v1/findings``)
+        and return typed :class:`~repro.diagnose.Finding` records, most
+        severe first.  ``analyzers`` limits the pass (e.g.
+        ``("imbalance",)``); default runs the full trace-derived set."""
+        q: dict = {}
+        if self.tenant is not None:
+            q["tenant"] = self.tenant
+        if metric is not None:
+            q["metric"] = metric
+        if inclusive:
+            q["inclusive"] = "1"
+        if analyzers:
+            q["analyzers"] = ",".join(analyzers)
+        if limit:
+            q["limit"] = int(limit)
+        path = "/v1/findings" + (f"?{urlencode(q)}" if q else "")
+        hdrs = {"X-Trace-Id": trace_id} if trace_id else None
+        obj = self._roundtrip("GET", path, headers=hdrs)
+        self.last_trace_id = obj.get("trace_id")
+        return [Finding.from_dict(row) for row in obj.get("findings", [])]
 
     # -- service introspection --------------------------------------------------
     def health(self) -> dict:

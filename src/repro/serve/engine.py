@@ -157,7 +157,32 @@ class QueryServer:
                 inclusive=req.inclusive, **params)
         if req.op == "window":
             return samples_in_window(db, req.pid, req.t0, req.t1)
+        if req.op == "findings":
+            return self._findings(req, db)
         raise ValueError(f"unknown query op {req.op!r}")
+
+    @staticmethod
+    def _findings(req: QueryRequest, db, within_ctx=None, within_pid=None):
+        """The ``findings`` op body: run the scatter-clean analyzers.
+
+        ``params`` carries the analyzer selection and threshold overrides
+        (``analyzers``, ``thresholds``, ``limit``); ``metric``/``inclusive``
+        pick the metric the imbalance analyzer reads.  The ownership masks
+        are supplied by shard workers — a single-process server passes
+        None and diagnoses everything.
+        """
+        from repro.diagnose import compute_findings
+        params = dict(req.params)
+        analyzers = params.pop("analyzers", None)
+        thresholds = params.pop("thresholds", None)
+        limit = int(params.pop("limit", 0) or 0)
+        if params:
+            raise ValueError(f"unknown findings params {sorted(params)}; "
+                             f"known: analyzers, thresholds, limit")
+        return compute_findings(
+            db, analyzers=analyzers, metric=req.metric,
+            inclusive=req.inclusive, limit=limit, thresholds=thresholds,
+            within_ctx=within_ctx, within_pid=within_pid)
 
     # -- batched serving ----------------------------------------------------
     @staticmethod

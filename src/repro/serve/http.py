@@ -15,6 +15,13 @@ Endpoints::
                       -> 200 {"results": [...], "trace_id": "..."}
                       -> 429 + Retry-After when admission control rejects
                       -> 400 on malformed JSON envelopes
+                      ?tenant= (or a "tenant" envelope field) routes to a
+                      named tenant on a multi-tenant front; unknown -> 404
+    GET  /v1/findings diagnosis findings for a tenant's current epoch
+                      (?tenant=, ?metric=, ?inclusive=1, ?analyzers=a,b,
+                      ?limit=N) -> {"findings": [...], "count": N};
+                      admitted through the tenant's scheduler like any
+                      query, so it 429s under that tenant's overload
     GET  /healthz     liveness + database identity
     GET  /metrics     cache hit/miss/eviction counters, queue depth,
                       admission counters, per-op latency histograms (JSON);
@@ -46,15 +53,23 @@ from urllib.parse import parse_qs, urlsplit
 from repro.obs import (MetricsRegistry, configure, mint_trace_id, monotime,
                        recorder, valid_trace_id)
 from repro.query.database import Database
-from repro.query.epoch import EpochSwitcher, wait_for_epoch
-from repro.serve.engine import QueryError, QueryServer
+from repro.query.epoch import EpochSwitcher
+from repro.serve.engine import QueryError
 from repro.serve.scheduler import BatchScheduler, Overloaded
 from repro.serve.shard import ShardedQueryServer
-from repro.serve.warm import warm_cache
+from repro.serve.tenant import TenantBackend
 from repro.serve.wire import request_from_wire, result_to_wire
 
 MAX_BODY_BYTES = 16 << 20
 MAX_REQUESTS_PER_CALL = 1024
+
+#: tenant name used when the server fronts a single database (the
+#: historical mode): requests that name no tenant route here
+DEFAULT_TENANT = "default"
+
+#: envelope-only keys of a /v1/query body (everything else in a
+#: single-request sugar body is the request itself)
+_ENVELOPE_KEYS = ("requests", "timeout_ms", "tenant")
 
 
 class _CappedThreadingHTTPServer(ThreadingHTTPServer):
@@ -146,9 +161,21 @@ class QueryHTTPServer:
     to the sharded engine (R-way ownership, shm vs tcp peer links, hedged
     reads); ``max_connections`` caps concurrent keep-alive connections —
     connection cap+1 gets a pre-thread ``429`` + ``Retry-After``.
+
+    ``tenants={name: db_or_root, ...}`` (instead of ``db``) serves many
+    named databases behind the one listener: each tenant gets its own
+    :class:`~repro.serve.tenant.TenantBackend` — engine, scheduler with
+    its own admission budget (override per tenant via
+    ``tenant_queues={name: N}``), epoch follower — and requests route by
+    ``?tenant=`` / the ``"tenant"`` envelope field.  The single-``db``
+    form is exactly a one-tenant front named ``"default"``, and the
+    historical attribute surface (``srv.db``, ``srv.scheduler``, ...)
+    reads through to it.
     """
 
-    def __init__(self, db, *, host: str = "127.0.0.1",
+    def __init__(self, db=None, *, tenants: dict | None = None,
+                 tenant_queues: dict | None = None,
+                 host: str = "127.0.0.1",
                  port: int = 0, batching: bool = True, max_batch: int = 16,
                  max_wait_ms: float = 0.0, max_queue: int = 256,
                  executor: str = "threads", n_workers: int = 4,
@@ -165,46 +192,38 @@ class QueryHTTPServer:
                  trace_ring: int | None = None):
         if trace_ring is not None:
             # size (or disable, with 0) this process's flight recorder;
-            # the sharded engine below inherits the same capacity for
-            # its workers
+            # the sharded engines below inherit the same capacity for
+            # their workers
             configure(trace_ring)
-        self.switcher: EpochSwitcher | None = None
         self._poll_s = max(float(poll_ms), 1.0) / 1e3
-        if follow:
-            # ``db`` is the snapshot ROOT (the ingest tier's output dir),
-            # not a Database: open whatever CURRENT points at and track it
-            root = str(db)
-            wait_for_epoch(root, timeout_s=follow_wait_s)
-            self.switcher = EpochSwitcher(root, cache_bytes=follow_cache_bytes)
-            self._db = None
-        elif isinstance(db, (str, bytes)) or hasattr(db, "__fspath__"):
-            raise TypeError("pass an open Database (or follow=True with a "
-                            "snapshot root)")
-        else:
-            self._db = db
-        db = self.db  # current Database from here on, either source
-        self.shards = max(0, int(shards))
-        self.sharded: ShardedQueryServer | None = None
-        if self.shards:
-            self.sharded = ShardedQueryServer(
-                db.db_dir, self.shards,
-                cache_bytes=shard_cache_bytes or db.cache.capacity_bytes,
-                warm_bytes=warm_bytes, n_slabs=shard_slabs,
-                slab_bytes=shard_slab_bytes, replicas=replicas,
-                transport=shard_transport, hedge_ms=hedge_ms)
-            self.engine = self.sharded
-        else:
-            self.engine = QueryServer(db)
-        self.host, self._port = host, int(port)
-        self.batching = bool(batching)
-        self.scheduler = BatchScheduler(
-            self.engine, max_batch=max_batch, max_wait_ms=max_wait_ms,
+        backend_kw = dict(
+            follow=follow, follow_wait_s=follow_wait_s,
+            follow_cache_bytes=follow_cache_bytes, batching=batching,
+            max_batch=max_batch, max_wait_ms=max_wait_ms,
             max_queue=max_queue, executor=executor, n_workers=n_workers,
-            default_timeout_s=default_timeout_s,
-            adaptive_wait=adaptive_wait) if self.batching else None
-        self._warm_bytes = warm_bytes
+            default_timeout_s=default_timeout_s, adaptive_wait=adaptive_wait,
+            warm_bytes=warm_bytes, shards=shards,
+            shard_cache_bytes=shard_cache_bytes,
+            shard_slab_bytes=shard_slab_bytes, shard_slabs=shard_slabs,
+            replicas=replicas, shard_transport=shard_transport,
+            hedge_ms=hedge_ms)
+        self.tenants: dict[str, TenantBackend] = {}
+        if tenants:
+            if db is not None:
+                raise TypeError("pass either db or tenants=, not both")
+            for name, target in tenants.items():
+                kw = dict(backend_kw)
+                if tenant_queues and name in tenant_queues:
+                    kw["max_queue"] = int(tenant_queues[name])
+                self.tenants[name] = TenantBackend(name, target, **kw)
+        else:
+            self.tenants[DEFAULT_TENANT] = TenantBackend(
+                DEFAULT_TENANT, db, **backend_kw)
+        self._default = next(iter(self.tenants.values()))
+        self.multi_tenant = len(self.tenants) > 1
+        self.host, self._port = host, int(port)
+        self.batching = self._default.batching
         self.max_connections = max(0, int(max_connections))
-        self.warm_report: dict | None = None
         self._draining = False
         self._inflight = 0
         self._inflight_lock = threading.Lock()
@@ -213,57 +232,75 @@ class QueryHTTPServer:
         self._follower: threading.Thread | None = None
         self._follow_stop = threading.Event()
         self.obs = MetricsRegistry()
-        self._reopen_hist = self.obs.histogram("http.epoch_reopen")
         self._http = self.obs.group("http", {"requests": 0})
         self.obs.gauge("http.uptime_s",
                        lambda: max(monotime() - self._started_t, 0.0))
         self.obs.gauge("http.trace_ring_spans",
                        lambda: recorder().recorded)
-        self._follow_errors = 0
         self._started_t = 0.0
 
+    # -- single-tenant compatibility surface ----------------------------------
+    # The historical one-database API (``srv.db``, ``srv.scheduler``, ...)
+    # reads through to the *default* backend — the only one in
+    # single-tenant mode — so every existing caller keeps working.
     @property
     def db(self) -> Database:
-        """The database answering *new* calls right now.  Under
-        ``follow=True`` this moves when an epoch publishes; in-flight
-        batches keep serving their pinned epoch regardless."""
-        if self.switcher is not None:
-            return self.switcher.db
-        return self._db
+        """The database answering *new* calls right now (default tenant).
+        Under ``follow=True`` this moves when an epoch publishes;
+        in-flight batches keep serving their pinned epoch regardless."""
+        return self._default.db
+
+    @property
+    def engine(self):
+        return self._default.engine
+
+    @property
+    def scheduler(self) -> BatchScheduler | None:
+        return self._default.scheduler
+
+    @property
+    def sharded(self) -> ShardedQueryServer | None:
+        return self._default.sharded
+
+    @property
+    def switcher(self) -> EpochSwitcher | None:
+        return self._default.switcher
+
+    @property
+    def shards(self) -> int:
+        return self._default.shards
+
+    @property
+    def warm_report(self) -> dict | None:
+        return self._default.warm_report
+
+    @property
+    def _follow_errors(self) -> int:
+        return sum(b.follow_errors for b in self.tenants.values())
+
+    def tenant(self, name: str | None = None) -> TenantBackend:
+        """Resolve a tenant name to its backend (``None`` -> default)."""
+        if name is None or name == "":
+            return self._default
+        try:
+            return self.tenants[name]
+        except KeyError:
+            raise _UnknownTenant(
+                f"unknown tenant {name!r}; serving "
+                f"{sorted(self.tenants)}") from None
 
     # -- epoch following ------------------------------------------------------
     def _follow_loop(self) -> None:
         while not self._follow_stop.wait(self._poll_s):
-            try:
-                if not self.switcher.poll():
-                    continue
-                t0 = monotime()
-                if self.sharded is not None:
-                    # all workers swing together; the window lock inside
-                    # reopen() keeps every dispatch single-epoch
-                    self.sharded.reopen(self.switcher.db.db_dir)
-                else:
-                    # in-process: future batches default to the new epoch;
-                    # in-flight ones hold pins on the old handle
-                    self.engine.db = self.switcher.db
-                self._reopen_hist.observe(monotime() - t0)
-            except Exception:                               # noqa: BLE001
-                # a torn transition (e.g. SnapshotGone racing GC) is
-                # retried on the next poll; keep serving the old epoch
-                self._follow_errors += 1
+            for b in self.tenants.values():
+                b.poll_follow()
 
     # -- lifecycle -----------------------------------------------------------
     def start(self) -> "QueryHTTPServer":
         if self._httpd is not None:
             return self
-        if self.sharded is not None:
-            # workers warm their own caches for only the planes they own
-            self.sharded.start()
-            self.warm_report = {"sharded": self.sharded.warm_reports()}
-        elif self._warm_bytes is None or self._warm_bytes > 0:
-            self.warm_report = warm_cache(self.db, self._warm_bytes or None)
-        if self.scheduler is not None:
-            self.scheduler.start()
+        for b in self.tenants.values():
+            b.start()
         service = self
 
         class Handler(_QueryHandler):
@@ -278,7 +315,7 @@ class QueryHTTPServer:
                                         kwargs={"poll_interval": 0.1},
                                         daemon=True, name="serve-http")
         self._thread.start()
-        if self.switcher is not None:
+        if any(b.switcher is not None for b in self.tenants.values()):
             self._follow_stop.clear()
             self._follower = threading.Thread(target=self._follow_loop,
                                               daemon=True,
@@ -330,12 +367,8 @@ class QueryHTTPServer:
         if self._thread is not None:
             self._thread.join(timeout=10.0)
             self._thread = None
-        if self.scheduler is not None:
-            self.scheduler.stop()
-        if self.sharded is not None:
-            self.sharded.close()
-        if self.switcher is not None:
-            self.switcher.close()
+        for b in self.tenants.values():
+            b.stop()
 
     @property
     def address(self) -> tuple[str, int]:
@@ -362,11 +395,18 @@ class QueryHTTPServer:
                "uptime_s": round(monotime() - self._started_t, 3)}
         if self.switcher is not None:
             out["epoch"] = self.switcher.epoch
+        if self.multi_tenant:
+            out["tenants"] = {name: b.health_fragment()
+                              for name, b in self.tenants.items()}
         return out
 
     def metrics(self) -> dict:
-        out = {"cache": self.db.cache_stats(),
-               "db_counters": dict(self.db.counters),
+        # the top level keeps the exact historical single-tenant shape
+        # (read through to the default backend); multi-tenant fronts add a
+        # per-tenant breakdown under "tenants"
+        d = self._default
+        out = {"cache": d.db.cache_stats(),
+               "db_counters": dict(d.db.counters),
                "http_requests": self._http["requests"],
                "connections": {
                    "cap": self.max_connections,
@@ -376,62 +416,77 @@ class QueryHTTPServer:
                                 if self._httpd is not None else 0),
                    "draining": self._draining,
                },
-               "warm": self.warm_report,
+               "warm": d.warm_report,
                "uptime_s": round(monotime() - self._started_t, 3)}
-        out["scheduler"] = (self.scheduler.metrics()
-                            if self.scheduler is not None else None)
-        out["shards"] = (self.sharded.metrics()
-                         if self.sharded is not None else None)
-        if self.switcher is not None:
-            out["epoch"] = {"current": self.switcher.epoch,
-                            "transitions": self.switcher.transitions,
-                            "follow_errors": self._follow_errors,
-                            "reopen": self._reopen_hist.as_dict()}
+        frag = d.metrics_fragment()
+        out["scheduler"] = frag["scheduler"]
+        out["shards"] = frag["shards"]
+        if "epoch" in frag:
+            out["epoch"] = frag["epoch"]
+        if self.multi_tenant:
+            out["tenants"] = {name: b.metrics_fragment()
+                              for name, b in self.tenants.items()}
         return out
 
     def prometheus(self) -> str:
         """Every subsystem's registry, concatenated as one exposition —
         distinct name prefixes (http/db/scheduler/shard) keep the merged
-        output collision-free."""
-        return MetricsRegistry.render([
-            self.obs,
-            getattr(self.db, "obs", None),
-            self.scheduler.obs if self.scheduler is not None else None,
-            self.sharded.obs if self.sharded is not None else None,
-        ])
+        output collision-free.  A multi-tenant front renders each
+        backend's registries with a ``tenant="name"`` label so samples
+        stay attributable after aggregation."""
+        if not self.multi_tenant:
+            return MetricsRegistry.render(
+                [self.obs] + self._default.registries())
+        parts = [self.obs.prometheus()]
+        for name, b in self.tenants.items():
+            parts.append(MetricsRegistry.render(
+                b.registries(), labels=f'tenant="{name}"'))
+        return "".join(parts)
 
     def debug_spans(self, limit: int = 256) -> dict:
         """The ``GET /debug/spans`` body: this process's flight recorder
         (which includes worker spans shipped back on replies)."""
         return recorder().as_dict(limit=limit)
 
-    def serve_call(self, body: dict, trace_id: str | None = None) -> dict:
+    def serve_call(self, body: dict, trace_id: str | None = None,
+                   tenant: str | None = None) -> dict:
         """One ``/v1/query`` call: parse, admit, await, serialize.
 
         ``trace_id`` (the ``X-Trace-Id`` header) or a ``trace_id``
         envelope field is propagated; anything missing or malformed is
         replaced by a freshly minted id.  Requests that already carry
         their own valid ``trace_id`` keep it.
+
+        ``tenant`` (the ``?tenant=`` query parameter) or a ``tenant``
+        envelope field routes the whole call to that tenant's backend —
+        its scheduler admits (or 429s) the call against *its own* queue
+        budget, so one tenant at its limit cannot shed a neighbor's
+        traffic.  Unnamed calls go to the default (first) tenant.
         """
         call_t0 = monotime()
+        backend = self.tenant(tenant if tenant else body.get("tenant"))
         tid = trace_id if valid_trace_id(trace_id) else None
         if tid is None:
             env_tid = body.get("trace_id")
             tid = env_tid if valid_trace_id(env_tid) else mint_trace_id()
         raw = body.get("requests")
         if raw is None and "op" in body:
-            raw = [body]  # single-request sugar
+            # single-request sugar: the body IS the request, minus any
+            # envelope-only keys riding alongside it
+            raw = [{k: v for k, v in body.items()
+                    if k not in _ENVELOPE_KEYS}]
         if not isinstance(raw, list) or not raw:
             raise _BadRequest("body needs a non-empty 'requests' list")
         if len(raw) > MAX_REQUESTS_PER_CALL:
             raise _CallTooLarge(
                 f"at most {MAX_REQUESTS_PER_CALL} requests per call")
-        if self.scheduler is not None and len(raw) > self.scheduler.max_queue:
+        scheduler = backend.scheduler
+        if scheduler is not None and len(raw) > scheduler.max_queue:
             # could never be admitted: a retrying client would loop forever
             # on 429, so answer non-retryably
             raise _CallTooLarge(
                 f"call of {len(raw)} requests exceeds the admission bound "
-                f"({self.scheduler.max_queue}); split it")
+                f"({scheduler.max_queue}); split it")
         timeout_ms = body.get("timeout_ms")
         try:
             timeout_s = (float(timeout_ms) / 1e3 if timeout_ms is not None
@@ -458,14 +513,15 @@ class QueryHTTPServer:
         # batch to one epoch handle: a concurrent epoch switch retires the
         # old database but these requests keep reading it (the sharded
         # backend instead pins whole dispatch windows inside reopen())
-        pin = (self.switcher.acquire()
-               if self.switcher is not None and self.sharded is None else None)
+        pin = (backend.switcher.acquire()
+               if backend.switcher is not None and backend.sharded is None
+               else None)
         try:
-            if self.scheduler is not None:
-                futures = iter(self.scheduler.submit_many(
+            if scheduler is not None:
+                futures = iter(scheduler.submit_many(
                     live, timeout_s=timeout_s, pin=pin))
                 deadline = monotime() + (
-                    timeout_s or self.scheduler.default_timeout_s)
+                    timeout_s or scheduler.default_timeout_s)
                 results = []
                 for r in reqs:
                     if r is None:
@@ -480,9 +536,10 @@ class QueryHTTPServer:
                             op=r.op, error="DeadlineExceeded",
                             message="result wait timed out"))
             else:
-                served = iter(self.engine.serve(live, db=pin.db)
+                engine = backend.engine
+                served = iter(engine.serve(live, db=pin.db)
                               if pin is not None
-                              else self.engine.serve(live))
+                              else engine.serve(live))
                 results = [None if r is None else next(served) for r in reqs]
         finally:
             if pin is not None:
@@ -500,11 +557,70 @@ class QueryHTTPServer:
                        attrs={"n": len(wire)})
             rec.record("request", "call", call_t0, now - call_t0,
                        trace_id=tid, attrs={"n": len(wire)})
-        return {"results": wire, "trace_id": tid}
+        out = {"results": wire, "trace_id": tid}
+        if self.multi_tenant:
+            out["tenant"] = backend.name
+        return out
+
+    def findings_call(self, query: dict, trace_id: str | None = None) -> dict:
+        """The ``GET /v1/findings`` body: run the diagnosis analyzers on a
+        tenant's current epoch through the normal admission path.
+
+        ``query`` holds flat string query parameters: ``tenant``,
+        ``metric`` (id or name), ``inclusive`` (0/1), ``analyzers``
+        (comma-separated), ``limit``.  Delegates to :meth:`serve_call`, so
+        admission (429), epoch pinning, and tracing behave exactly like a
+        POSTed ``findings`` op.
+        """
+        known = {"tenant", "metric", "inclusive", "analyzers", "limit"}
+        unknown = set(query) - known
+        if unknown:
+            raise _BadRequest(f"unknown query parameters {sorted(unknown)}; "
+                              f"known: {sorted(known)}")
+        req: dict = {"op": "findings"}
+        metric = query.get("metric")
+        if metric is not None:
+            req["metric"] = (int(metric) if metric.lstrip("-").isdigit()
+                             else metric)
+        if query.get("inclusive", "") in ("1", "true", "yes"):
+            req["inclusive"] = True
+        params: dict = {}
+        if "analyzers" in query:
+            params["analyzers"] = [a for a in query["analyzers"].split(",")
+                                   if a]
+        if "limit" in query:
+            try:
+                params["limit"] = int(query["limit"])
+            except ValueError:
+                raise _BadRequest(
+                    f"limit must be an integer, got "
+                    f"{query['limit']!r}") from None
+        if params:
+            req["params"] = params
+        out = self.serve_call({"requests": [req]}, trace_id=trace_id,
+                              tenant=query.get("tenant"))
+        res = out["results"][0]
+        if res.get("kind") == "error":
+            # analyzer/metric parameter problems surface as per-request
+            # errors; for this single-request endpoint they are the
+            # caller's fault -> 400
+            if res.get("error") in ("ValueError", "KeyError", "BadRequest"):
+                raise _BadRequest(res.get("message", "bad findings request"))
+            raise RuntimeError(
+                f"{res.get('error')}: {res.get('message', '')}")
+        body = {"findings": res.get("rows", []), "trace_id": out["trace_id"]}
+        body["count"] = len(body["findings"])
+        if "tenant" in out:
+            body["tenant"] = out["tenant"]
+        return body
 
 
 class _BadRequest(ValueError):
     pass
+
+
+class _UnknownTenant(ValueError):
+    """Named tenant is not served here: 404, routing error, do not retry."""
 
 
 class _CallTooLarge(ValueError):
@@ -557,14 +673,50 @@ class _QueryHandler(BaseHTTPRequestHandler):
             except ValueError:
                 limit = 256
             self._send_json(200, svc.debug_spans(limit=max(1, limit)))
+        elif parts.path == "/v1/findings":
+            if svc._draining:
+                self.close_connection = True
+                self._send_json(503, {"error": "Draining",
+                                      "message": "server is draining; retry "
+                                                 "against another instance"},
+                                {"Retry-After": "1", "Connection": "close"})
+                return
+            svc._http.inc("requests")
+            with svc._inflight_lock:
+                svc._inflight += 1
+            try:
+                flat = {k: v[0] for k, v in query.items()}
+                out = svc.findings_call(
+                    flat, trace_id=self.headers.get("X-Trace-Id"))
+                self._send_json(200, out,
+                                {"X-Trace-Id": out.get("trace_id", "-")})
+            except _UnknownTenant as e:
+                self._send_json(404, {"error": "UnknownTenant",
+                                      "message": str(e)})
+            except _BadRequest as e:
+                self._send_json(400, {"error": "BadRequest",
+                                      "message": str(e)})
+            except Overloaded as e:
+                self._send_json(
+                    429, {"error": "Overloaded",
+                          "retry_after_s": e.retry_after_s},
+                    {"Retry-After": str(max(1, math.ceil(e.retry_after_s)))})
+            except Exception as e:  # noqa: BLE001 - last-resort 500
+                self._send_json(500, {"error": type(e).__name__,
+                                      "message": str(e)})
+            finally:
+                with svc._inflight_lock:
+                    svc._inflight -= 1
         else:
             self._send_json(404, {"error": "NotFound", "path": self.path})
 
     def do_POST(self):  # noqa: N802 - stdlib casing
         svc = self.service
-        if self.path != "/v1/query":
+        parts = urlsplit(self.path)
+        if parts.path != "/v1/query":
             self._send_json(404, {"error": "NotFound", "path": self.path})
             return
+        tenant = parse_qs(parts.query).get("tenant", [None])[0]
         if svc._draining:
             # structured shed: a retrying client or LB moves elsewhere;
             # close so the slot frees for the drain to complete
@@ -592,9 +744,12 @@ class _QueryHandler(BaseHTTPRequestHandler):
             if not isinstance(body, dict):
                 raise _BadRequest("body must be a JSON object")
             out = svc.serve_call(body,
-                                 trace_id=self.headers.get("X-Trace-Id"))
+                                 trace_id=self.headers.get("X-Trace-Id"),
+                                 tenant=tenant)
             self._send_json(200, out,
                             {"X-Trace-Id": out.get("trace_id", "-")})
+        except _UnknownTenant as e:
+            self._send_json(404, {"error": "UnknownTenant", "message": str(e)})
         except _CallTooLarge as e:
             self._send_json(413, {"error": "CallTooLarge", "message": str(e)})
         except (_BadRequest, json.JSONDecodeError, UnicodeDecodeError) as e:

@@ -100,8 +100,12 @@ class BatchScheduler:
                  max_wait_ms: float = 0.0, max_queue: int = 256,
                  executor: str = "threads", n_workers: int = 4,
                  default_timeout_s: float = 30.0,
-                 adaptive_wait: bool = True):
+                 adaptive_wait: bool = True, tenant: str = ""):
         self.server = server
+        # multi-tenant fronts run one scheduler per tenant: ``max_queue``
+        # is then that tenant's admission budget, and the name rides the
+        # metrics so rejections are attributable
+        self.tenant = str(tenant)
         self.max_batch = max(1, int(max_batch))
         self.max_wait_s = max(0.0, float(max_wait_ms)) / 1e3
         self.max_queue = max(1, int(max_queue))
@@ -484,6 +488,8 @@ class BatchScheduler:
         with self._lock:
             out = dict(self.counters)
             out["queue_depth"] = len(self._q) + self._inflight_depth()
+            if self.tenant:
+                out["tenant"] = self.tenant
             out["n_shards"] = self.n_shards
             out["direct_dispatch"] = self._direct
             if self._direct:

@@ -32,12 +32,13 @@ Topology::
   router prefers health (alive > rejoining > suspect, never dead), then
   least backlog in ``spill_pending`` quanta (hot planes spread over their
   replicas, cold planes stay put), then replica rank.
-* **scatter–gather** — summary-space queries (``topk``, ``threshold``)
-  fan out over the *live* shard set; each member answers the slice of
-  contexts the ring assigns it under that live set (``within=`` on the
-  select functions) and the parent merges partials in the same
-  deterministic ``(-value, ctx)`` order, so results are identical to
-  single-process serving for any live set.
+* **scatter–gather** — summary-space queries (``topk``, ``threshold``,
+  ``findings``) fan out over the *live* shard set; each member answers
+  the slice of contexts (and, for findings, profiles) the ring assigns
+  it under that live set (``within=`` on the select functions, ownership
+  masks on the analyzers) and the parent merges partials in the same
+  deterministic order the single-process path uses, so results are
+  identical to single-process serving for any live set.
 * **payloads** — with the same-host ``shm`` transport, plane-sized results
   return through a parent-owned :class:`~repro.runtime.shm.SlabArena`
   (the PR 3 slab transport): the worker serializes straight into the slab
@@ -86,8 +87,10 @@ from repro.serve.transport import (ChaosState, PeerClosed, PeerError,
                                    TcpListener, connect_peer)
 
 #: summary-space ops served by every shard over its owned contexts and
-#: merged in the parent (all other ops route to exactly one shard)
-SCATTER_OPS = ("topk", "threshold")
+#: merged in the parent (all other ops route to exactly one shard);
+#: "findings" additionally partitions per-rank analyzers by profile
+#: ownership
+SCATTER_OPS = ("topk", "threshold", "findings")
 
 #: worker replies per response-queue message (latency/throughput balance)
 _REPLY_CHUNK = 16
@@ -253,6 +256,18 @@ class ConsistentHashRing:
         mask[self.owned_contexts(n_contexts, shard, live)] = True
         return mask
 
+    def owned_profile_mask(self, n_profiles: int, shard: int,
+                           live=None) -> np.ndarray:
+        """Boolean ownership over profile ids (``(0, pid)`` keys) — the
+        per-rank partition the findings analyzers scatter over.  Like
+        :meth:`owned_context_mask`, any live set partitions the id space:
+        disjoint across members, complete in union."""
+        mask = np.zeros(int(n_profiles), dtype=bool)
+        owned = [p for p in range(int(n_profiles))
+                 if self.assigned_shard((0, p), live) == int(shard)]
+        mask[owned] = True
+        return mask
+
     def plane_role(self, store: str, oid: int, shard: int) -> int | None:
         """Replica rank of ``shard`` for a plane (0 = primary, 1.. =
         replica), or None when the shard does not own it.  PMS/trace
@@ -342,10 +357,12 @@ def _decode_payload(payload, slab_view):
 # worker process
 # ---------------------------------------------------------------------------
 
-def _serve_scatter(db, owned_ctx: np.ndarray, req: QueryRequest):
+def _serve_scatter(db, owned_ctx: np.ndarray, req: QueryRequest,
+                   owned_pid: np.ndarray | None = None):
     """One shard's partial answer to a scatter query, restricted to the
-    contexts it owns; failures mirror ``QueryServer.serve_one`` exactly so
-    error results stay byte-identical to single-process serving."""
+    contexts (and profiles, for findings) it owns; failures mirror
+    ``QueryServer.serve_one`` exactly so error results stay byte-identical
+    to single-process serving."""
     from repro.query import threshold_contexts, topk_hot_paths
     try:
         params = dict(req.params)
@@ -353,6 +370,12 @@ def _serve_scatter(db, owned_ctx: np.ndarray, req: QueryRequest):
             return topk_hot_paths(db, req.metric, k=req.k,
                                   inclusive=req.inclusive, within=owned_ctx,
                                   **params)
+        if req.op == "findings":
+            # ctx-keyed analyzers take the context mask, pid-keyed ones
+            # the profile mask; global aggregates inside each analyzer
+            # are shard-invariant, so the partials concat cleanly
+            return QueryServer._findings(req, db, within_ctx=owned_ctx,
+                                         within_pid=owned_pid)
         return threshold_contexts(
             db, req.metric, min_value=float(params.pop("min_value", 0.0)),
             inclusive=req.inclusive, within=owned_ctx, **params)
@@ -371,6 +394,11 @@ def _merge_scatter(req: QueryRequest, parts: list):
         rows = [h for part in parts for h in part]
         rows.sort(key=lambda h: (-h.value, h.ctx))
         return rows[:max(int(req.k), 0)]
+    if req.op == "findings":
+        from repro.diagnose.findings import sort_findings
+        rows = [f for part in parts for f in part]
+        limit = int(dict(req.params).get("limit", 0) or 0)
+        return sort_findings(rows, limit or None)
     ctx = np.concatenate([p[0] for p in parts])
     vals = np.concatenate([p[1] for p in parts])
     order = np.lexsort((ctx, -vals))  # value desc, ctx asc tiebreak
@@ -426,7 +454,8 @@ def _shard_worker_main(shard: int, n_shards: int, vnodes: int, salt: bytes,
     owned = ((lambda store, oid: ring.warm_priority(store, oid, shard))
              if n_shards > 1 else None)
     # scatter assignment masks are a function of (member, live-set) and
-    # the open epoch's context count — tiny dict, rebuilt per epoch
+    # the open epoch's context/profile counts — tiny dicts, rebuilt per
+    # epoch
     masks: dict[tuple, np.ndarray] = {}
 
     def _mask(d, member: int, live: tuple):
@@ -434,6 +463,14 @@ def _shard_worker_main(shard: int, n_shards: int, vnodes: int, salt: bytes,
         m = masks.get(key)
         if m is None:
             m = ring.owned_context_mask(d.n_contexts, member, live or None)
+            masks[key] = m
+        return m
+
+    def _pmask(d, member: int, live: tuple):
+        key = ("pid", member, live)
+        m = masks.get(key)
+        if m is None:
+            m = ring.owned_profile_mask(d.n_profiles, member, live or None)
             masks[key] = m
         return m
 
@@ -501,7 +538,10 @@ def _shard_worker_main(shard: int, n_shards: int, vnodes: int, salt: bytes,
                     # span), so time them here.
                     member, live = scatter
                     t0 = monotime()
-                    res = _serve_scatter(db, _mask(db, member, live), req)
+                    pmask = (_pmask(db, member, live)
+                             if req.op == "findings" else None)
+                    res = _serve_scatter(db, _mask(db, member, live), req,
+                                         owned_pid=pmask)
                     if rec.enabled:
                         rec.record("decode", str(req.op), t0, monotime() - t0,
                                    trace_id=tid)

@@ -17,8 +17,13 @@ kind         payload
 ``value``    ``value``: JSON float (scalars are fine as text)
 ``topk``     ``rows``: list of HotPath dicts
 ``window``   ``time``/``ctx``: binary arrays
+``findings`` ``rows``: list of Finding dicts (diagnosis records)
 ``error``    ``op``/``error``/``message`` — structured per-request failure
 ===========  =============================================================
+
+An *empty* findings list encodes as ``topk`` (the all-HotPath check is
+vacuously true first); both decode to ``[]``, so the ambiguity is
+value-preserving.
 """
 from __future__ import annotations
 
@@ -28,6 +33,7 @@ from dataclasses import MISSING, fields
 import numpy as np
 
 from repro.core.sparse import SparseMetrics, Trace
+from repro.diagnose.findings import Finding
 from repro.query.select import HotPath
 from repro.serve.engine import QueryError, QueryRequest
 from repro.utils import binio
@@ -98,6 +104,9 @@ def result_to_wire(res) -> dict:
     if isinstance(res, Trace):
         return {"kind": "window", "time": nd_to_wire(res.time),
                 "ctx": nd_to_wire(res.ctx)}
+    if isinstance(res, list) and res and \
+            all(isinstance(f, Finding) for f in res):
+        return {"kind": "findings", "rows": [f.as_dict() for f in res]}
     if isinstance(res, list) and all(isinstance(h, HotPath) for h in res):
         return {"kind": "topk", "rows": [h.as_dict() for h in res]}
     if isinstance(res, tuple) and len(res) == 2:
@@ -121,6 +130,8 @@ def result_from_wire(obj: dict):
         return Trace(wire_to_nd(obj["time"]), wire_to_nd(obj["ctx"]))
     if kind == "topk":
         return [HotPath(**row) for row in obj["rows"]]
+    if kind == "findings":
+        return [Finding.from_dict(row) for row in obj["rows"]]
     if kind == "stripe":
         return wire_to_nd(obj["profiles"]), wire_to_nd(obj["values"])
     if kind == "value":

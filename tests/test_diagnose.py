@@ -1,0 +1,427 @@
+"""Continuous diagnosis: noise-banded regression detection, trace-derived
+findings, the regression watch, and multi-tenant serving.
+
+The calibration contract under test:
+
+* a synthetic 2x slowdown on one call path IS flagged, by name;
+* a fleet of equal runs produces ZERO findings (std-0 bands collapse to
+  the relative margin — identical runs never cry wolf);
+* findings computed at ``shards=1`` and ``shards=2`` are byte-identical
+  to the single-process answer (analyzers are scatter-clean);
+* one tenant saturating its admission budget cannot 429 another.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.aggregate import AggregationConfig, StreamingAggregator
+from repro.diagnose import (BaselineFleet, Finding, RegressionWatch,
+                            WatchTarget, compute_findings,
+                            regression_findings, sort_findings)
+from repro.query import Database, metric_stats_by_path
+from repro.query.diff import diff
+from repro.serve.engine import QueryRequest, QueryServer
+from repro.serve.shard import ShardedQueryServer
+from repro.serve.wire import result_from_wire, result_to_wire
+from tests.conftest import make_profile
+
+N_RANKS = 8
+STRUCT_SEED = 1234  # same tree in every rank -> contexts align fleet-wide
+
+
+def _profiles(n=N_RANKS, *, scale_ctx=None, scale=1.0, scale_ranks=None,
+              pad_trace=None):
+    """One fleet of profiles with identical structure.
+
+    ``scale_ctx``/``scale``: multiply one context's metric values on
+    ``scale_ranks`` (default: all ranks) — the synthetic slowdown.
+    ``pad_trace``: {rank: n_extra} appends extra trace samples to a rank
+    (the synthetic straggler).
+    """
+    profs = []
+    for i in range(n):
+        prof = make_profile(np.random.default_rng(STRUCT_SEED), n_nodes=40,
+                            n_metrics=4, density=0.6, n_trace=30,
+                            identity={"rank": i})
+        if scale_ctx is not None and \
+                (scale_ranks is None or i in scale_ranks):
+            sm = prof.metrics
+            j = np.searchsorted(sm.ctx, scale_ctx)
+            assert j < len(sm.ctx) and sm.ctx[j] == scale_ctx, \
+                "scale_ctx must be present in the profile"
+            sm.val[sm.start[j]:sm.start[j + 1]] *= scale
+        if pad_trace and i in pad_trace:
+            extra = pad_trace[i]
+            t = np.sort(np.concatenate([
+                prof.trace.time,
+                np.linspace(0.01, 0.99, extra)]))
+            c = np.resize(prof.trace.ctx, t.size).astype(np.uint32)
+            prof.trace = type(prof.trace)(t, c)
+        profs.append(prof)
+    return profs
+
+
+def _build(out_dir, profs):
+    out_dir.mkdir(parents=True, exist_ok=True)
+    paths = []
+    for i, prof in enumerate(profs):
+        p = out_dir / f"p{i:03d}.rprf"
+        prof.save(p)
+        paths.append(str(p))
+    StreamingAggregator(out_dir, AggregationConfig(executor="serial")
+                        ).run(paths)
+    return out_dir
+
+
+def _scale_target():
+    """Profile-local context with the most metric-0 mass (the profiles are
+    structurally identical, so the same id works on every rank).  NB the
+    unified database renumbers contexts, so this id is only meaningful
+    inside a profile — db-side expectations come from :func:`_changed`."""
+    sm = _profiles(n=1)[0].metrics
+    best, best_v = None, -1.0
+    for j in range(len(sm.ctx)):
+        row = slice(int(sm.start[j]), int(sm.start[j + 1]))
+        v = float(sm.val[row][sm.mid[row] == 0].sum())
+        if v > best_v:
+            best, best_v = int(sm.ctx[j]), v
+    return best
+
+
+def _changed(a_dir, b_dir):
+    """Call paths whose metric-0 sum differs between two databases, with
+    their context id in the second database."""
+    with Database(a_dir) as da, Database(b_dir) as dbb:
+        ma = metric_stats_by_path(da, 0, "sum", False)
+        mb = metric_stats_by_path(dbb, 0, "sum", False)
+        return sorted((p, mb[p][0]) for p in mb
+                      if p in ma and mb[p][1] != ma[p][1])
+
+
+@pytest.fixture(scope="module")
+def baseline_root(tmp_path_factory):
+    """Three identical baseline runs under one root — a zero-variance fleet."""
+    root = tmp_path_factory.mktemp("baselines")
+    for j in range(3):
+        _build(root / f"run{j}", _profiles())
+    return root
+
+
+# ---------------------------------------------------------------------------
+# satellite: diff carries baseline variance + tolerates one-sided metrics
+# ---------------------------------------------------------------------------
+
+def test_diff_entries_carry_std(tmp_path, baseline_root):
+    a = baseline_root / "run0"
+    b = _build(tmp_path / "b",
+               _profiles(scale_ctx=_scale_target(), scale=2.0))
+    with Database(a) as da, Database(b) as dbb:
+        entries = diff(da, dbb, 0, inclusive=False, top=5)
+        assert entries, "2x scale must move the top of the diff"
+        e = entries[0]
+        assert {"std_a", "std_b"} <= set(e.as_dict())
+        # per-(ctx,mid) spread across profiles is what the stats hold
+        assert e.std_a >= 0.0 and e.std_b >= 0.0
+
+
+def test_metric_stats_one_sided_tolerance(baseline_root):
+    with Database(baseline_root / "run0") as db:
+        assert metric_stats_by_path(db, 9999, "sum", False) == {}
+        assert metric_stats_by_path(db, "no-such-metric", "sum", False) == {}
+        got = metric_stats_by_path(db, 0, "sum", False)
+        assert got and all(len(v) == 3 for v in got.values())
+        # diff across a metric present in only one run: no raise
+        assert diff(db, db, 9999) == []
+
+
+# ---------------------------------------------------------------------------
+# noise-band calibration
+# ---------------------------------------------------------------------------
+
+def test_regression_flagged_by_name(tmp_path, baseline_root):
+    target = _build(tmp_path / "slow",
+                    _profiles(scale_ctx=_scale_target(), scale=2.0))
+    changed = _changed(baseline_root / "run0", target)
+    assert len(changed) == 1, "exactly one path was scaled"
+    path, ctx = changed[0]
+    with BaselineFleet.from_dir(baseline_root) as fleet, \
+            Database(target) as db:
+        found = regression_findings(db, fleet, 0, inclusive=False)
+        assert found, "a 2x slowdown must be flagged"
+        top = found[0]
+        assert top.kind == "regression"
+        assert top.ctx == ctx and top.path == path
+        assert top.severity == "critical"  # 2x >> the 5% margin band
+        assert top.evidence["ratio"] == pytest.approx(2.0, rel=1e-6)
+        # nothing else regressed: the scaled context is the only finding
+        assert all(f.ctx == ctx for f in found)
+
+
+def test_equal_fleet_zero_findings(tmp_path, baseline_root):
+    control = _build(tmp_path / "control", _profiles())
+    with BaselineFleet.from_dir(baseline_root) as fleet, \
+            Database(control) as db:
+        assert regression_findings(db, fleet, 0, inclusive=False) == []
+
+
+def test_band_widens_with_variance(tmp_path):
+    """A path that is noisy across baselines needs a bigger excursion."""
+    root = tmp_path / "noisy"
+    ctx = _scale_target()
+    for j, s in enumerate([1.0, 2.0, 3.0]):  # mean 2x, noisy
+        _build(root / f"run{j}", _profiles(scale_ctx=ctx, scale=s))
+    target = _build(tmp_path / "t", _profiles(scale_ctx=ctx, scale=3.5))
+    with BaselineFleet.from_dir(root) as fleet, Database(target) as db:
+        bands = fleet.bands(0, stat="sum", inclusive=False)
+        noisy = [b for b in bands.values() if b.std > 0]
+        assert noisy, "the scaled path must show cross-run variance"
+        # 3.5x is within ~2 stds of the noisy mean -> z=3 band absorbs it
+        found = regression_findings(db, fleet, 0, inclusive=False, z=3.0)
+        assert found == []
+        # but a tight band (z=0.5) flags it
+        assert regression_findings(db, fleet, 0, inclusive=False, z=0.5)
+
+
+# ---------------------------------------------------------------------------
+# trace-derived analyzers + wire round-trip
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def skewed_db(tmp_path_factory):
+    """Rank 0 carries 12x metric values and 6x the trace samples."""
+    td = tmp_path_factory.mktemp("skewed")
+    profs = _profiles()
+    profs[0].metrics.val *= 12.0  # every context on rank 0
+    t = np.sort(np.concatenate([profs[0].trace.time,
+                                np.linspace(0.01, 0.99, 150)]))
+    c = np.resize(profs[0].trace.ctx, t.size).astype(np.uint32)
+    profs[0].trace = type(profs[0].trace)(t, c)
+    return _build(td / "main", profs)
+
+
+def test_analyzers_find_imbalance_and_straggler(skewed_db):
+    with Database(skewed_db) as db:
+        found = compute_findings(db, metric=0)
+        kinds = {f.kind for f in found}
+        assert "load_imbalance" in kinds
+        assert "straggler" in kinds
+        stragglers = [f for f in found if f.kind == "straggler"]
+        assert [f.pid for f in stragglers] == [0]
+        # canonical order: most severe first, deterministic ties
+        assert found == sort_findings(found)
+        assert found == sort_findings(found[::-1])
+
+
+def test_findings_wire_roundtrip(skewed_db):
+    import json
+    with Database(skewed_db) as db:
+        found = compute_findings(db, metric=0)
+        assert found
+        wire = result_to_wire(found)
+        assert wire["kind"] == "findings"
+        back = result_from_wire(json.loads(json.dumps(wire)))
+        assert back == found
+        assert [f.evidence for f in back] == [f.evidence for f in found]
+
+
+def test_findings_scatter_parity(skewed_db):
+    with Database(skewed_db) as db:
+        ref = QueryServer(db).submit(QueryRequest(op="findings", metric=0))
+    assert ref
+    for n in (1, 2):
+        with ShardedQueryServer(skewed_db, n) as srv:
+            got = srv.serve_one(QueryRequest(op="findings", metric=0))
+        assert got == ref, f"shards={n} diverged from single-process"
+        assert [f.as_dict() for f in got] == [f.as_dict() for f in ref]
+
+
+def test_findings_unknown_params_rejected(skewed_db):
+    from repro.serve.engine import QueryError
+    with Database(skewed_db) as db:
+        srv = QueryServer(db)
+        res = srv.serve([QueryRequest(op="findings", metric=0,
+                                      params={"bogus": 1})])[0]
+        assert isinstance(res, QueryError)
+        assert "bogus" in res.message
+
+
+# ---------------------------------------------------------------------------
+# the regression watch: epoch stream in, findings out, within a poll tick
+# ---------------------------------------------------------------------------
+
+def _publish(root, profs):
+    """Publish one fleet as the next epoch under ``root`` (each epoch is a
+    complete run snapshot, so the watch diffs whole runs against the
+    baseline fleet)."""
+    from repro.ingest import IngestState, SnapshotStore
+    import os
+    os.makedirs(root, exist_ok=True)
+    store = SnapshotStore(str(root))
+    state = IngestState(config=AggregationConfig(executor="serial"))
+    paths = []
+    for i, prof in enumerate(profs):
+        p = os.path.join(str(root), f"in{time.monotonic_ns()}_{i}.rprf")
+        prof.save(p)
+        paths.append(p)
+    state.append(paths)
+    epoch, _ = store.publish(state.write_database)
+    return epoch
+
+
+def test_watch_flags_regression_within_poll(tmp_path, baseline_root):
+    ctx_local = _scale_target()
+    target = _build(tmp_path / "expect",
+                    _profiles(scale_ctx=ctx_local, scale=2.0))
+    [(path, ctx)] = _changed(baseline_root / "run0", target)
+    root = tmp_path / "live"
+    e1 = _publish(root, _profiles())  # first epoch: clean
+
+    reports = []
+    watch = RegressionWatch(
+        WatchTarget(name="t", root=str(root), baseline=str(baseline_root),
+                    metric=0, inclusive=False),
+        poll_ms=10_000.0,  # the loop never fires: we step poll_once()
+        on_report=reports.append)
+    with watch:
+        assert len(reports) == 1  # initial epoch evaluated on start
+        assert reports[0].findings == ()  # clean epoch: zero findings
+        # a regressed epoch publishes...
+        e2 = _publish(root, _profiles(scale_ctx=ctx_local, scale=2.0))
+        t0 = time.monotonic()
+        assert watch.poll_once() == 1  # ...and one poll pass catches it
+        detect_s = time.monotonic() - t0
+        assert len(reports) == 2
+        rep = reports[1]
+        assert rep.epoch == e2 and rep.worst == "critical"
+        named = [f for f in rep.findings if f.kind == "regression"]
+        assert named and named[0].path == path and named[0].ctx == ctx
+        # detection latency = one poll pass, and the watch measured it
+        assert rep.eval_s <= detect_s
+        st = watch.status()
+        assert st["targets"]["t"]["worst"] == "critical"
+        assert st["counters"]["epochs"] == 2
+        assert st["counters"]["critical"] >= 1
+        assert watch.latest("t") is rep
+        assert watch.reports("t") == reports
+
+
+def test_watch_counts_clean_epochs(tmp_path, baseline_root):
+    root = tmp_path / "live"
+    _publish(root, _profiles())
+    reports = []
+    with RegressionWatch(
+            WatchTarget(name="c", root=str(root),
+                        baseline=str(baseline_root), metric=0,
+                        inclusive=False),
+            poll_ms=10_000.0, on_report=reports.append) as watch:
+        _publish(root, _profiles())  # another clean epoch
+        watch.poll_once()
+        assert [r.findings for r in reports] == [(), ()]
+        assert watch.status()["counters"]["findings"] == 0
+
+
+# ---------------------------------------------------------------------------
+# multi-tenant serving: routing, labels, admission isolation
+# ---------------------------------------------------------------------------
+
+class _StallServer(QueryServer):
+    def __init__(self, db):
+        super().__init__(db)
+        self.release = threading.Event()
+
+    def submit(self, req):
+        if req.op == "stall":
+            assert self.release.wait(30), "stall never released"
+            return 0.0
+        return super().submit(req)
+
+
+def test_multi_tenant_routing_and_findings(tmp_path, skewed_db,
+                                           baseline_root):
+    from repro.serve.client import QueryClient, TransportError
+    from repro.serve.http import QueryHTTPServer
+    clean = baseline_root / "run0"
+    with Database(skewed_db) as hot, Database(clean) as cold:
+        with QueryHTTPServer(tenants={"hot": hot, "cold": cold},
+                             warm_bytes=0) as srv:
+            host, port = srv.address
+            with QueryClient(host, port, tenant="hot") as ch, \
+                    QueryClient(host, port, tenant="cold") as cc:
+                fh = ch.findings(metric=0)
+                assert fh and all(isinstance(f, Finding) for f in fh)
+                assert {f.kind for f in fh} >= {"load_imbalance",
+                                                "straggler"}
+                assert cc.findings(metric=0,
+                                   analyzers=("imbalance",)) == []
+                # unknown tenant -> routing 404, not a retryable error
+                with QueryClient(host, port, tenant="nope") as cn:
+                    with pytest.raises(TransportError) as exc:
+                        cn.findings(metric=0)
+                    assert exc.value.status == 404
+            # per-tenant labels in the merged exposition
+            prom = srv.prometheus()
+            assert 'tenant="hot"' in prom and 'tenant="cold"' in prom
+            assert srv.metrics()["tenants"]["hot"]["scheduler"]["tenant"] \
+                == "hot"
+            assert set(srv.health()["tenants"]) == {"hot", "cold"}
+
+
+def test_tenant_admission_isolation(baseline_root):
+    """Tenant A at its budget gets 429; tenant B is untouched."""
+    from repro.serve.client import QueryClient, ServerOverloaded
+    from repro.serve.http import QueryHTTPServer
+    d = baseline_root / "run0"
+    with Database(d) as da, Database(d) as db_b:
+        with QueryHTTPServer(tenants={"a": da, "b": db_b}, warm_bytes=0,
+                             max_queue=1, n_workers=1,
+                             tenant_queues={"b": 64}) as srv:
+            stall = _StallServer(da)
+            srv.tenants["a"].scheduler.server = stall
+            host, port = srv.address
+
+            def post(op):
+                with QueryClient(host, port, tenant="a") as c:
+                    return c.batch([QueryRequest(op=op, metric=0, k=1)])
+
+            occupant = threading.Thread(target=post, args=("stall",))
+            occupant.start()
+            time.sleep(0.1)   # a's single worker held by the stall
+            queued = threading.Thread(target=post, args=("topk",))
+            queued.start()
+            time.sleep(0.1)   # a's admission queue now at its bound
+            try:
+                with QueryClient(host, port, tenant="a") as ca:
+                    with pytest.raises(ServerOverloaded):
+                        ca.batch([QueryRequest(op="topk", metric=0, k=1)])
+                # tenant b sails through while a is saturated
+                with QueryClient(host, port, tenant="b") as cb:
+                    assert len(cb.topk(0, k=2)) == 2
+                    assert cb.findings(metric=0,
+                                       analyzers=("imbalance",)) == []
+            finally:
+                stall.release.set()
+            occupant.join(10)
+            queued.join(10)
+            m = srv.metrics()["tenants"]
+            assert m["a"]["scheduler"]["rejected"] >= 1
+            assert m["b"]["scheduler"]["rejected"] == 0
+
+
+def test_single_tenant_surface_unchanged(baseline_root):
+    """The historical one-db API: no tenant keys anywhere in the output."""
+    from repro.serve.client import QueryClient
+    from repro.serve.http import QueryHTTPServer
+    with Database(baseline_root / "run0") as handle:
+        with QueryHTTPServer(handle, warm_bytes=0) as srv:
+            assert srv.db is handle
+            assert not srv.multi_tenant
+            assert "tenants" not in srv.health()
+            assert "tenants" not in srv.metrics()
+            assert 'tenant="' not in srv.prometheus()
+            host, port = srv.address
+            with QueryClient(host, port) as cl:
+                out = cl.batch([QueryRequest(op="topk", metric=0, k=1)])
+                assert len(out) == 1
+                assert cl.findings(metric=0, analyzers=("imbalance",)) == []
