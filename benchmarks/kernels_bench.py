@@ -3,9 +3,15 @@
 On this CPU container, interpret-mode timings are NOT TPU performance —
 they validate plumbing and give the oracle baseline; BlockSpecs target
 TPU v5e.  Reported for completeness of the harness contract.
+
+Standalone usage::
+
+    PYTHONPATH=src python -m benchmarks.kernels_bench [--out BENCH_kernels.json]
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
@@ -16,39 +22,71 @@ from repro.kernels import ops, ref
 
 
 def _time(f, *args, reps=5):
-    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
-        jax.block_until_ready(f(*args))
+    """Mean seconds/call over ``reps`` after one warmup (jit compile).
+
+    ``jax.block_until_ready`` blocks on the whole returned pytree, so
+    tuple-returning kernels (int8_quant) are timed to completion of every
+    output, not just the first.
+    """
+    jax.block_until_ready(f(*args))  # warmup: one call, fully retired
     t0 = time.perf_counter()
     for _ in range(reps):
         jax.block_until_ready(f(*args))
     return (time.perf_counter() - t0) / reps
 
 
-def run(out=print):
+def run(out=print, json_path: str | None = None):
     rng = np.random.default_rng(0)
+    rows = []
+
+    def bench(name, t, t_ref, sizes):
+        rows.append({"name": name, "us": t * 1e6, "ref_us": t_ref * 1e6,
+                     "sizes": sizes})
+        tail = ";".join(f"{k}={v}" for k, v in sizes.items())
+        out(f"kernels.{name},{t*1e6:.0f},ref_us={t_ref*1e6:.0f};{tail}")
+
     n, s = 1 << 14, 2048
     ids = jnp.asarray(np.sort(rng.integers(0, s, n)).astype(np.int32))
     vals = jnp.asarray(rng.normal(size=n).astype(np.float32))
-    t = _time(lambda a, b: ops.segstats(a, b, s), ids, vals)
-    t_ref = _time(lambda a, b: ref.segstats_ref(a, b, s), ids, vals)
-    out(f"kernels.segstats,{t*1e6:.0f},ref_us={t_ref*1e6:.0f};n={n};s={s}")
+    bench("segstats",
+          _time(lambda a, b: ops.segstats(a, b, s), ids, vals),
+          _time(lambda a, b: ref.segstats_ref(a, b, s), ids, vals),
+          {"n": n, "s": s})
 
     x = jnp.asarray(rng.normal(size=(1 << 14, 4)).astype(np.float32))
-    t = _time(ops.blockscan, x)
-    t_ref = _time(ref.blockscan_ref, x)
-    out(f"kernels.blockscan,{t*1e6:.0f},ref_us={t_ref*1e6:.0f};n={x.shape[0]}")
+    bench("blockscan", _time(ops.blockscan, x), _time(ref.blockscan_ref, x),
+          {"n": x.shape[0]})
 
     uids = jnp.asarray(rng.integers(0, s, n).astype(np.int32))
     v2 = jnp.asarray(rng.normal(size=(n, 4)).astype(np.float32))
-    t = _time(lambda a, b: ops.scatter_add(a, b, s), uids, v2)
-    t_ref = _time(lambda a, b: ref.scatter_add_ref(a, b, s), uids, v2)
-    out(f"kernels.scatter_add,{t*1e6:.0f},ref_us={t_ref*1e6:.0f};n={n};s={s}")
+    bench("scatter_add",
+          _time(lambda a, b: ops.scatter_add(a, b, s), uids, v2),
+          _time(lambda a, b: ref.scatter_add_ref(a, b, s), uids, v2),
+          {"n": n, "s": s})
 
     g = jnp.asarray(rng.normal(size=1 << 15).astype(np.float32))
-    t = _time(lambda a: ops.int8_quant(a)[0], g)
-    t_ref = _time(lambda a: ref.int8_quant_ref(a, 2048)[0], g)
-    out(f"kernels.int8_quant,{t*1e6:.0f},ref_us={t_ref*1e6:.0f};n={g.shape[0]}")
+    bench("int8_quant",
+          _time(ops.int8_quant, g),
+          _time(lambda a: ref.int8_quant_ref(a, 2048), g),
+          {"n": g.shape[0]})
+
+    if json_path:
+        report = {"backend": jax.default_backend(),
+                  "interpret": jax.default_backend() != "tpu",
+                  "kernels": rows}
+        with open(json_path, "w") as f:
+            json.dump(report, f, indent=2)
+        out(f"kernels.report,0,json={json_path}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None,
+                    help="write a JSON report (e.g. BENCH_kernels.json)")
+    args = ap.parse_args()
+    run(json_path=args.out)
 
 
 if __name__ == "__main__":
-    run()
+    main()

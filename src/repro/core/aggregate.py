@@ -57,8 +57,9 @@ from repro.core.stats import StatsAccumulator
 from repro.core.traces import TraceDBWriter
 from repro.runtime import OrderedSink, get_executor
 from repro.runtime import shm as shm_mod
-from repro.runtime.reduce import (StreamingReducer, TreeWithMaps,
-                                  merge_tree_with_maps, tree_reduce)
+from repro.runtime.reduce import (AsyncStreamingReducer, StreamingReducer,
+                                  TreeWithMaps, merge_tree_with_maps,
+                                  tree_reduce)
 
 
 @dataclass
@@ -85,10 +86,41 @@ class AggregationConfig:
                                          # pool pipe; byte-identical outputs
     shm_slab_bytes: int = 1 << 20        # slab size; bigger planes fall
                                          # back to one-shot segments
+    compute: str = "cpu"                 # "cpu" numpy hot loops, or "device"
+                                         # — route phase-2 propagation /
+                                         # combine / CMS scans through the
+                                         # Pallas kernels (ROADMAP item 3);
+                                         # falls back to cpu when no
+                                         # accelerator is attached
+    device_interpret: bool = False       # let compute="device" run on the
+                                         # interpret-mode kernel proxy when
+                                         # no accelerator exists (tests /
+                                         # benches; slow, but exercises the
+                                         # real kernel bodies)
+    stats_merge: str = "auto"            # cross-profile stats carry-chain:
+                                         # "inline" on the consume thread,
+                                         # "workers" on a small merge pool
+                                         # (byte-identical fold shape), or
+                                         # "auto" = workers iff workers > 1
 
     @property
     def workers(self) -> int:
         return max(1, self.n_threads if self.n_workers is None else self.n_workers)
+
+    def effective_compute(self) -> str:
+        """The backend that will actually run: ``"device"`` only when the
+        kernels can execute here (accelerator attached, or the interpret
+        proxy explicitly allowed) — otherwise silently ``"cpu"``, so one
+        config deploys unchanged on accelerator and plain hosts."""
+        if self.compute != "device":
+            return "cpu"
+        from repro.kernels import batch
+        return "device" if batch.device_ok(self.device_interpret) else "cpu"
+
+    def resolved_stats_merge(self) -> str:
+        if self.stats_merge != "auto":
+            return self.stats_merge
+        return "workers" if self.workers > 1 else "inline"
 
     @property
     def effective_sink_window(self) -> int | None:
@@ -226,6 +258,16 @@ def _merge_stats(a: StatsAccumulator, b: StatsAccumulator) -> StatsAccumulator:
     return a
 
 
+def _make_stats_reducer(cfg: AggregationConfig):
+    """The cross-profile statistics fold: same carry-chain shape either way
+    (byte-identical results), ``"workers"`` just runs the merges on a small
+    pool instead of the consume thread (ROADMAP item 3 — the sharded path's
+    parent-side merge bottleneck)."""
+    if cfg.resolved_stats_merge() == "workers":
+        return AsyncStreamingReducer(_merge_stats, n_threads=2)
+    return StreamingReducer(_merge_stats)
+
+
 class StreamingAggregator:
     """Single-rank engine; :mod:`repro.core.reduction` composes ranks."""
 
@@ -235,7 +277,15 @@ class StreamingAggregator:
         self.cfg = config or AggregationConfig()
 
     def _executor(self):
-        return get_executor(self.cfg.executor, self.cfg.workers)
+        kwargs = {}
+        if (self.cfg.executor == "processes"
+                and self.cfg.effective_compute() == "device"
+                and not os.environ.get("REPRO_MP_CONTEXT")):
+            # forking after XLA initializes in the parent can deadlock the
+            # children; spawn workers get a clean runtime.  An explicit
+            # REPRO_MP_CONTEXT still wins.
+            kwargs["mp_context"] = "spawn"
+        return get_executor(self.cfg.executor, self.cfg.workers, **kwargs)
 
     # -- phase 1: contexts ---------------------------------------------------
     def parse_contexts(self, profile_paths: list[str], timer: _PhaseTimer,
@@ -258,6 +308,18 @@ class StreamingAggregator:
             raise ValueError(f"unknown plane_transport "
                              f"{self.cfg.plane_transport!r}; expected 'shm' "
                              f"or 'pickle'")
+        if self.cfg.compute not in ("cpu", "device"):
+            raise ValueError(f"unknown compute {self.cfg.compute!r}; "
+                             f"expected 'cpu' or 'device'")
+        if self.cfg.stats_merge not in ("auto", "inline", "workers"):
+            raise ValueError(f"unknown stats_merge {self.cfg.stats_merge!r}; "
+                             f"expected 'auto', 'inline' or 'workers'")
+        if self.cfg.compute == "device" and self.cfg.pipeline == "legacy":
+            raise ValueError("compute='device' requires pipeline='fused'; "
+                             "the legacy three-pass chain has no device path")
+        if self.cfg.compute == "device" and self.cfg.executor == "ranks":
+            raise ValueError("compute='device' is not supported under the "
+                             "ranks driver; use serial/threads/processes")
         with self._executor() as ex:
             if ex.driver == "ranks":
                 # whole-run driver backend (paper §4.4): n_workers ranks,
@@ -297,7 +359,7 @@ class StreamingAggregator:
         writer = TwoBufferWriter(pms, cfg.buffer_bytes, timer)
         # stats fold inside the ordered sink: in profile order with a shape
         # that is a pure function of n, and only O(log n) accumulators live
-        stats_reducer = StreamingReducer(_merge_stats)
+        stats_reducer = _make_stats_reducer(cfg)
         trace_path = None
         trace_writer = None
         if cfg.write_traces and trace_lens.sum() > 0:
@@ -328,6 +390,7 @@ class StreamingAggregator:
                 cfg, ex, parent_pre, end, timer, consume, trace_sink)
             writer.close()
         except BaseException:
+            stats_reducer.close()
             pms.abort()
             if trace_writer is not None:
                 trace_writer.close()
@@ -397,7 +460,7 @@ class StreamingAggregator:
         if cfg.write_traces and trace_lens.sum() > 0:
             trace_path = os.path.join(self.out_dir, "db.trc")
             trace_writer = TraceDBWriter(trace_path, [int(x) for x in trace_lens])
-        stats_reducer = StreamingReducer(_merge_stats)
+        stats_reducer = _make_stats_reducer(cfg)
         nvals = np.zeros(n, dtype=np.int64)
         parent_pre = np.asarray(final_tree.parent, dtype=np.int64)
 
@@ -419,6 +482,7 @@ class StreamingAggregator:
                                   trace_sink)
             writer.close()
         except BaseException:
+            stats_reducer.close()
             pms.abort()
             if trace_writer is not None:
                 trace_writer.close()
@@ -452,7 +516,7 @@ class StreamingAggregator:
                 pms.path, cms_path, n_workers=cfg.cms_workers,
                 strategy=cfg.cms_strategy, balance=cfg.cms_balance,
                 group_target_bytes=cfg.group_target_bytes,
-                executor=cfg.executor)
+                executor=cfg.executor, compute=cfg.effective_compute())
             timer.add("cms", time.perf_counter() - t2)
         timer.add("completion", time.perf_counter() - t0)
         timer.add("total", time.perf_counter() - t_start)
@@ -523,7 +587,8 @@ def phase1_unify_inprocess(profile_paths: list[str], timer: _PhaseTimer,
 
 def transform_profile(prof: MeasurementProfile, remap_final, routes_final,
                       parent_pre: np.ndarray, end_arr: np.ndarray, *,
-                      pipeline: str, keep_exclusive: bool, want_trace: bool):
+                      pipeline: str, keep_exclusive: bool, want_trace: bool,
+                      device=None):
     """Phase-2 compute for one loaded profile: remap + redistribute +
     propagate (the paper's edit/redistribute/propagate chain) plus the
     per-profile statistics leaf.  Returns ``(sm, acc, trace_or_None)``.
@@ -531,11 +596,14 @@ def transform_profile(prof: MeasurementProfile, remap_final, routes_final,
     This is *the* unit of work both execution substrates run — in worker
     threads for the in-process path, in pool processes for the sharded
     path — so the byte-determinism contract only has to be argued once.
+    ``device`` is a :class:`repro.kernels.batch.DeviceAggregator` routing
+    the combine/propagate hot loops through the Pallas kernels, or None for
+    the pure-numpy path.
     """
     remap_arr = np.asarray(remap_final, dtype=np.int64)
     sm = transform_plane(prof.metrics, remap_arr, routes_final, parent_pre,
                          end_arr, pipeline=pipeline,
-                         keep_exclusive=keep_exclusive)
+                         keep_exclusive=keep_exclusive, device=device)
     acc = StatsAccumulator()
     acc.update(sm)
     tr = (prof.trace.remap_contexts(remap_arr)
@@ -546,7 +614,7 @@ def transform_profile(prof: MeasurementProfile, remap_final, routes_final,
 def phase2_stream_inprocess(profile_paths: list[str], remap_of, route_of,
                             cfg: AggregationConfig, ex, parent_pre: np.ndarray,
                             end_arr: np.ndarray, timer: _PhaseTimer, consume,
-                            trace_sink=None):
+                            trace_sink=None, device=None):
     """Stream phase 2 through an in-process executor with pluggable output
     hooks — the engine behind :meth:`StreamingAggregator._run_inprocess`
     (hooks feed the PMS/trace writers) and the live ingest tier's
@@ -560,8 +628,17 @@ def phase2_stream_inprocess(profile_paths: list[str], remap_of, route_of,
     profiles instead of stacking encoded planes.  ``trace_sink(i, trace)``
     runs on worker threads as soon as a profile's trace is remapped.
     Returns the sink (``max_pending`` observability).
+
+    ``device=None`` with ``cfg.effective_compute() == "device"`` builds a
+    :class:`repro.kernels.batch.DeviceAggregator` for this run; worker
+    threads then coalesce their propagation work into shared launches (and
+    the jax dispatch releases the GIL — the ``threads`` backend's hot-loop
+    rescue, ROADMAP item 3).
     """
     n = len(profile_paths)
+    if device is None and cfg.effective_compute() == "device":
+        from repro.kernels.batch import DeviceAggregator
+        device = DeviceAggregator(end_arr)
     sink = OrderedSink(lambda i, item: consume(i, *item),
                        window=cfg.effective_sink_window)
 
@@ -574,7 +651,7 @@ def phase2_stream_inprocess(profile_paths: list[str], remap_of, route_of,
             sm, acc, tr = transform_profile(
                 prof, remap_of(i), route_of(i), parent_pre, end_arr,
                 pipeline=cfg.pipeline, keep_exclusive=cfg.keep_exclusive,
-                want_trace=trace_sink is not None)
+                want_trace=trace_sink is not None, device=device)
             payload = sm.encode()
             timer.add("compute", time.perf_counter() - t1)
             sink.put(i, (payload, sm.n_contexts, sm.n_values, acc))
@@ -587,6 +664,9 @@ def phase2_stream_inprocess(profile_paths: list[str], remap_of, route_of,
     ex.parallel_for(n, body)
     sink.close()
     timer.add("sink_peak", float(sink.max_pending))
+    if device is not None:
+        timer.add("device_launches", float(device.launches))
+        timer.add("device_requests", float(device.requests))
     return sink
 
 
@@ -647,7 +727,7 @@ def phase2_stream_sharded(profile_paths: list[str], remaps_final,
 
     sink = OrderedSink(_consume, window=window)
     initargs = (end_arr, parent_pre, cfg.keep_exclusive, cfg.write_traces,
-                cfg.pipeline, cfg.shm_slab_bytes)
+                cfg.pipeline, cfg.shm_slab_bytes, cfg.effective_compute())
 
     def task_source():
         # pulled lazily by map_throttled, one task per credit: with the
@@ -708,14 +788,22 @@ _STAT_FIELDS = ("keys", "sum", "cnt", "vmin", "vmax", "sumsq")
 
 
 def _phase2_init(end: np.ndarray, parent: np.ndarray, keep_exclusive: bool,
-                 write_traces: bool, pipeline: str, slab_bytes: int) -> None:
+                 write_traces: bool, pipeline: str, slab_bytes: int,
+                 compute: str = "cpu") -> None:
     """Pool initializer: ship the (large) preorder-interval arrays once per
-    worker instead of once per profile task."""
+    worker instead of once per profile task.  With ``compute="device"``
+    each worker builds its own :class:`DeviceAggregator` — workers are
+    single-threaded, so batches degenerate to size 1, but batch-composition
+    independence makes the arithmetic (and the bytes) identical."""
     global _PHASE2_STATE
+    device = None
+    if compute == "device":
+        from repro.kernels.batch import DeviceAggregator
+        device = DeviceAggregator(np.asarray(end, dtype=np.int64))
     _PHASE2_STATE = (np.asarray(end, dtype=np.int64),
                      np.asarray(parent, dtype=np.int64),
                      bool(keep_exclusive), bool(write_traces), pipeline,
-                     int(slab_bytes))
+                     int(slab_bytes), device)
 
 
 def _plane_section_lengths(nb_payload: int, n_trace: int,
@@ -734,14 +822,22 @@ def _phase2_profile_worker(task) -> tuple:
     (``("shm", ...)`` descriptor), else pickled inline (``("raw", ...)``).
     """
     path, remap_final, routes_final, slab_name = task
+    # Chaos hook: the worker-death liveness tests SIGKILL a worker
+    # mid-batch via the environment, which — unlike a monkeypatched worker
+    # body — reaches spawn-context children (the default pool context for
+    # compute="device").
+    _marker = os.environ.get("REPRO_CHAOS_KILL_MARKER")
+    if _marker and _marker in str(path):
+        import signal
+        os.kill(os.getpid(), signal.SIGKILL)
     assert _PHASE2_STATE is not None, "phase-2 worker used without initializer"
     (end, parent, keep_exclusive, write_traces, pipeline,
-     slab_bytes) = _PHASE2_STATE
+     slab_bytes, device) = _PHASE2_STATE
     prof = MeasurementProfile.load(path)
     sm, acc, tr = transform_profile(prof, remap_final, routes_final, parent,
                                     end, pipeline=pipeline,
                                     keep_exclusive=keep_exclusive,
-                                    want_trace=write_traces)
+                                    want_trace=write_traces, device=device)
     if tr is not None:
         ttime, tctx = tr.time, tr.ctx
     else:

@@ -107,23 +107,38 @@ def stripe_from_buffer(buf, off: int, mid: int
 # pass 1: size census over the PMS planes
 # ---------------------------------------------------------------------------
 
-def census(pms: PMSReader, n_ctx: int) -> tuple[np.ndarray, np.ndarray]:
-    """Per-context (x_c, m_c): total values and distinct non-empty metrics."""
-    x_c = np.zeros(n_ctx, dtype=np.int64)
+def census(pms: PMSReader, n_ctx: int, compute: str = "cpu"
+           ) -> tuple[np.ndarray, np.ndarray]:
+    """Per-context (x_c, m_c): total values and distinct non-empty metrics.
+
+    ``compute="device"`` routes the x_c histogram through the Pallas
+    ``scatter_add`` kernel on real accelerators (counts are integers under
+    the 2^24 f32-exactness guard, so the result is byte-identical); the
+    helper returns None on plain hosts and the numpy path runs instead.
+    """
     key_chunks: list[np.ndarray] = []
     uniq = np.empty(0, dtype=np.uint64)
+    row_chunks: list[np.ndarray] = []
     for pid in range(pms.n_profiles):
         sm = pms.plane(pid)
         rows, mids, _ = sm.triplets()
         if rows.size == 0:
             continue
-        np.add.at(x_c, rows, 1)
+        row_chunks.append(rows.astype(np.int64))
         key_chunks.append((rows.astype(np.uint64) << np.uint64(16)) | mids.astype(np.uint64))
         if sum(k.size for k in key_chunks) > 1 << 22:
             uniq = np.unique(np.concatenate([uniq] + key_chunks))
             key_chunks = []
     if key_chunks:
         uniq = np.unique(np.concatenate([uniq] + key_chunks))
+    rows_all = (np.concatenate(row_chunks) if row_chunks
+                else np.empty(0, np.int64))
+    x_c = None
+    if compute == "device":
+        from repro.kernels import batch
+        x_c = batch.device_census_counts(rows_all, n_ctx)
+    if x_c is None:
+        x_c = np.bincount(rows_all, minlength=n_ctx).astype(np.int64)
     m_c = np.bincount((uniq >> np.uint64(16)).astype(np.int64), minlength=n_ctx)
     return x_c, m_c.astype(np.int64)
 
@@ -268,7 +283,8 @@ def _shard_groups(groups, sizes: np.ndarray, n_workers: int):
 
 def build_cms(pms_path, out_path, *, n_workers: int = 4, strategy: str = "vectorized",
               balance: str = "dynamic", group_target_bytes: int = 1 << 20,
-              executor: str | None = None, timings: dict | None = None) -> int:
+              executor: str | None = None, timings: dict | None = None,
+              compute: str = "cpu") -> int:
     """Generate the CMS file from a completed PMS file (paper §4.3.2).
 
     ``executor`` selects the worker substrate (default ``threads``):
@@ -278,15 +294,26 @@ def build_cms(pms_path, out_path, *, n_workers: int = 4, strategy: str = "vector
     context groups statically across a worker pool.  Output bytes land at
     offsets fixed by the exclusive scan, so every substrate produces a
     byte-identical file.
+
+    ``compute="device"`` runs the census histogram and the §4.3.2 offset
+    scan through the Pallas kernels; both are exact integer ops, so the
+    file bytes never depend on the backend.
     """
     pms = PMSReader(pms_path)
     n_ctx = len(pms.tree.parent) if pms.tree is not None else (
         int(max((int(pms.plane(p).ctx.max()) for p in range(pms.n_profiles)
                  if pms.plane(p).n_contexts), default=-1)) + 1)
-    x_c, m_c = census(pms, n_ctx)
+    x_c, m_c = census(pms, n_ctx, compute=compute)
     sizes = np.where(x_c > 0, 60 + 10 * m_c + 12 * x_c, 0).astype(np.int64)
     offsets = np.zeros(n_ctx + 1, dtype=np.uint64)
-    np.cumsum(sizes, out=offsets[1:])  # exclusive scan (paper §4.3.2)
+    scanned = None
+    if compute == "device":
+        from repro.kernels import batch
+        scanned = batch.device_offsets(sizes)  # int32 exclusive_scan kernel
+    if scanned is not None:
+        offsets[:] = scanned
+    else:
+        np.cumsum(sizes, out=offsets[1:])  # exclusive scan (paper §4.3.2)
     data_start = _HEADER + 8 * (n_ctx + 1)
     offsets += np.uint64(data_start)
 
@@ -294,7 +321,13 @@ def build_cms(pms_path, out_path, *, n_workers: int = 4, strategy: str = "vector
     gather = _gather_group_vectorized if strategy == "vectorized" else _gather_group_heap
 
     from repro.runtime import get_executor
-    ex = get_executor(executor or "threads", n_workers)
+    ex_kwargs = {}
+    if (compute == "device" and (executor or "threads") == "processes"
+            and not os.environ.get("REPRO_MP_CONTEXT")):
+        # deciding compute="device" initialized XLA in this process; forking
+        # a threaded XLA parent can deadlock the children
+        ex_kwargs["mp_context"] = "spawn"
+    ex = get_executor(executor or "threads", n_workers, **ex_kwargs)
 
     f = open(str(out_path), "w+b")
     fd = f.fileno()

@@ -47,6 +47,7 @@ from repro.core.propagate import (expand_routes, propagate_inclusive,
                                   redistribute_placeholders)
 from repro.core.sparse import (CTX_DTYPE, IDX_DTYPE, MID_DTYPE, VAL_DTYPE,
                                SparseMetrics)
+from repro.core.stats import check_key_ranges
 
 _KEY_SHIFT = 16
 
@@ -133,6 +134,37 @@ def _inclusive_sparse(ectx, evals, col, m, prof_mids, parent, end):
     return ikeys, incl[ir, ic]
 
 
+def _combine_sorted_device(keys: np.ndarray, vals: np.ndarray, device):
+    """Device formulation of :func:`_combine_sorted`: the stable argsort
+    stays on the CPU (it defines the dense ranks), the duplicate-key
+    segment sums run on the ``segstats`` MXU kernel in f32 (exact for
+    "exact"-class planes — see repro.kernels.batch's dtype contract)."""
+    order = np.argsort(keys, kind="stable")
+    keys, vals = keys[order], vals[order]
+    flags = np.diff(keys, prepend=-1) != 0
+    ukeys = keys[flags]
+    seg = (np.cumsum(flags) - 1).astype(np.int32)
+    sums = device.combine_sums(seg, vals.astype(np.float32))
+    keep = sums != 0.0
+    return ukeys[keep], sums[keep]
+
+
+def _inclusive_device(ectx, evals, col, m, prof_mids, end, device):
+    """Inclusive propagation on device: densify the combined exclusive
+    stream to (n, m) f32 and batch it through the blockscan launch — the
+    cumsum formulation of :func:`_inclusive_dense`, with f32 accumulation
+    (byte-identical for "exact"-class planes, documented f32 rounding
+    otherwise)."""
+    n = end.size
+    dense = np.zeros((n, m), dtype=np.float32)
+    dense[ectx, col] = evals  # combined keys are unique: plain assignment
+    incl = device.inclusive(dense)
+    ir, ic = np.nonzero(incl)
+    ikeys = ir.astype(np.int64) * (1 << _KEY_SHIFT) \
+        + (prof_mids[ic] | INCLUSIVE_BIT)
+    return ikeys, incl[ir, ic].astype(np.float64)
+
+
 def _inclusive_dense(ectx, evals, col, m, prof_mids, end):
     """The legacy cumsum formulation, on the fused exclusive stream."""
     n = end.size
@@ -168,17 +200,22 @@ def transform_plane(
     *,
     pipeline: str = "fused",
     keep_exclusive: bool = True,
+    device=None,
 ) -> SparseMetrics:
     """The one phase-2 transform dispatch, shared by every executor path
     (in-process bodies, sharded workers, the ranks driver).
 
     The cross-executor byte-parity contract requires all paths to run the
     exact same transform for a given config — routing them through this
-    helper makes divergence structurally impossible.
+    helper makes divergence structurally impossible.  ``device`` (a
+    :class:`repro.kernels.batch.DeviceAggregator` or None) selects the
+    ``compute="device"`` backend; it requires the fused pipeline.
     """
     if pipeline == "fused":
         return fused_transform(metrics, remap, routes, parent, end,
-                               keep_exclusive=keep_exclusive)
+                               keep_exclusive=keep_exclusive, device=device)
+    if device is not None:
+        raise ValueError("device compute requires pipeline='fused'")
     sm = metrics.remap_contexts(np.asarray(remap, dtype=np.int64))
     if routes:
         sm = redistribute_placeholders(sm, routes)
@@ -194,6 +231,7 @@ def fused_transform(
     end: np.ndarray,
     *,
     keep_exclusive: bool = True,
+    device=None,
 ) -> SparseMetrics:
     """Remap + redistribute + propagate + assemble one profile's plane.
 
@@ -202,11 +240,20 @@ def fused_transform(
     weights)``; ``parent``/``end`` describe the unified tree in preorder
     space.  Returns bytes-identical output to the legacy chain
     ``propagate_inclusive(redistribute_placeholders(remap_contexts(...)))``.
+
+    With ``device`` set (:class:`repro.kernels.batch.DeviceAggregator`),
+    the combine's segment sums (large planes) and the inclusive propagation
+    dispatch to the Pallas kernels under that module's per-plane dtype
+    contract; everything else — and the decision *what* to offload — is a
+    pure function of the plane, preserving cross-executor byte parity.
     """
     rows, mids, vals = metrics.triplets()
     if rows.size == 0:
         return SparseMetrics.empty()
     rows = np.asarray(remap, dtype=np.int64)[rows]
+    # loud failure instead of silent key corruption: bit 15 of a raw mid is
+    # INCLUSIVE_BIT, and huge remapped ctx ids would wrap the int64 keys
+    check_key_ranges(rows, mids)
     keys = rows * (1 << _KEY_SHIFT) + mids
 
     if routes:
@@ -221,7 +268,10 @@ def fused_transform(
 
     # the one big argsort: raw remapped stream (+ route expansions) -> the
     # combined exclusive plane, sorted by (ctx, mid) key
-    ekeys, evals = _combine_sorted(keys, vals)
+    if device is not None and device.wants_combine(keys.size):
+        ekeys, evals = _combine_sorted_device(keys, vals, device)
+    else:
+        ekeys, evals = _combine_sorted(keys, vals)
     if ekeys.size == 0:
         return SparseMetrics.empty()
 
@@ -232,13 +282,21 @@ def fused_transform(
     col = np.searchsorted(prof_mids, emid)
 
     n = end.size
+    if device is not None:
+        ikeys, ivals = _inclusive_device(ectx, evals, col, m, prof_mids, end,
+                                         device)
+        return _assemble_final(ekeys, evals, ikeys, ivals, keep_exclusive)
     u = np.count_nonzero(np.diff(ectx, prepend=-1))  # distinct touched ctxs
     if n * m <= DENSE_SMALL or u >= max(1, int(n * DENSE_FRACTION)):
         ikeys, ivals = _inclusive_dense(ectx, evals, col, m, prof_mids, end)
     else:
         ikeys, ivals = _inclusive_sparse(ectx, evals, col, m, prof_mids,
                                          np.asarray(parent, np.int64), end)
+    return _assemble_final(ekeys, evals, ikeys, ivals, keep_exclusive)
 
+
+def _assemble_final(ekeys, evals, ikeys, ivals, keep_exclusive: bool
+                    ) -> SparseMetrics:
     if not keep_exclusive:
         return _assemble(ikeys, ivals)
 

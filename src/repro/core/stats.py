@@ -21,10 +21,42 @@ from repro.core.sparse import SparseMetrics
 
 KEY_SHIFT = 16  # key = ctx << 16 | mid
 
+# Key-packing domain, shared with repro.core.pipeline (which packs the same
+# keys into *signed* int64 for its stable argsort):
+#  - a raw (exclusive) metric id must stay below bit 15 — that bit is
+#    repro.core.metrics.INCLUSIVE_BIT, and a mid >= 2^15 would silently
+#    alias an exclusive metric onto an inclusive key;
+#  - a packed mid (inclusive bit allowed) must fit the 16-bit field;
+#  - a context id must keep ctx << 16 inside int64, or the pipeline's keys
+#    wrap negative and the plane sorts/merges garbage.
+MAX_RAW_MID = 1 << 15
+MAX_PACKED_MID = 1 << 16
+MAX_CTX = 1 << 47
+
 _FIELDS = ("sum", "cnt", "vmin", "vmax", "sumsq")
 
 
+def check_key_ranges(ctx, mid, *, packed: bool = False) -> None:
+    """Validate ids before packing ``ctx << 16 | mid`` keys; raises
+    ``ValueError`` instead of corrupting keys silently.  ``packed=True``
+    admits mids carrying the inclusive bit (bit 15); the default rejects
+    it — raw profile metric ids own only bits 0..14."""
+    mid_limit = MAX_PACKED_MID if packed else MAX_RAW_MID
+    if np.size(mid) and int(np.max(mid)) >= mid_limit:
+        raise ValueError(
+            f"metric id {int(np.max(mid))} >= {mid_limit}: "
+            + ("mids must fit 16 bits"
+               if packed else
+               "bit 15 is reserved for INCLUSIVE_BIT — a raw metric id this "
+               "large would alias an inclusive key"))
+    if np.size(ctx) and int(np.max(ctx)) >= MAX_CTX:
+        raise ValueError(
+            f"context id {int(np.max(ctx))} >= 2^47: ctx << 16 would "
+            f"overflow the signed 64-bit key space")
+
+
 def pack_keys(ctx: np.ndarray, mid: np.ndarray) -> np.ndarray:
+    check_key_ranges(ctx, mid, packed=True)
     return (np.asarray(ctx, np.uint64) << np.uint64(KEY_SHIFT)) | np.asarray(mid, np.uint64)
 
 

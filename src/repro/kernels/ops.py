@@ -18,8 +18,30 @@ from repro.kernels import scatter_add as _sc
 from repro.kernels import segstats as _ss
 
 
+LANE = 128     # minor-dim tile multiple (f32, TPU v4/v5)
+SUBLANE = 8    # second-minor tile multiple (f32)
+
+
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def _align_up(x: int, mult: int) -> int:
+    return -(-int(x) // mult) * mult
+
+
+def _clamp_block(requested: int, n: int, align: int) -> int:
+    """Clamp a block size to the problem size without breaking TPU tiling.
+
+    A plain ``min(requested, max(align, n))`` can produce block sizes like
+    200 that pass ``interpret=True`` but are illegal BlockSpecs on real
+    hardware (the lane dim must be a multiple of 128, sublanes of 8): the
+    clamp is rounded *up* to the alignment, and padding covers the slack.
+    """
+    b = min(int(requested), max(align, int(n)))
+    b = max(align, _align_up(b, align))
+    assert b % align == 0 and b > 0, (requested, n, align, b)
+    return b
 
 
 def _pad_to(x: jax.Array, mult: int, fill) -> jax.Array:
@@ -39,7 +61,7 @@ def segstats(ids: jax.Array, vals: jax.Array, num_segments: int,
     ``ids`` sorted ascending int32; values f32.  Empty segments finalize to
     min=max=0 (matching :class:`repro.core.stats.StatsAccumulator`).
     """
-    block_s = min(block_s, max(128, num_segments))
+    block_s = _clamp_block(block_s, num_segments, LANE)
     ids = _pad_to(ids.astype(jnp.int32), block_n, num_segments)
     vals = _pad_to(vals.astype(jnp.float32), block_n, 0)
     out = _ss.segstats_pallas(ids, vals, num_segments, block_n=block_n,
@@ -58,7 +80,7 @@ def blockscan(x: jax.Array, block_n: int = _bs.DEFAULT_BLOCK_N) -> jax.Array:
     if squeeze:
         x = x[:, None]
     n = x.shape[0]
-    block_n = min(block_n, max(8, n))
+    block_n = _clamp_block(block_n, n, SUBLANE)
     xp = _pad_to(x, block_n, 0)
     out = _bs.blockscan_pallas(xp, block_n=block_n, interpret=_interpret())[:n]
     return out[:, 0] if squeeze else out
@@ -75,7 +97,7 @@ def scatter_add(ids: jax.Array, vals: jax.Array, num_segments: int,
                 block_n: int = _sc.DEFAULT_BLOCK_N,
                 block_s: int = _sc.DEFAULT_BLOCK_S) -> jax.Array:
     """out[s] += vals[ids == s]; vals (N,) or (N, M); unsorted ids allowed."""
-    block_s = min(block_s, max(128, num_segments))
+    block_s = _clamp_block(block_s, num_segments, LANE)
     squeeze = vals.ndim == 1
     if squeeze:
         vals = vals[:, None]
@@ -95,7 +117,7 @@ def histogram(ids: jax.Array, num_segments: int) -> jax.Array:
 def int8_quant(x: jax.Array, block_n: int = _q8.DEFAULT_BLOCK_N):
     """Block-scaled int8 quantization: (q, scales, err); pads internally."""
     n = x.shape[0]
-    block_n = min(block_n, max(128, n))
+    block_n = _clamp_block(block_n, n, LANE)
     xp = _pad_to(x.astype(jnp.float32), block_n, 0)
     q, s, e = _q8.int8_quant_pallas(xp, block_n=block_n, interpret=_interpret())
     return q[:n], s, e[:n]
@@ -103,9 +125,20 @@ def int8_quant(x: jax.Array, block_n: int = _q8.DEFAULT_BLOCK_N):
 
 def int8_dequant(q: jax.Array, scales: jax.Array, n: int,
                  block_n: int = _q8.DEFAULT_BLOCK_N) -> jax.Array:
-    block_n = min(block_n, max(128, n))
+    """Invert :func:`int8_quant`: ``q`` are the first ``n`` quantized values
+    (the wrapper trims its padding), ``scales`` one f32 per ``block_n``
+    block.  ``block_n`` must match the quantization call — both resolve it
+    through the same clamp, so passing the same ``n`` suffices."""
+    block_n = _clamp_block(block_n, n, LANE)
     npad = scales.shape[0] * block_n
-    qp = _pad_to(q, npad - q.shape[0] + q.shape[0], 0) if q.shape[0] < npad else q
+    pad = npad - q.shape[0]
+    if pad < 0:
+        raise ValueError(
+            f"int8_dequant: {q.shape[0]} quantized values exceed the "
+            f"capacity of {scales.shape[0]} scale blocks x block_n="
+            f"{block_n} ({npad}); scales/block_n do not match the "
+            f"int8_quant call that produced them")
+    qp = jnp.concatenate([q, jnp.zeros(pad, q.dtype)]) if pad else q
     full = (qp.astype(jnp.float32).reshape(-1, block_n) * scales[:, None]).reshape(-1)
     return full[:n]
 

@@ -59,6 +59,13 @@ def _aggregate_main(argv):
                     help="static context groups instead of GLB")
     ap.add_argument("--no-cms", action="store_true")
     ap.add_argument("--no-traces", action="store_true")
+    ap.add_argument("--compute", default="cpu", choices=["cpu", "device"],
+                    help="phase-2 hot-loop backend: numpy, or the Pallas "
+                         "kernels (falls back to cpu without an accelerator)")
+    ap.add_argument("--device-interpret", action="store_true",
+                    help="let --compute device run on the interpret-mode "
+                         "kernel proxy when no accelerator is attached "
+                         "(slow; exercises the real kernel bodies)")
     args = ap.parse_args(argv)
 
     executor = args.executor or "threads"
@@ -78,6 +85,8 @@ def _aggregate_main(argv):
         cms_balance="static" if args.static_lb else "dynamic",
         write_cms=not args.no_cms,
         write_traces=not args.no_traces,
+        compute=args.compute,
+        device_interpret=args.device_interpret,
     )
     res = StreamingAggregator(args.out, cfg).run(args.profiles)
     runtime = (f"ranks={cfg.workers}x{args.threads}t"
@@ -85,6 +94,7 @@ def _aggregate_main(argv):
     print(json.dumps({
         "pms": res.pms_path, "cms": res.cms_path, "traces": res.trace_path,
         "executor": runtime, "workers": cfg.workers,
+        "compute": cfg.effective_compute(),
         "profiles": res.n_profiles, "contexts": res.n_contexts,
         "values": res.n_values, "sizes": res.sizes,
         "timings": {k: round(v, 4) if isinstance(v, float) else v

@@ -41,11 +41,12 @@ def available_executors() -> list[str]:
     return sorted(_REGISTRY)
 
 
-def get_executor(name: str, n_workers: int = 1) -> "Executor":
+def get_executor(name: str, n_workers: int = 1, **kwargs) -> "Executor":
     """Instantiate a registered backend by name.
 
     Raises ``ValueError`` (not KeyError) on unknown names so config errors
-    surface with the list of valid choices.
+    surface with the list of valid choices.  ``kwargs`` pass through to the
+    backend constructor (e.g. ``mp_context`` for ``processes``).
     """
     try:
         cls = _REGISTRY[name]
@@ -53,7 +54,7 @@ def get_executor(name: str, n_workers: int = 1) -> "Executor":
         raise ValueError(
             f"unknown executor {name!r}; available: {', '.join(available_executors())}"
         ) from None
-    return cls(n_workers)
+    return cls(n_workers, **kwargs)
 
 
 class Executor(ABC):

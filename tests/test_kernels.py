@@ -169,3 +169,185 @@ def test_int8_quant_zero_block():
     x = jnp.zeros(2048, jnp.float32)
     q, s, e = ops.int8_quant(x)
     assert np.all(np.asarray(q) == 0) and np.all(np.asarray(e) == 0)
+
+
+# ---------------------------------------------------------------------------
+# block-size clamping: lane/sublane alignment on awkward problem sizes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("requested,n,align", [
+    (128, 200, 128), (512, 8, 128), (1024, 1, 128), (128, 8191, 128),
+    (8, 3, 8), (256, 17, 8), (1 << 20, 100, 128),
+])
+def test_clamp_block_alignment_invariants(requested, n, align):
+    """The clamp must always emit a positive block that is a multiple of the
+    tile alignment — `min(block, max(8, n))` shapes like 200 or 17 pass
+    interpret=True but are illegal BlockSpecs on real TPUs."""
+    b = ops._clamp_block(requested, n, align)
+    assert b > 0 and b % align == 0
+    assert b >= align                     # never below one tile
+    assert b <= max(align, -(-n // align) * align) or b <= requested
+
+
+def test_segstats_awkward_segment_count_stays_aligned(rng):
+    """num_segments=200 used to clamp block_s to 200 (not lane-aligned);
+    the rounded-up clamp must keep results correct — sentinel padding rows
+    land beyond num_segments and are sliced off."""
+    s = 200
+    ids = _sorted_ids(rng, 1024, s)
+    vals = rng.uniform(0.1, 5.0, 1024).astype(np.float32)
+    got = np.asarray(ops.segstats(jnp.asarray(ids), jnp.asarray(vals), s,
+                                  block_s=s))  # misaligned request
+    sums = np.zeros(s)
+    np.add.at(sums, ids, vals.astype(np.float64))
+    assert_allclose(got[:, 0], sums, rtol=1e-4)
+
+
+def test_scatter_add_small_segment_count_stays_aligned(rng):
+    ids = rng.integers(0, 5, 256).astype(np.int32)
+    vals = rng.normal(size=256).astype(np.float32)
+    got = np.asarray(ops.scatter_add(jnp.asarray(ids), jnp.asarray(vals), 5,
+                                     block_s=5))
+    want = np.zeros(5)
+    np.add.at(want, ids, vals.astype(np.float64))
+    assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_blockscan_tiny_input_stays_aligned(rng):
+    x = rng.normal(size=(3, 2)).astype(np.float32)
+    got = np.asarray(ops.blockscan(jnp.asarray(x), block_n=3))
+    assert_allclose(got, np.cumsum(x, axis=0), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# int8_dequant: explicit pad target, loud mismatch errors
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 100, 1000, 2047, 2048, 2049, 5000])
+def test_int8_roundtrip_non_block_multiple_lengths(rng, n):
+    """quant -> dequant must reconstruct (plus error) at every length, not
+    just block multiples — the old dead pad arithmetic under-padded."""
+    x = rng.normal(size=n).astype(np.float32) * 2.0
+    q, s, e = ops.int8_quant(jnp.asarray(x))
+    assert q.shape[0] == n and e.shape[0] == n
+    recon = np.asarray(ops.int8_dequant(q, s, n))
+    assert recon.shape[0] == n
+    assert_allclose(recon + np.asarray(e), x, rtol=1e-5, atol=1e-6)
+
+
+def test_int8_dequant_rejects_mismatched_scales(rng):
+    x = rng.normal(size=4096).astype(np.float32)
+    q, s, _ = ops.int8_quant(jnp.asarray(x))
+    with pytest.raises(ValueError, match="exceed the"):
+        # half the scale blocks cannot cover all 4096 quantized values
+        ops.int8_dequant(q, s[:1], 4096)
+
+
+# ---------------------------------------------------------------------------
+# the device aggregation batching layer (repro.kernels.batch)
+# ---------------------------------------------------------------------------
+
+from repro.kernels import batch as kb  # noqa: E402
+
+
+def _chain_end(n):
+    """A root->child chain tree: end[i] == n for all i."""
+    return np.full(n, n, dtype=np.int64)
+
+
+@pytest.mark.parametrize("vals,want", [
+    ([1.0, 2.0, 3.0], "exact"),
+    ([], "exact"),
+    ([1.5], "f32"),
+    ([float(2 ** 25)], "f32"),            # |v| sum over 2^24
+    ([4096.0] * 4096, "f32"),             # sum of squares over 2^24
+    ([np.inf], "f32"),
+    ([-3.0, 7.0], "exact"),
+])
+def test_classify_plane(vals, want):
+    assert kb.classify_plane(np.asarray(vals, dtype=np.float64)) == want
+
+
+def test_bucket_ladder():
+    assert kb._bucket(1, 8) == 8
+    assert kb._bucket(8, 8) == 8
+    assert kb._bucket(9, 8) == 16
+    assert kb._bucket(300, 128) == 512
+
+
+def test_device_aggregator_inclusive_matches_numpy(rng):
+    n = 40
+    end = np.sort(rng.integers(1, n + 1, n))[::-1].copy()
+    end = np.maximum(end, np.arange(n) + 1)   # a valid interval family
+    dev = kb.DeviceAggregator(end)
+    cols = rng.integers(0, 5, (n, 3)).astype(np.float32)
+    out = dev.inclusive(cols)
+    ps = np.concatenate([np.zeros((1, 3)), np.cumsum(cols, axis=0)])
+    want = ps[end] - ps[np.arange(n)]
+    assert_allclose(out, want, rtol=1e-6)
+    assert dev.launches == 1 and dev.requests == 1
+
+
+def test_device_aggregator_coalesces_concurrent_requests(rng):
+    """Threads racing into the combining funnel must each get exactly their
+    own columns back, with (usually) fewer launches than requests."""
+    import threading
+    n, n_threads = 64, 6
+    end = _chain_end(n)
+    dev = kb.DeviceAggregator(end)
+    dev.inclusive(np.zeros((n, 1), np.float32))  # warm the jit cache
+    barrier = threading.Barrier(n_threads)
+    outs, errs = [None] * n_threads, [None] * n_threads
+
+    def work(k):
+        cols = np.full((n, k + 1), float(k + 1), dtype=np.float32)
+        barrier.wait()
+        try:
+            outs[k] = dev.inclusive(cols)
+        except BaseException as e:  # pragma: no cover - surfaced below
+            errs[k] = e
+
+    threads = [threading.Thread(target=work, args=(k,))
+               for k in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert errs == [None] * n_threads
+    for k in range(n_threads):
+        # chain tree: inclusive[i] = sum over [i, n) = (n - i) * v
+        want = np.outer(n - np.arange(n), np.ones(k + 1)) * (k + 1)
+        assert outs[k].shape == (n, k + 1)
+        assert_allclose(outs[k], want, rtol=1e-6)
+    assert dev.requests == n_threads + 1
+    assert dev.launches <= dev.requests
+
+
+def test_device_aggregator_combine_sums_matches_bincount(rng):
+    end = _chain_end(8)
+    dev = kb.DeviceAggregator(end, offload_combine=True, combine_min=1)
+    seg = np.sort(rng.integers(0, 50, 400)).astype(np.int32)
+    vals = rng.integers(1, 5, 400).astype(np.float32)  # exact class
+    got = dev.combine_sums(seg, vals)
+    want = np.bincount(seg, weights=vals.astype(np.float64),
+                       minlength=int(seg[-1]) + 1)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_device_aggregator_error_wakes_all_waiters():
+    """A launch failure must set the error on every batched request instead
+    of leaving waiters parked forever."""
+    end = _chain_end(16)
+    dev = kb.DeviceAggregator(end)
+    with pytest.raises(Exception):
+        dev.inclusive(np.zeros((8, 2), np.float32))  # wrong leading dim
+
+
+def test_device_offsets_matches_cumsum(rng):
+    sizes = rng.integers(0, 1000, 333).astype(np.int64)
+    got = kb.device_offsets(sizes)
+    want = np.concatenate([[0], np.cumsum(sizes)])
+    np.testing.assert_array_equal(got, want)
+    assert kb.device_offsets(np.empty(0, np.int64)) is None
+    big = np.array([np.iinfo(np.int32).max], np.int64)
+    assert kb.device_offsets(big) is None  # int32 overflow guard

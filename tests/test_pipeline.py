@@ -392,3 +392,228 @@ def test_map_throttled_discards_unyielded_results():
     assert first not in discarded
     assert discarded         # the finished-but-unyielded results arrived
     assert all(isinstance(d, tuple) and d[0] == d[1] for d in discarded)
+
+
+# ---------------------------------------------------------------------------
+# key packing boundaries: loud errors instead of silent key corruption
+# ---------------------------------------------------------------------------
+
+def test_fused_transform_rejects_inclusive_bit_metric_ids():
+    """A raw mid >= 2^15 would silently alias INCLUSIVE_BIT in the packed
+    keys; the shared validation must refuse it loudly."""
+    sm = SparseMetrics.from_triplets([0], [1 << 15], [1.0])
+    with pytest.raises(ValueError, match="INCLUSIVE_BIT"):
+        fused_transform(sm, np.zeros(1, np.int64), {}, np.array([-1]),
+                        np.array([1]))
+
+
+def test_fused_transform_rejects_overflowing_context_ids():
+    """ctx >= 2^47 would wrap the signed int64 keys negative."""
+    sm = SparseMetrics.from_triplets([0], [0], [1.0])
+    huge = np.array([1 << 47], np.int64)
+    with pytest.raises(ValueError, match="2\\^47"):
+        fused_transform(sm, huge, {}, np.array([-1]), np.array([1]))
+
+
+def test_pack_keys_boundaries():
+    from repro.core.stats import pack_keys
+    # the packed form admits the inclusive bit but not a 17-bit mid
+    pack_keys(np.array([5]), np.array([3 | INCLUSIVE_BIT]))
+    with pytest.raises(ValueError, match="16 bits"):
+        pack_keys(np.array([5]), np.array([1 << 16]))
+    with pytest.raises(ValueError, match="2\\^47"):
+        pack_keys(np.array([1 << 47]), np.array([0]))
+
+
+# ---------------------------------------------------------------------------
+# device compute: the Pallas-kernel phase-2 backend
+# ---------------------------------------------------------------------------
+
+def _device_aggregator(end, **kw):
+    from repro.kernels.batch import DeviceAggregator
+    return DeviceAggregator(np.asarray(end, np.int64), **kw)
+
+
+def _compare_planes_tolerant(cpu, dev, atol=1e-3, rtol=1e-4):
+    """f32-class planes: device values carry f32 rounding, and near-zero
+    inclusive sums may round to exactly 0.0 and drop from the sparse plane.
+    Keys missing on one side must be tiny; common keys must agree to f32
+    precision."""
+    got = {(int(c), int(m)): v for c, m, v in zip(*dev.triplets())}
+    want = {(int(c), int(m)): v for c, m, v in zip(*cpu.triplets())}
+    for k in set(got) ^ set(want):
+        v = got.get(k, want.get(k))
+        assert abs(v) < atol, (k, v)
+    for k in set(got) & set(want):
+        assert got[k] == pytest.approx(want[k], rel=rtol, abs=atol), k
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_fused_device_matches_cpu_tolerantly(seed):
+    """Property: the device path agrees with the fused CPU plane to f32
+    precision on arbitrary (f32-class) planes, routes included."""
+    rng = np.random.default_rng(seed)
+    sm, remap, routes, parent_pre, end, n = _random_tree_case(rng)
+    cpu = fused_transform(sm, remap, routes, parent_pre, end)
+    dev = _device_aggregator(end, offload_combine=True, combine_min=1)
+    out = fused_transform(sm, remap, routes, parent_pre, end, device=dev)
+    _compare_planes_tolerant(cpu, out)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_fused_device_bytes_equal_cpu_on_exact_planes(seed):
+    """Integer values within the 2^24 f32-exactness budget: the device
+    plane must be byte-identical to the CPU plane (the "exact" class of the
+    repro.kernels.batch dtype contract)."""
+    rng = np.random.default_rng(seed)
+    sm, remap, routes, parent_pre, end, n = _random_tree_case(rng)
+    r, m, _ = sm.triplets()
+    if r.size == 0:
+        return
+    sm = SparseMetrics.from_triplets(r, m, rng.integers(1, 8, r.size)
+                                     .astype(np.float64))
+    cpu = fused_transform(sm, remap, {}, parent_pre, end)
+    dev = _device_aggregator(end, offload_combine=True, combine_min=1)
+    out = fused_transform(sm, remap, {}, parent_pre, end, device=dev)
+    assert cpu.encode() == out.encode()
+
+
+def test_device_path_edge_cases(rng):
+    """Empty profile, single metric, and all-placeholder planes must all
+    survive the device dispatch."""
+    parent = np.array([-1, 0, 0], np.int64)
+    end = np.array([3, 2, 3], np.int64)
+    dev = _device_aggregator(end, offload_combine=True, combine_min=1)
+
+    empty = SparseMetrics.from_triplets([], [], [])
+    out = fused_transform(empty, np.arange(3), {}, parent, end, device=dev)
+    assert out.n_values == 0
+
+    single = SparseMetrics.from_triplets([1], [0], [2.0])
+    out = fused_transform(single, np.arange(3), {}, parent, end, device=dev)
+    ref = fused_transform(single, np.arange(3), {}, parent, end)
+    assert out.encode() == ref.encode()
+
+    # every entry sits on a placeholder that routes to leaves 1 and 2
+    ph = SparseMetrics.from_triplets([0, 0], [0, 0], [1.0, 3.0])
+    routes = {0: (np.array([1, 2], np.int64), np.array([1.0, 1.0]))}
+    out = fused_transform(ph, np.arange(3), routes, parent, end, device=dev)
+    ref = fused_transform(ph, np.arange(3), routes, parent, end)
+    assert out.encode() == ref.encode()
+
+
+def _save_int_workload(tmp_path, rng, n=6):
+    """Integer-valued profiles: every plane classifies "exact", so the
+    device path must be byte-identical to CPU end to end."""
+    from tests.conftest import random_tree
+    from repro.core.sparse import Trace
+    paths = []
+    for i in range(n):
+        tree = random_tree(rng, 60)
+        nn = len(tree.parent)
+        x = max(int(nn * 6 * 0.3), 1)
+        sm = SparseMetrics.from_triplets(
+            rng.integers(0, nn, x), rng.integers(0, 6, x),
+            rng.integers(1, 9, x).astype(np.float64))
+        trace = Trace(np.sort(rng.uniform(0, 1, 10)),
+                      rng.integers(0, nn, 10).astype(np.uint32))
+        prof = MeasurementProfile(
+            environment={"app": "test", "metrics": 6},
+            identity={"rank": i}, file_paths=["bin/test"],
+            tree=tree, trace=trace, metrics=sm)
+        p = tmp_path / f"prof{i:03d}.rprf"
+        prof.save(p)
+        paths.append(str(p))
+    return paths
+
+
+def test_device_executor_parity_byte_identical(tmp_path, rng):
+    """serial/threads/processes with compute="device" (interpret proxy) on
+    an exact-class workload: all digests equal each other AND the cpu
+    run's."""
+    paths = _save_int_workload(tmp_path, rng)
+    digests = set()
+    for executor, workers in [("serial", 1), ("threads", 3),
+                              ("processes", 2)]:
+        cfg = AggregationConfig(executor=executor, n_workers=workers,
+                                compute="device", device_interpret=True)
+        res = StreamingAggregator(
+            tmp_path / f"dev_{executor}", cfg).run(paths)
+        digests.add((_digest(res.pms_path), _digest(res.cms_path)))
+    cpu = StreamingAggregator(
+        tmp_path / "dev_cpu_base",
+        AggregationConfig(executor="serial")).run(paths)
+    digests.add((_digest(cpu.pms_path), _digest(cpu.cms_path)))
+    assert len(digests) == 1
+
+
+def test_device_compute_falls_back_to_cpu_without_accelerator(tmp_path, rng):
+    """compute="device" without device_interpret on an accelerator-less
+    host must run the cpu path — byte-identical, no kernels involved."""
+    from repro.kernels import batch
+    if batch.has_accelerator():
+        pytest.skip("host has a real accelerator; fallback not reachable")
+    paths = _save_workload(tmp_path, rng, n=4)
+    cfg = AggregationConfig(executor="threads", n_workers=2,
+                            compute="device")  # device_interpret=False
+    assert cfg.effective_compute() == "cpu"
+    res = StreamingAggregator(tmp_path / "fb", cfg).run(paths)
+    base = StreamingAggregator(
+        tmp_path / "fb_base",
+        AggregationConfig(executor="threads", n_workers=2)).run(paths)
+    assert _digest(res.pms_path) == _digest(base.pms_path)
+    assert _digest(res.cms_path) == _digest(base.cms_path)
+
+
+def test_device_requires_fused_pipeline(tmp_path):
+    with pytest.raises(ValueError, match="fused"):
+        StreamingAggregator(tmp_path / "x", AggregationConfig(
+            compute="device", pipeline="legacy")).run([])
+    with pytest.raises(ValueError, match="compute"):
+        StreamingAggregator(tmp_path / "y", AggregationConfig(
+            compute="quantum")).run([])
+
+
+@pytest.mark.skipif(sys.platform != "linux", reason="SIGKILL semantics")
+def test_killed_worker_mid_device_batch_raises_and_cleans_up(
+        tmp_path, rng, monkeypatch):
+    """The shm liveness contract holds on the device path too: a worker
+    SIGKILLed while its sibling is mid-device-batch must surface as an
+    error (not a hang) and leak no /dev/shm segments.  Injected through
+    the REPRO_CHAOS_KILL_MARKER env hook — the device pool uses the spawn
+    start method (fork would deadlock children against the parent's XLA
+    runtime), and a monkeypatched worker body cannot reach spawn children,
+    but the environment can."""
+    monkeypatch.setenv("REPRO_CHAOS_KILL_MARKER", _KILL_MARKER)
+    paths = _save_int_workload(tmp_path, rng, n=6)
+    before = {f for f in os.listdir("/dev/shm")} if os.path.isdir("/dev/shm") \
+        else set()
+    cfg = AggregationConfig(executor="processes", n_workers=2,
+                            plane_transport="shm", compute="device",
+                            device_interpret=True)
+    t0 = time.monotonic()
+    with pytest.raises(Exception):
+        StreamingAggregator(tmp_path / "dev_killed", cfg).run(paths)
+    assert time.monotonic() - t0 < 60
+    if os.path.isdir("/dev/shm"):
+        leaked = {f for f in os.listdir("/dev/shm")
+                  if f.startswith("psm_")} - before
+        assert not leaked
+
+
+def test_cms_device_compute_byte_identical(tmp_path, rng):
+    """CMS offsets through the int32 exclusive_scan kernel (and, on real
+    accelerators, the census histogram): integer ops, so the CMS file must
+    be byte-identical to the numpy build."""
+    from repro.core import cms as cms_mod
+    paths = _save_workload(tmp_path, rng, n=5)
+    res = StreamingAggregator(
+        tmp_path / "cms_base", AggregationConfig(executor="serial")).run(paths)
+    out_cpu = tmp_path / "cpu.cms"
+    out_dev = tmp_path / "dev.cms"
+    cms_mod.build_cms(res.pms_path, out_cpu, compute="cpu")
+    cms_mod.build_cms(res.pms_path, out_dev, compute="device")
+    assert _digest(out_cpu) == _digest(out_dev)
+    assert _digest(out_cpu) == _digest(res.cms_path)

@@ -325,3 +325,63 @@ def test_tree_reduce_shared_with_rank_reduction():
     assert legacy is tree_reduce
     total, rounds = tree_reduce(list(np.arange(16)), lambda a, b: a + b, 2)
     assert total == 120 and rounds == 4
+
+
+# ---------------------------------------------------------------------------
+# stats merge tree: the async reducer must reproduce the inline fold shape
+# ---------------------------------------------------------------------------
+
+def test_async_streaming_reducer_fold_shape_identical():
+    """AsyncStreamingReducer moves merges onto a pool but must keep the
+    exact carry-chain shape (operand order included) — proved here with a
+    non-commutative, non-associative string merge for every n in 1..16."""
+    from repro.runtime.reduce import AsyncStreamingReducer, StreamingReducer
+
+    def merge(a, b):
+        return f"({a}+{b})"
+
+    for n in range(1, 17):
+        inline = StreamingReducer(merge)
+        pooled = AsyncStreamingReducer(merge, n_threads=3)
+        for i in range(n):
+            inline.push(str(i))
+            pooled.push(str(i))
+        assert pooled.result() == inline.result(), n
+
+
+def test_async_streaming_reducer_empty_and_errors():
+    from repro.runtime.reduce import AsyncStreamingReducer
+
+    red = AsyncStreamingReducer(lambda a, b: a + b)
+    assert red.result() is None
+
+    def boom(a, b):
+        raise RuntimeError("merge failed")
+
+    red = AsyncStreamingReducer(boom, n_threads=2)
+    red.push(1)
+    red.push(2)   # schedules the failing merge
+    with pytest.raises(RuntimeError, match="merge failed"):
+        red.result()
+    red.close()   # idempotent after result()
+
+
+def test_stats_merge_modes_byte_identical(tmp_path, rng):
+    """stats_merge=workers must not perturb a single output byte relative
+    to the inline fold — only where the merges run changes."""
+    paths = _save_workload(tmp_path, rng, n=7)
+    digests = set()
+    for mode, executor in [("inline", "threads"), ("workers", "threads"),
+                           ("workers", "processes"), ("auto", "serial")]:
+        cfg = AggregationConfig(executor=executor, n_workers=2,
+                                stats_merge=mode)
+        res = StreamingAggregator(
+            tmp_path / f"sm_{mode}_{executor}", cfg).run(paths)
+        digests.add((_digest(res.pms_path), _digest(res.cms_path)))
+    assert len(digests) == 1
+
+
+def test_invalid_stats_merge_is_value_error(tmp_path):
+    with pytest.raises(ValueError, match="stats_merge"):
+        StreamingAggregator(tmp_path / "x", AggregationConfig(
+            stats_merge="gpu")).run([])
